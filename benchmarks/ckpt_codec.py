@@ -1,0 +1,83 @@
+"""Beyond-paper benchmark: entropy-coded LM checkpoints (core.tensor_codec)
+vs raw npz vs npz+zlib — the paper's cluster-codebook scheme applied to
+transformer state.
+
+    PYTHONPATH=src python -m benchmarks.ckpt_codec [--arch qwen2.5-3b]
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import json
+import time
+import zlib
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.tensor_codec import (
+    compress_tensors,
+    decompress_tensors,
+    flatten_pytree,
+)
+from repro.models import init_params
+
+
+def run(arch: str = "qwen2.5-3b", bits: int | None = None) -> dict:
+    cfg = get_config(arch).smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # cast to bf16-like fp16 on host for the 16-bit split path
+    flat = {
+        k: (v.astype(np.float16) if v.dtype == np.float32 else v)
+        for k, v in flatten_pytree(jax.tree.map(np.asarray, params)).items()
+    }
+    raw = sum(v.nbytes for v in flat.values())
+
+    buf = io.BytesIO()
+    np.savez(buf, **flat)
+    npz = buf.getbuffer().nbytes
+    z = sum(len(zlib.compress(v.tobytes(), 6)) for v in flat.values())
+
+    t0 = time.time()
+    comp = compress_tensors(flat, bits=bits)
+    t_enc = time.time() - t0
+    t0 = time.time()
+    back = decompress_tensors(comp)
+    t_dec = time.time() - t0
+    exact = all((back[k] == flat[k]).all() for k in flat) if bits is None else None
+    return {
+        "arch": arch,
+        "mode": "lossless" if bits is None else f"q{bits}",
+        "raw_bytes": raw,
+        "npz_bytes": npz,
+        "zlib_bytes": z,
+        "ours_bytes": comp.nbytes,
+        "ratio_vs_raw": raw / comp.nbytes,
+        "ratio_vs_zlib": z / comp.nbytes,
+        "clusters": comp.stats.get("k"),
+        "encode_s": t_enc,
+        "decode_s": t_dec,
+        "bit_exact": exact,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--bits", type=int, default=None)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    r = run(args.arch, args.bits)
+    if args.json:
+        print(json.dumps(r, indent=1, default=float))
+        return
+    print(f"[{r['arch']} {r['mode']}] raw {r['raw_bytes']/1e6:.2f} MB  "
+          f"zlib {r['zlib_bytes']/1e6:.2f}  ours {r['ours_bytes']/1e6:.2f}  "
+          f"({r['ratio_vs_raw']:.2f}x raw, {r['ratio_vs_zlib']:.2f}x zlib, "
+          f"k={r['clusters']}, bit_exact={r['bit_exact']}, "
+          f"enc {r['encode_s']:.1f}s dec {r['decode_s']:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

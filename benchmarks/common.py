@@ -1,0 +1,67 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import compress_forest
+from repro.data.tabular import TabularSpec, make_dataset, scaled
+from repro.forest import (
+    fit_binner,
+    light_compress,
+    light_report,
+    standard_compress,
+    to_compact_forest,
+    train_forest,
+)
+
+
+def train_compact(
+    spec: TabularSpec,
+    *,
+    n_trees: int,
+    max_depth: int,
+    max_obs: int | None = None,
+    seed: int = 0,
+    test_frac: float = 0.0,
+):
+    """Train a forest on a synthetic Table-2-matched dataset; return
+    (compact Forest, ForestModel, (x_test, y_test) or None)."""
+    s = scaled(spec, max_obs) if max_obs else spec
+    x, y, categorical = make_dataset(s, seed=seed)
+    test = None
+    if test_frac > 0:
+        n_test = int(len(x) * test_frac)
+        x, x_test = x[:-n_test], x[-n_test:]
+        y, y_test = y[:-n_test], y[-n_test:]
+        test = (x_test, y_test)
+    binner = fit_binner(x, categorical=categorical, n_bins=64)
+    model = train_forest(
+        x, y, binner,
+        n_trees=n_trees, max_depth=max_depth,
+        task=s.task, n_classes=s.n_classes, seed=seed,
+    )
+    return to_compact_forest(model), model, test
+
+
+def compression_row(forest) -> dict:
+    """All three schemes on one forest, sizes in bytes."""
+    t0 = time.time()
+    std = len(standard_compress(forest))
+    light = len(light_compress(forest))
+    comp = compress_forest(forest)
+    ours = comp.size_report()
+    return {
+        "standard": std,
+        "light": light,
+        "ours": ours["total_serialized"],
+        "ours_breakdown": ours,
+        "ratio_vs_standard": std / max(ours["total_serialized"], 1),
+        "ratio_vs_light": light / max(ours["total_serialized"], 1),
+        "bench_s": time.time() - t0,
+    }
+
+
+def fmt_mb(b: float) -> str:
+    return f"{b / 1e6:.3f}"

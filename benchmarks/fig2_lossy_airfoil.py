@@ -1,0 +1,96 @@
+"""Paper Fig. 2 — lossy compression on (synthetic) Airfoil regression:
+fit-quantization sweep (upper chart) and tree-subsampling sweep (lower).
+
+    PYTHONPATH=src python -m benchmarks.fig2_lossy_airfoil
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import compress_forest, quantize_fits, subsample_trees
+from repro.core.compressed_predict import predict_compressed
+from repro.data.tabular import spec_by_name
+
+from .common import train_compact
+
+
+def _mse(comp, binner, x_test, y_test) -> float:
+    xb = binner.transform(x_test)
+    pred = predict_compressed(comp, xb)
+    return float(np.mean((pred - y_test) ** 2))
+
+
+def run(dataset: str = "airfoil_reg", n_trees: int = 40,
+        bits_sweep=(3, 4, 5, 6, 7, 8, 10, 12),
+        frac_sweep=(0.125, 0.25, 0.5, 0.75, 1.0),
+        keep_bits: int = 7, max_obs: int | None = 1503):
+    spec = spec_by_name(dataset)
+    forest, model, test = train_compact(
+        spec, n_trees=n_trees, max_depth=8, max_obs=max_obs, test_frac=0.2
+    )
+    x_test, y_test = test
+    binner = model.binner
+
+    base_comp = compress_forest(forest)
+    base = {
+        "mse": _mse(base_comp, binner, x_test, y_test),
+        "bytes": base_comp.size_report()["total_serialized"],
+    }
+
+    import jax as _jax
+
+    quant_rows = []
+    for b in bits_sweep:
+        _jax.clear_caches()
+        qf, _err = quantize_fits(forest, b)
+        comp = compress_forest(qf)
+        quant_rows.append({
+            "bits": b,
+            "mse": _mse(comp, binner, x_test, y_test),
+            "bytes": comp.size_report()["total_serialized"],
+        })
+
+    sub_rows = []
+    qf, _ = quantize_fits(forest, keep_bits)
+    for frac in frac_sweep:
+        _jax.clear_caches()
+        keep = max(1, int(round(frac * forest.n_trees)))
+        sf = subsample_trees(qf, keep, seed=1)
+        comp = compress_forest(sf)
+        sub_rows.append({
+            "n_trees": keep,
+            "mse": _mse(comp, binner, x_test, y_test),
+            "bytes": comp.size_report()["total_serialized"],
+        })
+    return {"lossless": base, "quantization": quant_rows,
+            "subsampling": sub_rows, "dataset": dataset}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--dataset", default="airfoil_reg")
+    ap.add_argument("--n-trees", type=int, default=40)
+    args = ap.parse_args()
+    res = run(args.dataset, args.n_trees)
+    if args.json:
+        print(json.dumps(res, indent=1, default=float))
+        return
+    b = res["lossless"]
+    print(f"[{res['dataset']}] lossless: MSE {b['mse']:.4f}  "
+          f"{b['bytes'] / 1e3:.1f} KB")
+    print("fit quantization (upper chart):")
+    print(f"{'bits':>5s} {'MSE':>10s} {'KB':>8s}")
+    for r in res["quantization"]:
+        print(f"{r['bits']:>5d} {r['mse']:>10.4f} {r['bytes'] / 1e3:>8.1f}")
+    print("tree subsampling (lower chart):")
+    print(f"{'trees':>6s} {'MSE':>10s} {'KB':>8s}")
+    for r in res["subsampling"]:
+        print(f"{r['n_trees']:>6d} {r['mse']:>10.4f} {r['bytes'] / 1e3:>8.1f}")
+
+
+if __name__ == "__main__":
+    main()

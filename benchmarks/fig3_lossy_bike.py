@@ -1,0 +1,34 @@
+"""Paper Fig. 3 — lossy compression on (synthetic) Bike Sharing
+regression; same sweeps as Fig. 2 at the larger dataset size.
+
+    PYTHONPATH=src python -m benchmarks.fig3_lossy_bike
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from .fig2_lossy_airfoil import run
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--n-trees", type=int, default=40)
+    args = ap.parse_args()
+    res = run("bike_reg", args.n_trees, keep_bits=12, max_obs=6000)
+    if args.json:
+        print(json.dumps(res, indent=1, default=float))
+        return
+    b = res["lossless"]
+    print(f"[bike_reg] lossless: MSE {b['mse']:.4f}  {b['bytes']/1e3:.1f} KB")
+    for name, key, col in (("fit quantization", "quantization", "bits"),
+                           ("tree subsampling", "subsampling", "n_trees")):
+        print(f"{name}:")
+        for r in res[key]:
+            print(f"  {col}={r[col]:>5}  MSE {r['mse']:.4f}  "
+                  f"{r['bytes'] / 1e3:8.1f} KB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Roofline report: turns experiments/dryrun/*.json into the
+EXPERIMENTS.md tables (per arch x shape x mesh: three terms, bottleneck,
+useful-FLOP fraction).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+
+def load(dir_: str):
+    rows = []
+    for f in sorted(glob.glob(str(Path(dir_) / "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def markdown_table(rows, multi_pod: bool) -> str:
+    out = [
+        "| arch | shape | peak GiB/dev | compute s | memory s | "
+        "collective s | bottleneck | useful FLOP frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] != "ok" or r["multi_pod"] != multi_pod:
+            continue
+        t = r["roofline_s"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['memory']['peak_bytes'] / 2**30:.2f} "
+            f"| {t['compute']:.3g} | {t['memory']:.3g} "
+            f"| {t['collective']:.3g} | {r['bottleneck']} "
+            f"| {r['useful_flop_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def summary(rows) -> dict:
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    failed = [r for r in rows if r["status"] == "failed"]
+    worst = sorted(
+        (r for r in ok if not r["multi_pod"]),
+        key=lambda r: r["useful_flop_fraction"],
+    )
+    coll = sorted(
+        (r for r in ok if not r["multi_pod"]),
+        key=lambda r: -r["roofline_s"]["collective"]
+        / max(sum(r["roofline_s"].values()), 1e-12),
+    )
+    return {
+        "ok": len(ok),
+        "skipped": len(skipped),
+        "failed": len(failed),
+        "worst_useful_fraction": [
+            (r["cell"], round(r["useful_flop_fraction"], 4)) for r in worst[:5]
+        ],
+        "most_collective_bound": [
+            (r["cell"], round(r["roofline_s"]["collective"], 3)) for r in coll[:5]
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if not rows:
+        print(f"no dry-run records in {args.dir}; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    if args.markdown:
+        print("### Single-pod (16x16 = 256 chips)\n")
+        print(markdown_table(rows, False))
+        print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+        print(markdown_table(rows, True))
+        return
+    s = summary(rows)
+    print(json.dumps(s, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Run every paper-table benchmark at CPU-budget sizes and print a
+combined report.
+
+    PYTHONPATH=src python -m benchmarks.run          # quick versions
+    PYTHONPATH=src python -m benchmarks.run --full   # paper-size (slow)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    t_start = time.time()
+
+    print("=" * 72)
+    print("Table 1 — Liberty classification component breakdown")
+    print("=" * 72)
+    from . import table1_liberty
+
+    row = table1_liberty.run(full=args.full)
+    light, ours = row["light"], row["ours"]
+    print(f"light : struct {light['structure']} names {light['var_names']} "
+          f"splits {light['split_values']} fits {light['fits']} "
+          f"total {light['total']} B")
+    print(f"ours  : struct {ours['structure']} names {ours['var_names']} "
+          f"splits {ours['split_values']} fits {ours['fits']} "
+          f"dict {ours['dictionaries']} total {ours['total_serialized']} B")
+    print(f"ratios: 1:{row['ratio_vs_light']:.2f} vs light, "
+          f"1:{row['ratio_vs_standard']:.2f} vs standard")
+
+    print()
+    print("=" * 72)
+    jax.clear_caches()
+    print("Table 2 — 13 datasets")
+    print("=" * 72)
+    from . import table2_datasets
+
+    rows = table2_datasets.run(full=args.full, quick=not args.full)
+    for r in rows:
+        print(f"{r['dataset']:22s} std {r['standard']:>9d}  "
+              f"light {r['light']:>8d}  ours {r['ours']:>8d}  "
+              f"(1:{r['ratio_vs_standard']:.1f} / 1:{r['ratio_vs_light']:.2f})")
+    cls = [r for r in rows if r["task"] == "classification"]
+    reg = [r for r in rows if r["task"] == "regression"]
+    if cls:
+        print(f"cls avg 1:{np.mean([r['ratio_vs_standard'] for r in cls]):.1f} "
+              f"std / 1:{np.mean([r['ratio_vs_light'] for r in cls]):.2f} light")
+    if reg:
+        print(f"reg avg 1:{np.mean([r['ratio_vs_standard'] for r in reg]):.1f} "
+              f"std / 1:{np.mean([r['ratio_vs_light'] for r in reg]):.2f} light")
+
+    print()
+    print("=" * 72)
+    jax.clear_caches()
+    print("Fig 2 — lossy (airfoil): quantization + subsampling")
+    print("=" * 72)
+    from . import fig2_lossy_airfoil
+
+    res = fig2_lossy_airfoil.run(n_trees=30 if not args.full else 100)
+    b = res["lossless"]
+    print(f"lossless MSE {b['mse']:.4f} @ {b['bytes']/1e3:.1f} KB")
+    for r in res["quantization"]:
+        print(f"  {r['bits']:>2d} bits: MSE {r['mse']:.4f} "
+              f"@ {r['bytes']/1e3:.1f} KB")
+    for r in res["subsampling"]:
+        print(f"  {r['n_trees']:>3d} trees: MSE {r['mse']:.4f} "
+              f"@ {r['bytes']/1e3:.1f} KB")
+
+    print()
+    print("=" * 72)
+    jax.clear_caches()
+    print("Fig 3 — lossy (bike)")
+    print("=" * 72)
+    from .fig2_lossy_airfoil import run as lossy_run
+
+    res = lossy_run("bike_reg", 20 if not args.full else 100,
+                    keep_bits=12, max_obs=3000 if not args.full else None)
+    b = res["lossless"]
+    print(f"lossless MSE {b['mse']:.4f} @ {b['bytes']/1e3:.1f} KB")
+    for r in res["quantization"][:4]:
+        print(f"  {r['bits']:>2d} bits: MSE {r['mse']:.4f} "
+              f"@ {r['bytes']/1e3:.1f} KB")
+
+    print()
+    print("=" * 72)
+    jax.clear_caches()
+    print("Beyond-paper — entropy-coded checkpoints (tensor codec)")
+    print("=" * 72)
+    from . import ckpt_codec
+
+    r = ckpt_codec.run("qwen2.5-3b")
+    print(f"lossless bf16 ckpt: raw {r['raw_bytes']/1e6:.1f} MB -> "
+          f"{r['ours_bytes']/1e6:.1f} MB ({r['ratio_vs_raw']:.2f}x, "
+          f"zlib gets {r['zlib_bytes']/1e6:.1f}), k={r['clusters']}, "
+          f"bit_exact={r['bit_exact']}")
+
+    print()
+    print("=" * 72)
+    print("Roofline summary (from experiments/dryrun)")
+    print("=" * 72)
+    from . import roofline
+
+    rows = roofline.load("experiments/dryrun")
+    if rows:
+        import json as _json
+
+        print(_json.dumps(roofline.summary(rows), indent=1))
+    else:
+        print("(no dry-run records; run python -m repro.launch.dryrun --all)")
+
+    print(f"\nbenchmarks done in {time.time() - t_start:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

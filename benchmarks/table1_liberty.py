@@ -1,0 +1,72 @@
+"""Paper Table 1 — Liberty Mutual classification: per-component compressed
+sizes for the light baseline vs our scheme.
+
+    PYTHONPATH=src python -m benchmarks.table1_liberty [--full]
+
+--full uses the paper's 50,999 x 32 size and more trees (slow on CPU);
+the default is a size-reduced run that preserves the qualitative claims
+(ratios, which component dominates, cluster count).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import compress_forest
+from repro.data.tabular import spec_by_name
+from repro.forest import light_report, standard_compress
+
+from .common import compression_row, fmt_mb, train_compact
+
+
+def run(full: bool = False, n_trees: int | None = None) -> dict:
+    spec = spec_by_name("liberty_cls")
+    n_trees = n_trees or (1000 if full else 60)
+    forest, _model, _ = train_compact(
+        spec,
+        n_trees=n_trees,
+        max_depth=12 if full else 8,
+        max_obs=None if full else 6000,
+    )
+    light = light_report(forest)
+    comp = compress_forest(forest)
+    ours = comp.size_report()
+    std = len(standard_compress(forest))
+    row = {
+        "n_trees": n_trees,
+        "standard_bytes": std,
+        "light": light,
+        "ours": ours,
+        "ratio_vs_light": light["total"] / ours["total_serialized"],
+        "ratio_vs_standard": std / ours["total_serialized"],
+    }
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--n-trees", type=int, default=None)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    row = run(args.full, args.n_trees)
+    if args.json:
+        print(json.dumps(row, indent=1, default=float))
+        return
+    light, ours = row["light"], row["ours"]
+    print(f"Table 1 (Liberty* classification, {row['n_trees']} trees) [MB]:")
+    print(f"{'method':12s} {'struct':>8s} {'names':>8s} {'splits':>8s} "
+          f"{'fits':>8s} {'dict':>8s} {'total':>8s}")
+    print(f"{'light':12s} {fmt_mb(light['structure']):>8s} "
+          f"{fmt_mb(light['var_names']):>8s} {fmt_mb(light['split_values']):>8s} "
+          f"{fmt_mb(light['fits']):>8s} {'-':>8s} {fmt_mb(light['total']):>8s}")
+    print(f"{'ours':12s} {fmt_mb(ours['structure']):>8s} "
+          f"{fmt_mb(ours['var_names']):>8s} {fmt_mb(ours['split_values']):>8s} "
+          f"{fmt_mb(ours['fits']):>8s} {fmt_mb(ours['dictionaries']):>8s} "
+          f"{fmt_mb(ours['total_serialized']):>8s}")
+    print(f"ratio vs light: 1:{row['ratio_vs_light']:.2f}   "
+          f"vs standard: 1:{row['ratio_vs_standard']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Table 2 — compression across the 13 datasets (size-matched
+synthetic generators; see DESIGN.md §5).
+
+    PYTHONPATH=src python -m benchmarks.table2_datasets [--full] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.data.tabular import TABLE2_SPECS
+
+from .common import compression_row, fmt_mb, train_compact
+
+QUICK = {"iris", "wages", "airfoil_reg", "airfoil_cls", "shuttle"}
+
+
+def run(full: bool = False, quick: bool = False, n_trees: int | None = None):
+    rows = []
+    for spec in TABLE2_SPECS:
+        if quick and spec.name not in QUICK:
+            continue
+        nt = n_trees or (1000 if full else 40)
+        forest, _m, _ = train_compact(
+            spec,
+            n_trees=nt,
+            max_depth=12 if full else 8,
+            max_obs=None if full else 4000,
+        )
+        r = compression_row(forest)
+        r["dataset"] = spec.paper_row or spec.name
+        r["task"] = spec.task
+        rows.append(r)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--n-trees", type=int, default=None)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = run(args.full, args.quick, args.n_trees)
+    if args.json:
+        print(json.dumps(rows, indent=1, default=float))
+        return
+    print(f"{'dataset':22s} {'std MB':>9s} {'light MB':>9s} {'ours MB':>9s} "
+          f"{'vs std':>7s} {'vs light':>8s}")
+    for r in rows:
+        print(f"{r['dataset']:22s} {fmt_mb(r['standard']):>9s} "
+              f"{fmt_mb(r['light']):>9s} {fmt_mb(r['ours']):>9s} "
+              f"{r['ratio_vs_standard']:>6.1f}x {r['ratio_vs_light']:>7.2f}x")
+    cls = [r for r in rows if r["task"] == "classification"]
+    reg = [r for r in rows if r["task"] == "regression"]
+    if cls:
+        print(f"classification avg: 1:{np.mean([r['ratio_vs_standard'] for r in cls]):.1f} "
+              f"vs standard, 1:{np.mean([r['ratio_vs_light'] for r in cls]):.2f} vs light")
+    if reg:
+        print(f"regression     avg: 1:{np.mean([r['ratio_vs_standard'] for r in reg]):.1f} "
+              f"vs standard, 1:{np.mean([r['ratio_vs_light'] for r in reg]):.2f} vs light")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Beyond-paper scenario: entropy-coded checkpoints + preemption-proof
+training (the paper's codec machinery keeping a training run's storage
+footprint down while surviving simulated node failures).
+
+    PYTHONPATH=src python examples/compressed_checkpointing.py
+"""
+import dataclasses
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.configs.registry import get_config
+from repro.data.tokens import TokenDataConfig, synth_batch
+from repro.launch.steps import make_train_step
+from repro.launch.train import build_state
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import Preemption, PreemptionSchedule, TrainLoop
+
+
+def main() -> None:
+    cfg = get_config("qwen3-4b").smoke()
+    cfg = dataclasses.replace(cfg, dtype="bfloat16")  # 16-bit: lossless split
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=40)
+    data_cfg = TokenDataConfig(cfg.vocab_size, 64, 4, seed=0)
+    step_jit = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+
+    def step_fn(state, step):
+        batch = {k: jnp.asarray(v) for k, v in synth_batch(data_cfg, step).items()}
+        params, opt, m = step_jit(state["params"], state["opt"], batch)
+        return {"params": params, "opt": opt}, {k: float(v) for k, v in m.items()}
+
+    workdir = tempfile.mkdtemp(prefix="repro_ckpt_demo_")
+    try:
+        # --- run A: no failures, plain npz checkpoints ------------------
+        mgr_a = CheckpointManager(CheckpointConfig(f"{workdir}/a"))
+        loop_a = TrainLoop(step_fn, mgr_a, save_every=10)
+        final_a = loop_a.run(build_state(cfg, opt_cfg, seed=0), 30)
+
+        # --- run B: preempted twice, ENTROPY-CODED checkpoints ----------
+        mgr_b = CheckpointManager(
+            CheckpointConfig(f"{workdir}/b", codec="lossless")
+        )
+        loop_b = TrainLoop(
+            step_fn, mgr_b, save_every=10,
+            preemption=PreemptionSchedule(fail_at=(7, 23)),
+        )
+        final_b = loop_b.run(build_state(cfg, opt_cfg, seed=0), 30)
+        print(f"run B survived {loop_b.restarts} preemptions")
+
+        # bit-identical final state despite failures + codec
+        leaves_a = jax.tree.leaves(final_a["params"])
+        leaves_b = jax.tree.leaves(final_b["params"])
+        same = all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(leaves_a, leaves_b)
+        )
+        print(f"final params identical to uninterrupted run: {same}")
+        assert same
+
+        # storage footprint comparison
+        def du(path):
+            return sum(
+                os.path.getsize(os.path.join(r, f))
+                for r, _d, fs in os.walk(path) for f in fs
+            )
+
+        raw, coded = du(f"{workdir}/a"), du(f"{workdir}/b")
+        print(f"checkpoint dir: npz {raw / 1e6:.2f} MB vs "
+              f"entropy-coded {coded / 1e6:.2f} MB "
+              f"({raw / coded:.2f}x smaller)")
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

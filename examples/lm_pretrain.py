@@ -1,0 +1,79 @@
+"""End-to-end driver: pretrain a ~100M-parameter qwen-family LM for a few
+hundred steps on the synthetic token pipeline, with fault-tolerant
+checkpointing and (optionally) §7 gradient compression.
+
+    PYTHONPATH=src python examples/lm_pretrain.py [--steps 300]
+    PYTHONPATH=src python examples/lm_pretrain.py --grad-bits 4
+
+Loss should drop from ~ln(V) toward the order-2 Markov structure of the
+synthetic stream.  Re-running with the same --ckpt-dir resumes from the
+latest checkpoint.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.configs.registry import get_config
+from repro.data.tokens import Prefetcher, TokenDataConfig
+from repro.launch.steps import make_train_step
+from repro.launch.train import build_state
+from repro.optim.adamw import AdamWConfig
+from repro.optim.compression import GradCompressionConfig
+from repro.runtime import TrainLoop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--grad-bits", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_pretrain")
+    args = ap.parse_args()
+
+    # ~100M params: qwen2.5 family, reduced
+    cfg = dataclasses.replace(
+        get_config("qwen2.5-3b"),
+        n_layers=8, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+        d_ff=3072, vocab_size=16384, dtype="float32",
+    )
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=30, total_steps=args.steps)
+    grad_comp = GradCompressionConfig(bits=args.grad_bits) \
+        if args.grad_bits else None
+
+    state = build_state(cfg, opt_cfg, seed=0, grad_comp=grad_comp)
+    n = sum(p.size for p in jax.tree.leaves(state["params"]))
+    print(f"model: {n / 1e6:.1f}M params; "
+          f"tokens/step {args.batch * args.seq}")
+
+    data_cfg = TokenDataConfig(cfg.vocab_size, args.seq, args.batch, seed=0)
+    step_jit = jax.jit(
+        make_train_step(cfg, opt_cfg, remat=None, grad_comp=grad_comp),
+        donate_argnums=(0, 1),
+    )
+    prefetch = Prefetcher(data_cfg, start_step=0)
+
+    def step_fn(state, step):
+        _s, batch = prefetch.get()
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, m = step_jit(state["params"], state["opt"], batch)
+        return {"params": params, "opt": opt}, {k: float(v) for k, v in m.items()}
+
+    mgr = CheckpointManager(CheckpointConfig(args.ckpt_dir, codec=None))
+    loop = TrainLoop(step_fn, mgr, save_every=100)
+    t0 = time.time()
+    loop.run(state, args.steps)
+    losses = [m["loss"] for m in loop.metrics_log if "loss" in m]
+    print(f"{len(losses)} steps in {time.time() - t0:.0f}s; "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0] - 0.5, "loss should drop visibly"
+    print("ok")
+    prefetch.close()
+
+
+if __name__ == "__main__":
+    main()

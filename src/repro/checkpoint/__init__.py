@@ -1,0 +1,17 @@
+"""repro.checkpoint — atomic, resumable, optionally entropy-coded."""
+
+from .manager import (
+    CheckpointConfig,
+    CheckpointManager,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointConfig",
+    "CheckpointManager",
+    "latest_step",
+    "load_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,147 @@
+"""Checkpoint manager: atomic save, auto-resume, elastic re-shard,
+entropy-coded payloads (core.tensor_codec).
+
+Layout:   <dir>/step_<k>/          one directory per step
+            manifest.json          pytree structure + dtypes + pspecs
+            state.npz | state.ctz  raw npz or entropy-coded payload
+            COMMIT                 written LAST -> crash-safe marker
+
+Guarantees exercised by tests:
+  * a save interrupted anywhere leaves no COMMIT -> restore picks the
+    previous step (atomicity),
+  * restore onto a different mesh shape re-shards via device_put with the
+    target sharding (elastic scaling),
+  * entropy-coded checkpoints round-trip bit-exactly (lossless mode).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from dataclasses import dataclass
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from ..core.tensor_codec import (
+    CompressedTensors,
+    compress_tensors,
+    decompress_tensors,
+    flatten_pytree,
+    unflatten_pytree,
+)
+
+
+@dataclass(frozen=True)
+class CheckpointConfig:
+    directory: str
+    keep: int = 3
+    codec: str | None = None  # None | "lossless" | "q8" .. "q12"
+
+
+def _codec_bits(codec: str | None) -> int | None:
+    if codec is None or codec == "lossless":
+        return None
+    assert codec.startswith("q"), codec
+    return int(codec[1:])
+
+
+def save_checkpoint(directory, step: int, state, codec: str | None = None):
+    """Atomic: write to tmp dir, fsync payload, COMMIT marker, rename."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = Path(tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=directory))
+    try:
+        host_state = jax.tree.map(np.asarray, state)
+        flat = flatten_pytree(host_state)
+        manifest = {
+            "step": step,
+            "codec": codec,
+            "leaves": {k: [list(v.shape), str(v.dtype)] for k, v in flat.items()},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if codec is None:
+            np.savez(tmp / "state.npz", **flat)
+        else:
+            comp = compress_tensors(flat, bits=_codec_bits(codec))
+            (tmp / "state.ctz").write_bytes(comp.to_bytes())
+        with open(tmp / "COMMIT", "w") as f:
+            f.write("ok")
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(directory) -> int | None:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = []
+    for p in directory.iterdir():
+        if p.name.startswith("step_") and (p / "COMMIT").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory, step: int | None = None, shardings=None):
+    """Load (state pytree, step). shardings: optional pytree of
+    NamedSharding to place leaves onto (elastic re-shard path)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    d = directory / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    if manifest["codec"] is None:
+        with np.load(d / "state.npz") as z:
+            flat = {k: z[k] for k in z.files}
+    else:
+        comp = CompressedTensors.from_bytes((d / "state.ctz").read_bytes())
+        flat = decompress_tensors(comp)
+    state = unflatten_pytree(flat)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda leaf, sh: jax.device_put(leaf, sh), state, shardings
+        )
+    return state, step
+
+
+class CheckpointManager:
+    """Rolling checkpoints + auto-resume."""
+
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        self.dir = Path(cfg.directory)
+
+    def save(self, step: int, state):
+        path = save_checkpoint(self.dir, step, state, self.cfg.codec)
+        self._gc()
+        return path
+
+    def restore_or_none(self, shardings=None):
+        step = latest_step(self.dir)
+        if step is None:
+            return None, None
+        return load_checkpoint(self.dir, step, shardings)
+
+    def _gc(self):
+        steps = sorted(
+            int(p.name.split("_")[1])
+            for p in self.dir.iterdir()
+            if p.name.startswith("step_") and (p / "COMMIT").exists()
+        )
+        for s in steps[: -self.cfg.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+        # drop orphaned tmp dirs from crashed saves
+        for p in self.dir.glob(".tmp_ckpt_*"):
+            shutil.rmtree(p, ignore_errors=True)

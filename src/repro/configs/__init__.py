@@ -1,0 +1,6 @@
+"""repro.configs — model + shape registry."""
+
+from .base import SHAPES, ModelConfig, ShapeConfig
+from .registry import ARCHITECTURES, get_config
+
+__all__ = ["ARCHITECTURES", "SHAPES", "ModelConfig", "ShapeConfig", "get_config"]

@@ -1,0 +1,449 @@
+"""Lossless forest compression — the paper's Algorithm 1.
+
+Pipeline
+--------
+1. Structure: per-tree Zaks sequences, concatenated, LZW-coded (§3.1).
+2. Variable names: empirical models P(var | depth, father's var), clustered
+   with KL K-means under objective (6); one canonical-Huffman codebook per
+   cluster (§3.2).
+3. Split values: per-variable models P(split | depth, var, father's var),
+   clustered per variable (Algorithm 1 line 39).
+4. Fits: P(fit | depth, father's var); Huffman, or arithmetic coding for
+   two-class problems (Algorithm 1 line 40 / §4).
+
+Symbols are emitted in GLOBAL PREORDER (tree by tree, preorder within a
+tree) into one bitstream per cluster.  The decoder reproduces the exact
+same order from the decoded structure + already-decoded parents, so the
+streams need no per-node framing.  (Algorithm 1 groups per-model sequences
+inside each cluster; interleaving by preorder is rate-identical under the
+same codebook and enables streaming prediction — see compressed_predict.)
+
+Everything here is byte-honest: ``CompressedForest.to_bytes()`` is a real
+serialization, and the size report in ``size_report()`` is measured from
+those bytes, bucketed as in the paper's Table 1.
+"""
+from __future__ import annotations
+
+import io
+import struct
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .arithmetic import ArithmeticCode
+from .bitio import BitReader, BitWriter
+from .bregman import ClusteringResult, cluster_models
+from .huffman import HuffmanCode
+from .lz import lzw_decode_bits, lzw_encode_bits
+from .stats import (
+    alpha_fits,
+    alpha_splits,
+    alpha_vars,
+    extract_records,
+    fit_counts,
+    key_id,
+    split_counts,
+    var_name_counts,
+)
+from .tree import Forest, ForestMeta, Tree
+from .zaks import zaks_decode, zaks_encode
+
+
+# --------------------------------------------------------------------------
+# component containers
+# --------------------------------------------------------------------------
+@dataclass
+class ClusteredComponent:
+    """One compressed component: cluster map + per-cluster codebooks+streams."""
+
+    kid_to_cluster: np.ndarray  # (n_keys,) int16; -1 for unused keys
+    codebook_lengths: list[np.ndarray]  # per cluster: (B,) Huffman lengths
+    streams: list[bytes]  # per cluster: coded payload
+    n_symbols: list[int]  # per cluster: symbol count
+    coder: str = "huffman"  # or "arithmetic"
+    centroid_freqs: list[np.ndarray] = field(default_factory=list)  # arithmetic
+
+    def decoders(self):
+        if self.coder == "huffman":
+            return [HuffmanCode(l) for l in self.codebook_lengths]
+        return [ArithmeticCode(f) for f in self.centroid_freqs]
+
+
+@dataclass
+class CompressedForest:
+    meta: ForestMeta
+    n_trees: int
+    zaks_payload: bytes
+    zaks_total_bits: int
+    zaks_lengths: np.ndarray  # (n_trees,) int32 — bits per tree
+    vars_comp: ClusteredComponent
+    splits_comp: dict[int, ClusteredComponent]  # per variable
+    fits_comp: ClusteredComponent
+    fit_values: np.ndarray  # regression: distinct 64-bit fit values
+    max_depth: int
+
+    # ---------------- size accounting (paper Table 1 buckets) -------------
+    def size_report(self) -> dict[str, float]:
+        def comp_stream_bytes(c: ClusteredComponent) -> int:
+            return sum(len(s) for s in c.streams)
+
+        def comp_dict_bytes(c: ClusteredComponent) -> int:
+            b = len(c.kid_to_cluster) * 2  # cluster map, int16/line
+            for lengths in c.codebook_lengths:
+                b += int((np.asarray(lengths) > 0).sum()) * 2  # (sym,len) lines
+            for f in c.centroid_freqs:
+                b += int((np.asarray(f) > 0).sum()) * 4
+            return b
+
+        structure = len(self.zaks_payload) + len(self.zaks_lengths) * 4
+        names = comp_stream_bytes(self.vars_comp)
+        splits = sum(comp_stream_bytes(c) for c in self.splits_comp.values())
+        fits = comp_stream_bytes(self.fits_comp)
+        dicts = (
+            comp_dict_bytes(self.vars_comp)
+            + sum(comp_dict_bytes(c) for c in self.splits_comp.values())
+            + comp_dict_bytes(self.fits_comp)
+            + self.fit_values.size * 8  # 64-bit fit-value dictionary
+        )
+        total = structure + names + splits + fits + dicts
+        return {
+            "structure": structure,
+            "var_names": names,
+            "split_values": splits,
+            "fits": fits,
+            "dictionaries": dicts,
+            "total": total,
+            "total_serialized": len(self.to_bytes()),
+        }
+
+    # ---------------- serialization ---------------------------------------
+    def to_bytes(self) -> bytes:
+        out = io.BytesIO()
+
+        def w_arr(a: np.ndarray) -> None:
+            a = np.ascontiguousarray(a)
+            dt = a.dtype.str.encode()
+            out.write(struct.pack("<B", len(dt)))
+            out.write(dt)
+            out.write(struct.pack("<BI", a.ndim, a.size))
+            for s in a.shape:
+                out.write(struct.pack("<I", s))
+            out.write(a.tobytes())
+
+        def w_bytes(b: bytes) -> None:
+            out.write(struct.pack("<I", len(b)))
+            out.write(b)
+
+        def w_comp(c: ClusteredComponent) -> None:
+            out.write(struct.pack("<B", 1 if c.coder == "arithmetic" else 0))
+            w_arr(c.kid_to_cluster.astype(np.int16))
+            out.write(struct.pack("<H", len(c.streams)))
+            for k in range(len(c.streams)):
+                if c.coder == "huffman":
+                    w_arr(c.codebook_lengths[k].astype(np.uint8))
+                else:
+                    w_arr(c.centroid_freqs[k].astype(np.uint32))
+                out.write(struct.pack("<I", c.n_symbols[k]))
+                w_bytes(c.streams[k])
+
+        m = self.meta
+        out.write(b"RFC1")
+        out.write(
+            struct.pack(
+                "<IIHIB", self.n_trees, m.n_features, m.n_classes,
+                m.n_train_obs, 1 if m.task == "regression" else 0,
+            )
+        )
+        out.write(struct.pack("<HI", self.max_depth, self.zaks_total_bits))
+        w_arr(m.n_bins_per_feature.astype(np.int32))
+        w_arr(m.categorical.astype(np.uint8))
+        w_arr(self.zaks_lengths.astype(np.int32))
+        w_bytes(self.zaks_payload)
+        w_comp(self.vars_comp)
+        out.write(struct.pack("<H", len(self.splits_comp)))
+        for v, c in sorted(self.splits_comp.items()):
+            out.write(struct.pack("<H", v))
+            w_comp(c)
+        w_comp(self.fits_comp)
+        w_arr(self.fit_values.astype(np.float64))
+        return out.getvalue()
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "CompressedForest":
+        inp = io.BytesIO(data)
+
+        def r_arr() -> np.ndarray:
+            (dl,) = struct.unpack("<B", inp.read(1))
+            dt = np.dtype(inp.read(dl).decode())
+            ndim, size = struct.unpack("<BI", inp.read(5))
+            shape = tuple(
+                struct.unpack("<I", inp.read(4))[0] for _ in range(ndim)
+            )
+            return np.frombuffer(
+                inp.read(size * dt.itemsize), dtype=dt
+            ).reshape(shape)
+
+        def r_bytes() -> bytes:
+            (n,) = struct.unpack("<I", inp.read(4))
+            return inp.read(n)
+
+        def r_comp() -> ClusteredComponent:
+            (is_arith,) = struct.unpack("<B", inp.read(1))
+            kid_to_cluster = r_arr().astype(np.int16)
+            (nk,) = struct.unpack("<H", inp.read(2))
+            lengths, freqs, streams, n_symbols = [], [], [], []
+            for _ in range(nk):
+                tab = r_arr()
+                if is_arith:
+                    freqs.append(tab.astype(np.int64))
+                    lengths.append(np.zeros(0, np.int32))
+                else:
+                    lengths.append(tab.astype(np.int32))
+                (ns,) = struct.unpack("<I", inp.read(4))
+                n_symbols.append(ns)
+                streams.append(r_bytes())
+            return ClusteredComponent(
+                kid_to_cluster, lengths, streams, n_symbols,
+                "arithmetic" if is_arith else "huffman", freqs,
+            )
+
+        assert inp.read(4) == b"RFC1", "bad magic"
+        n_trees, d, n_classes, n_obs, is_reg = struct.unpack(
+            "<IIHIB", inp.read(15)
+        )
+        max_depth, zaks_total_bits = struct.unpack("<HI", inp.read(6))
+        n_bins = r_arr().astype(np.int32)
+        categorical = r_arr().astype(bool)
+        meta = ForestMeta(
+            n_features=d,
+            task="regression" if is_reg else "classification",
+            n_classes=n_classes,
+            n_bins_per_feature=n_bins,
+            n_train_obs=n_obs,
+            categorical=categorical,
+        )
+        zaks_lengths = r_arr().astype(np.int32)
+        zaks_payload = r_bytes()
+        vars_comp = r_comp()
+        (nsplit,) = struct.unpack("<H", inp.read(2))
+        splits_comp = {}
+        for _ in range(nsplit):
+            (v,) = struct.unpack("<H", inp.read(2))
+            splits_comp[v] = r_comp()
+        fits_comp = r_comp()
+        fit_values = r_arr().astype(np.float64)
+        return cls(
+            meta, n_trees, zaks_payload, zaks_total_bits, zaks_lengths,
+            vars_comp, splits_comp, fits_comp, fit_values, max_depth,
+        )
+
+
+# --------------------------------------------------------------------------
+# encoder
+# --------------------------------------------------------------------------
+def _build_component(
+    counts: np.ndarray,
+    alpha_bits: float,
+    coder: str,
+    k_max: int,
+    seed: int,
+) -> tuple[ClusteredComponent, ClusteringResult]:
+    """Cluster the models and build per-cluster codebooks.
+
+    Codebooks are built from the SUM OF MEMBER COUNTS (the empirical
+    distribution the cluster actually codes) — this is the Huffman code "for
+    Q_k" and guarantees every coded symbol has a codeword (paper §5)."""
+    used = np.flatnonzero(counts.sum(-1) > 0)
+    full_map = np.full(counts.shape[0], -1, dtype=np.int16)
+    if len(used) == 0:
+        comp = ClusteredComponent(full_map, [], [], [], coder, [])
+        return comp, ClusteringResult(np.zeros(0, int), np.zeros((0, 0)), 0, 0, 0, 0)
+    res = cluster_models(counts[used], alpha_bits, k_max=k_max, seed=seed)
+    # compact cluster ids to 0..K-1
+    uniq, compact = np.unique(res.assignments, return_inverse=True)
+    full_map[used] = compact.astype(np.int16)
+    k = len(uniq)
+    codebooks, cfreqs = [], []
+    for c in range(k):
+        member_counts = counts[used][compact == c].sum(0)
+        if coder == "huffman":
+            codebooks.append(HuffmanCode.from_freqs(member_counts).lengths)
+            cfreqs.append(np.zeros(0, np.int64))
+        else:
+            codebooks.append(np.zeros(0, np.int32))
+            cfreqs.append(member_counts.astype(np.int64))
+    comp = ClusteredComponent(full_map, codebooks, [], [], coder, cfreqs)
+    return comp, res
+
+
+def compress_forest(
+    forest: Forest, k_max: int = 12, seed: int = 0
+) -> CompressedForest:
+    meta = forest.meta
+    d = meta.n_features
+    rec = extract_records(forest)
+    t_max = int(rec.depth.max()) + 1 if len(rec.depth) else 1
+
+    # ---- 1. structure ----------------------------------------------------
+    zaks_list = [zaks_encode(t) for t in forest.trees]
+    zaks_lengths = np.array([len(z) for z in zaks_list], dtype=np.int32)
+    zaks_all = (
+        np.concatenate(zaks_list) if zaks_list else np.zeros(0, np.uint8)
+    )
+    zaks_payload = lzw_encode_bits(zaks_all)
+
+    # ---- 2. variable names -----------------------------------------------
+    v_counts = var_name_counts(rec, d, t_max)
+    vars_comp, _ = _build_component(
+        v_counts, alpha_vars(d), "huffman", k_max, seed
+    )
+
+    # ---- 3. split values (per variable) ----------------------------------
+    s_counts = split_counts(rec, d, t_max, meta.n_bins_per_feature)
+    splits_comp: dict[int, ClusteredComponent] = {}
+    for v, cnts in s_counts.items():
+        a = alpha_splits(
+            not bool(meta.categorical[v]),
+            meta.n_train_obs,
+            int(meta.n_bins_per_feature[v]),
+        )
+        splits_comp[v], _ = _build_component(cnts, a, "huffman", k_max, seed)
+
+    # ---- 4. fits -----------------------------------------------------------
+    if meta.task == "classification":
+        n_fit_syms = meta.n_classes
+        fit_values = np.zeros(0, np.float64)
+        fit_syms_global = rec.fit.astype(np.int64)
+        fits_coder = "arithmetic" if meta.n_classes == 2 else "huffman"
+    else:
+        # regression: node fits are already indices into forest.fit_values
+        fit_values = np.asarray(forest.fit_values, dtype=np.float64)
+        n_fit_syms = len(fit_values)
+        fit_syms_global = rec.fit.astype(np.int64)
+        fits_coder = "huffman"
+    f_counts = fit_counts(rec, d, t_max, n_fit_syms)
+    fits_comp, _ = _build_component(
+        f_counts, alpha_fits(meta.task, n_fit_syms), fits_coder, k_max, seed
+    )
+
+    # ---- 5. emit streams in global preorder --------------------------------
+    kid_all = key_id(rec.depth, rec.father_var, d)
+
+    vars_dec = vars_comp.decoders()
+    vars_writers = [BitWriter() for _ in vars_dec]
+    vars_counts_out = [0] * len(vars_dec)
+
+    split_writers = {
+        v: [BitWriter() for _ in c.codebook_lengths]
+        for v, c in splits_comp.items()
+    }
+    split_dec = {v: c.decoders() for v, c in splits_comp.items()}
+    split_counts_out = {
+        v: [0] * len(c.codebook_lengths) for v, c in splits_comp.items()
+    }
+
+    # arithmetic fits need whole-sequence coding per cluster: gather first
+    fits_seq_per_cluster: list[list[int]] = [
+        [] for _ in range(len(fits_comp.codebook_lengths) or len(fits_comp.centroid_freqs))
+    ]
+
+    internal = ~rec.is_leaf
+    for i in range(len(rec.depth)):
+        kid = int(kid_all[i])
+        if internal[i]:
+            c = int(vars_comp.kid_to_cluster[kid])
+            vars_dec[c].encode_symbol(vars_writers[c], int(rec.var[i]))
+            vars_counts_out[c] += 1
+            v = int(rec.var[i])
+            sc = int(splits_comp[v].kid_to_cluster[kid])
+            split_dec[v][sc].encode_symbol(
+                split_writers[v][sc], int(rec.split[i])
+            )
+            split_counts_out[v][sc] += 1
+        fc = int(fits_comp.kid_to_cluster[kid])
+        fits_seq_per_cluster[fc].append(int(fit_syms_global[i]))
+
+    vars_comp.streams = [w.getvalue() for w in vars_writers]
+    vars_comp.n_symbols = vars_counts_out
+    for v, c in splits_comp.items():
+        c.streams = [w.getvalue() for w in split_writers[v]]
+        c.n_symbols = split_counts_out[v]
+
+    fits_decoders = fits_comp.decoders()
+    fits_comp.streams = [
+        fits_decoders[c].encode(seq) if len(seq) else b""
+        for c, seq in enumerate(fits_seq_per_cluster)
+    ]
+    fits_comp.n_symbols = [len(s) for s in fits_seq_per_cluster]
+
+    return CompressedForest(
+        meta=meta,
+        n_trees=forest.n_trees,
+        zaks_payload=zaks_payload,
+        zaks_total_bits=int(zaks_lengths.sum()),
+        zaks_lengths=zaks_lengths,
+        vars_comp=vars_comp,
+        splits_comp=splits_comp,
+        fits_comp=fits_comp,
+        fit_values=fit_values,
+        max_depth=t_max - 1,
+    )
+
+
+# --------------------------------------------------------------------------
+# decoder (full reconstruction; streaming prediction lives in
+# compressed_predict.py)
+# --------------------------------------------------------------------------
+def decompress_forest(comp: CompressedForest) -> Forest:
+    meta = comp.meta
+    d = meta.n_features
+
+    zaks_all = lzw_decode_bits(comp.zaks_payload, comp.zaks_total_bits)
+    vars_dec = comp.vars_comp.decoders()
+    vars_readers = [BitReader(s) for s in comp.vars_comp.streams]
+    split_dec = {v: c.decoders() for v, c in comp.splits_comp.items()}
+    split_readers = {
+        v: [BitReader(s) for s in c.streams]
+        for v, c in comp.splits_comp.items()
+    }
+    # arithmetic/huffman fits: decode each cluster's full symbol sequence up
+    # front, then consume in preorder.
+    fits_dec = comp.fits_comp.decoders()
+    fits_seqs = [
+        dec.decode(s, n) if n else np.zeros(0, np.int64)
+        for dec, s, n in zip(
+            fits_dec, comp.fits_comp.streams, comp.fits_comp.n_symbols
+        )
+    ]
+    fits_cursor = [0] * len(fits_seqs)
+
+    trees = []
+    off = 0
+    for tlen in comp.zaks_lengths:
+        bits = zaks_all[off : off + int(tlen)]
+        off += int(tlen)
+        left, right, is_leaf = zaks_decode(bits)
+        n = len(bits)
+        feature = np.full(n, -1, dtype=np.int32)
+        threshold = np.full(n, -1, dtype=np.int32)
+        fit = np.zeros(n, dtype=np.int64)
+        depth = np.zeros(n, dtype=np.int32)
+        fvar = np.full(n, -1, dtype=np.int32)
+        for i in range(n):  # preorder; parents precede children
+            kid = int(depth[i]) * (d + 1) + int(fvar[i]) + 1
+            if not is_leaf[i]:
+                c = int(comp.vars_comp.kid_to_cluster[kid])
+                v = vars_dec[c].decode_symbol(vars_readers[c])
+                feature[i] = v
+                sc = int(comp.splits_comp[v].kid_to_cluster[kid])
+                threshold[i] = split_dec[v][sc].decode_symbol(
+                    split_readers[v][sc]
+                )
+                for ch in (left[i], right[i]):
+                    depth[ch] = depth[i] + 1
+                    fvar[ch] = v
+            fc = int(comp.fits_comp.kid_to_cluster[kid])
+            fit[i] = fits_seqs[fc][fits_cursor[fc]]
+            fits_cursor[fc] += 1
+        trees.append(Tree(feature, threshold, left, right, fit))
+    return Forest(trees=trees, meta=meta, fit_values=comp.fit_values)

@@ -1,0 +1,135 @@
+"""Canonical Huffman coding (paper §2.2, §3.2).
+
+The codec operates on integer symbol ids ``0..B-1``.  Codes are *canonical*:
+the dictionary only needs the code length of each symbol, which is what we
+charge as overhead (the paper's ``alpha`` per dictionary line).
+
+Guarantees (tested):
+  * prefix-free, uniquely decodable,
+  * average length within [H, H+1) of the empirical entropy,
+  * lossless even when coding with a mismatched (cluster) distribution Q,
+    provided Q gives every coded symbol nonzero mass (paper §5).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+import numpy as np
+
+from .bitio import BitReader, BitWriter
+
+_MAX_CODE_LEN = 58  # fits comfortably in python ints; depth bound for sanity
+
+
+def code_lengths(freqs: np.ndarray) -> np.ndarray:
+    """Huffman code length per symbol. Zero-frequency symbols get length 0
+    (they are not in the codebook and must never be coded)."""
+    freqs = np.asarray(freqs, dtype=np.float64)
+    alive = np.flatnonzero(freqs > 0)
+    lengths = np.zeros(len(freqs), dtype=np.int32)
+    if len(alive) == 0:
+        return lengths
+    if len(alive) == 1:
+        lengths[alive[0]] = 1  # degenerate alphabet still needs 1 bit/symbol
+        return lengths
+    # classic heap construction over (freq, tiebreak, payload-of-symbols)
+    heap = [(float(freqs[s]), int(s), [int(s)]) for s in alive]
+    heapq.heapify(heap)
+    tie = len(freqs)
+    while len(heap) > 1:
+        fa, _, syms_a = heapq.heappop(heap)
+        fb, _, syms_b = heapq.heappop(heap)
+        for s in syms_a:
+            lengths[s] += 1
+        for s in syms_b:
+            lengths[s] += 1
+        heapq.heappush(heap, (fa + fb, tie, syms_a + syms_b))
+        tie += 1
+    return lengths
+
+
+def canonical_codes(lengths: np.ndarray) -> dict[int, tuple[int, int]]:
+    """symbol -> (code, length), canonical ordering (length, then symbol id)."""
+    order = sorted((int(l), int(s)) for s, l in enumerate(lengths) if l > 0)
+    codes: dict[int, tuple[int, int]] = {}
+    code = 0
+    prev_len = 0
+    for length, sym in order:
+        code <<= length - prev_len
+        codes[sym] = (code, length)
+        code += 1
+        prev_len = length
+    return codes
+
+
+@dataclass
+class HuffmanCode:
+    """A canonical Huffman codebook over symbols 0..B-1."""
+
+    lengths: np.ndarray  # (B,) int32; 0 => symbol absent from codebook
+
+    def __post_init__(self) -> None:
+        self.lengths = np.asarray(self.lengths, dtype=np.int32)
+        self._codes = canonical_codes(self.lengths)
+        # decode table: (length, code) -> symbol
+        self._decode = {(l, c): s for s, (c, l) in self._codes.items()}
+        self._min_len = min((l for l in self.lengths if l > 0), default=0)
+        self._max_len = int(self.lengths.max(initial=0))
+
+    @classmethod
+    def from_freqs(cls, freqs: np.ndarray) -> "HuffmanCode":
+        return cls(code_lengths(freqs))
+
+    @property
+    def alphabet_size(self) -> int:
+        return len(self.lengths)
+
+    def encode_symbol(self, w: BitWriter, sym: int) -> None:
+        code, length = self._codes[int(sym)]
+        w.write_bits(code, length)
+
+    def decode_symbol(self, r: BitReader) -> int:
+        code = 0
+        length = 0
+        while True:
+            code = (code << 1) | r.read_bit()
+            length += 1
+            sym = self._decode.get((length, code))
+            if sym is not None:
+                return sym
+            if length > _MAX_CODE_LEN:
+                raise ValueError("corrupt Huffman stream")
+
+    def encode(self, symbols) -> bytes:
+        w = BitWriter()
+        n = 0
+        for s in symbols:
+            self.encode_symbol(w, s)
+            n += 1
+        return w.getvalue()
+
+    def decode(self, data: bytes, n_symbols: int) -> np.ndarray:
+        r = BitReader(data)
+        return np.array(
+            [self.decode_symbol(r) for _ in range(n_symbols)], dtype=np.int64
+        )
+
+    def encoded_bits(self, counts: np.ndarray) -> int:
+        """Exact bit cost of coding ``counts[s]`` occurrences of each symbol."""
+        counts = np.asarray(counts)
+        return int((counts * self.lengths).sum())
+
+    def dictionary_bits(self, alpha_bits: float) -> float:
+        """Paper's dictionary overhead: alpha bits per dictionary line."""
+        return float((self.lengths > 0).sum()) * alpha_bits
+
+
+def entropy_bits(counts: np.ndarray) -> float:
+    """n * empirical entropy, in bits."""
+    counts = np.asarray(counts, dtype=np.float64)
+    n = counts.sum()
+    if n == 0:
+        return 0.0
+    p = counts[counts > 0] / n
+    return float(-n * (p * np.log2(p)).sum())

@@ -1,0 +1,264 @@
+"""Entropy-coded checkpoint tensors — the paper's scheme transplanted to
+LM state (BEYOND-PAPER, reported separately; see DESIGN.md §3).
+
+The paper's premise is that i.i.d. sub-models (trees) share empirical
+distributions, so their codebooks can be CLUSTERED (eq. 6) instead of
+stored per-model.  Transformer checkpoints have the same structure: the
+per-layer weight tensors are near-i.i.d. across depth (and experts across
+the expert axis), so their value histograms cluster tightly.
+
+Two modes:
+  * LOSSLESS (bf16/fp16): split each tensor into high bytes
+    (sign+exponent, heavily skewed -> entropy-codable) and low bytes
+    (mantissa tail, ~uniform -> stored raw).  Perfect reconstruction.
+  * QUANTIZED (b-bit): §7's uniform quantizer per tensor; distortion
+    bounded by step/2 = range/2^{b+1}, the paper's closed-form knob.
+
+Pipeline (mirrors Algorithm 1): histogram per tensor chunk -> KL k-means
+clustering of histograms (core.bregman, eq. 6 objective with alpha =
+dictionary-line cost) -> one canonical Huffman codebook per cluster ->
+vectorized encode (core.vechuff).  Each tensor chunk is an independent
+stream, so a restore can decode just the layers it needs — the checkpoint
+analogue of predicting from the compressed forest (§5).
+"""
+from __future__ import annotations
+
+import io
+import pickle
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .bregman import cluster_models
+from .vechuff import VectorHuffman
+
+_CHUNK = 1 << 16  # symbols per stream: decode parallelism vs overhead
+
+
+def _split_float(arr: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """float array -> (top-byte symbols [sign+exponent: heavily skewed],
+    remaining bytes raw).  Works for any itemsize >= 2."""
+    size = arr.dtype.itemsize
+    raw = arr.ravel().view(np.uint8).reshape(-1, size)
+    # numpy is little-endian here: the top byte is the LAST byte
+    hi = raw[:, size - 1].copy()
+    rest = raw[:, : size - 1].copy()
+    return hi, rest.ravel()
+
+
+def _join_float(hi: np.ndarray, rest: np.ndarray, dtype, shape) -> np.ndarray:
+    size = np.dtype(dtype).itemsize
+    n = hi.size
+    raw = np.empty((n, size), np.uint8)
+    raw[:, : size - 1] = rest.reshape(n, size - 1)
+    raw[:, size - 1] = hi
+    return raw.ravel().view(dtype).reshape(shape)
+
+
+def _quantize(arr: np.ndarray, bits: int):
+    """§7 uniform quantizer: returns (codes uint16, lo, step)."""
+    flat = arr.astype(np.float64).ravel()
+    lo, hi = float(flat.min()), float(flat.max())
+    n_levels = 1 << bits
+    step = max((hi - lo) / n_levels, 1e-300)
+    q = np.clip(np.floor((flat - lo) / step), 0, n_levels - 1)
+    return q.astype(np.uint16), lo, step
+
+
+@dataclass
+class CompressedTensors:
+    """Self-contained compressed checkpoint payload."""
+
+    mode: str  # "lossless" | "quantized"
+    bits: int  # alphabet log-size (8 for lossless high bytes)
+    tensors: dict  # name -> metadata dict
+    cluster_lengths: list  # per-cluster Huffman code lengths
+    streams: dict  # name -> list[(blob, n_symbols)]
+    raw: dict  # name -> bytes (low bytes / unquantized passthrough)
+    n_clusters: int = 0
+    stats: dict = field(default_factory=dict)
+
+    def to_bytes(self) -> bytes:
+        buf = io.BytesIO()
+        pickle.dump(self, buf, protocol=4)
+        return buf.getvalue()
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "CompressedTensors":
+        obj = pickle.loads(data)
+        assert isinstance(obj, cls)
+        return obj
+
+    @property
+    def nbytes(self) -> int:
+        total = 0
+        for st in self.streams.values():
+            total += sum(len(b) for b, _n, _k in st)
+        for r in self.raw.values():
+            total += len(r)
+        for ln in self.cluster_lengths:
+            total += len(ln)  # dictionary: one length byte per line
+        for meta in self.tensors.values():
+            total += 64  # shape/dtype/scale bookkeeping
+        return total
+
+
+def _histograms(symbol_chunks: list[np.ndarray], alphabet: int) -> np.ndarray:
+    return np.stack(
+        [np.bincount(c, minlength=alphabet) for c in symbol_chunks]
+    )
+
+
+def compress_tensors(
+    tree: dict[str, np.ndarray],
+    *,
+    bits: int | None = None,
+    k_max: int = 8,
+    seed: int = 0,
+) -> CompressedTensors:
+    """tree: flat {name: array}. bits=None -> lossless bf16 split mode."""
+    if bits is not None and not (1 <= bits <= 12):
+        raise ValueError("quantized mode supports 1..12 bits (FSM decoder)")
+    mode = "lossless" if bits is None else "quantized"
+    alphabet = 256 if bits is None else (1 << bits)
+
+    names: list[str] = []
+    chunk_syms: list[np.ndarray] = []
+    chunk_owner: list[int] = []
+    tensors: dict[str, dict] = {}
+    raw: dict[str, bytes] = {}
+
+    for name, arr in tree.items():
+        arr = np.asarray(arr)
+        meta: dict = {"shape": arr.shape, "dtype": str(arr.dtype)}
+        if mode == "lossless":
+            if arr.dtype.kind != "f" or arr.dtype.itemsize < 2 \
+                    or arr.size == 0:
+                raw[name] = arr.tobytes()  # ints/scalars pass through
+                meta["passthrough"] = True
+                tensors[name] = meta
+                continue
+            hi, lo = _split_float(arr)
+            raw[name] = lo.tobytes()
+            syms = hi
+        else:
+            codes, lo_v, step = _quantize(arr, bits)
+            meta["scale"] = (lo_v, step)
+            syms = codes
+        ti = len(names)
+        names.append(name)
+        tensors[name] = meta
+        for off in range(0, len(syms), _CHUNK):
+            chunk_syms.append(syms[off : off + _CHUNK])
+            chunk_owner.append(ti)
+
+    if not chunk_syms:
+        return CompressedTensors(mode, bits or 8, tensors, [], {}, raw)
+
+    hists = _histograms(chunk_syms, alphabet)
+    # alpha: one dictionary line = symbol id + code length byte
+    alpha_bits = 8 + np.log2(alphabet)
+    res = cluster_models(hists, alpha_bits=alpha_bits, k_max=k_max, seed=seed)
+
+    # build one codebook per cluster from the SUMMED member counts (the
+    # centroid may assign zero mass to a symbol a member uses; sums can't)
+    books: list[VectorHuffman] = []
+    lengths_out = []
+    for k in range(res.k):
+        members = np.flatnonzero(res.assignments == k)
+        counts = hists[members].sum(0) if len(members) else np.ones(alphabet)
+        vh = VectorHuffman(_lengths_from_counts(counts))
+        books.append(vh)
+        lengths_out.append(vh.lengths.astype(np.uint8).tobytes())
+
+    streams: dict[str, list] = {n: [] for n in names}
+    for ci, syms in enumerate(chunk_syms):
+        k = int(res.assignments[ci])
+        blob, _bits = books[k].encode(syms)
+        streams[names[chunk_owner[ci]]].append((blob, len(syms), k))
+
+    comp = CompressedTensors(
+        mode, bits or 8, tensors, lengths_out, streams, raw, res.k
+    )
+    comp.stats = {
+        "k": res.k,
+        "objective_bits": res.objective_bits,
+        "coding_loss_bits": res.coding_loss_bits,
+        "n_chunks": len(chunk_syms),
+    }
+    return comp
+
+
+def _lengths_from_counts(counts: np.ndarray) -> np.ndarray:
+    from .huffman import code_lengths
+
+    return code_lengths(counts)
+
+
+def decompress_tensors(
+    comp: CompressedTensors, names: list[str] | None = None
+) -> dict[str, np.ndarray]:
+    """Decode all tensors (or just ``names`` — layer-on-demand restore)."""
+    books = [
+        VectorHuffman(np.frombuffer(ln, dtype=np.uint8).astype(np.int64))
+        for ln in comp.cluster_lengths
+    ]
+    want = set(names) if names is not None else set(comp.tensors)
+    out: dict[str, np.ndarray] = {}
+
+    # group chunks by codebook so each decode_streams call is big
+    jobs: dict[int, list] = {}
+    for name, chunks in comp.streams.items():
+        if name not in want:
+            continue
+        for pos, (blob, n, k) in enumerate(chunks):
+            jobs.setdefault(k, []).append((name, pos, blob, n))
+    decoded: dict[tuple[str, int], np.ndarray] = {}
+    for k, items in jobs.items():
+        blobs = [b for _, _, b, _ in items]
+        ns = np.array([n for _, _, _, n in items])
+        res = books[k].decode_streams(blobs, ns)
+        for (name, pos, _, _), syms in zip(items, res):
+            decoded[(name, pos)] = syms
+
+    for name, meta in comp.tensors.items():
+        if name not in want:
+            continue
+        shape, dtype = meta["shape"], np.dtype(meta["dtype"])
+        if meta.get("passthrough"):
+            out[name] = np.frombuffer(comp.raw[name], dtype=dtype).reshape(shape)
+            continue
+        chunks = comp.streams[name]
+        syms = np.concatenate(
+            [decoded[(name, i)] for i in range(len(chunks))]
+        ) if chunks else np.zeros(0, np.int64)
+        if comp.mode == "lossless":
+            lo = np.frombuffer(comp.raw[name], dtype=np.uint8)
+            out[name] = _join_float(syms.astype(np.uint8), lo, dtype, shape)
+        else:
+            lo_v, step = meta["scale"]
+            vals = lo_v + (syms.astype(np.float64) + 0.5) * step
+            out[name] = vals.astype(dtype).reshape(shape)
+    return out
+
+
+def flatten_pytree(tree, prefix="") -> dict[str, np.ndarray]:
+    """dict-pytree -> flat {path: np.ndarray} (jax arrays converted)."""
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(flatten_pytree(tree[k], f"{prefix}{k}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def unflatten_pytree(flat: dict[str, np.ndarray]):
+    root: dict = {}
+    for path, arr in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return root

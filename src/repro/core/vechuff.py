@@ -1,0 +1,179 @@
+"""Vectorized canonical Huffman codec over MANY independent streams.
+
+The paper's per-tree Huffman coding is fine in pure Python; checkpoint
+tensors have 1e8 symbols, so the tensor codec (tensor_codec.py) needs a
+numpy-vectorized path:
+
+  * ENCODE: per-symbol (code, length) lookup, then one flat bit-scatter +
+    np.packbits — O(total bits) without a Python per-symbol loop.
+  * DECODE: canonical decoding advanced bit-synchronously across all
+    streams at once (the classic first_code/offset-per-length tables);
+    the Python loop is over BITS-PER-STREAM, not total symbols, so
+    decoding N streams of length L costs O(L * max_len) vector steps.
+
+Streams are independent (one per tensor chunk) — which is also what lets
+a restore path decode only the layers it needs (the paper's
+predict-from-compressed property, §5).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .huffman import canonical_codes
+
+
+class VectorHuffman:
+    """Canonical Huffman codec with vectorized encode/decode.
+
+    lengths: (B,) int array of code lengths (0 = absent symbol).
+    """
+
+    def __init__(self, lengths: np.ndarray):
+        self.lengths = np.asarray(lengths, dtype=np.int64)
+        codes = canonical_codes(self.lengths)
+        b = len(self.lengths)
+        self.code_of = np.zeros(b, dtype=np.uint64)
+        for s, (c, _l) in codes.items():
+            self.code_of[s] = c
+        self.max_len = int(self.lengths.max(initial=0))
+        # canonical decode tables: for each length l, the first canonical
+        # code of that length, the number of codes, and the symbol list
+        # sorted by (length, symbol).
+        order = sorted((int(l), int(s)) for s, l in enumerate(self.lengths) if l)
+        self.sym_by_rank = np.array([s for _, s in order], dtype=np.int64)
+        self.first_code = np.zeros(self.max_len + 2, dtype=np.int64)
+        self.count_at = np.zeros(self.max_len + 2, dtype=np.int64)
+        self.rank_base = np.zeros(self.max_len + 2, dtype=np.int64)
+        code = 0
+        prev_len = 0
+        rank = 0
+        for length, _s in order:
+            code <<= length - prev_len
+            if self.count_at[length] == 0:
+                self.first_code[length] = code
+                self.rank_base[length] = rank
+            self.count_at[length] += 1
+            code += 1
+            rank += 1
+            prev_len = length
+
+    # -- encode ------------------------------------------------------------
+    def encode(self, symbols: np.ndarray) -> tuple[bytes, int]:
+        """symbols (N,) -> (packed bytes, total bits)."""
+        symbols = np.asarray(symbols).ravel()
+        lens = self.lengths[symbols]
+        codes = self.code_of[symbols].astype(np.uint64)
+        total = int(lens.sum())
+        if total == 0:
+            return b"", 0
+        ends = np.cumsum(lens)
+        starts = ends - lens
+        # flat index of every bit: for symbol i, bits land at starts[i]..ends[i)
+        within = np.arange(total, dtype=np.int64) - np.repeat(starts, lens)
+        rep_codes = np.repeat(codes, lens)
+        rep_lens = np.repeat(lens, lens)
+        shift = (rep_lens - 1 - within).astype(np.uint64)
+        bits = ((rep_codes >> shift) & np.uint64(1)).astype(np.uint8)
+        return np.packbits(bits).tobytes(), total
+
+    # -- decode ------------------------------------------------------------
+    # Byte-level finite state machine: states are the internal nodes of the
+    # code tree; one transition per INPUT BYTE emits 0..8 symbols.  The
+    # Python loop is over stream BYTES (vectorized across streams), so
+    # decoding cost is O(compressed bytes / n_streams) iterations.
+    _MAX_FSM_ALPHABET = 4096  # table build is O(states * 2048)
+
+    def _build_fsm(self):
+        if getattr(self, "_fsm", None) is not None:
+            return
+        if int((self.lengths > 0).sum()) > self._MAX_FSM_ALPHABET:
+            raise ValueError(
+                "alphabet too large for the byte-FSM decoder; "
+                "use <= 12-bit quantization"
+            )
+        # rebuild the code tree: children[node] = [left, right]; negative
+        # entries encode leaves as -(symbol+1)
+        children: list[list[int]] = [[0, 0]]
+        for sym in self.sym_by_rank:
+            code = int(self.code_of[sym])
+            length = int(self.lengths[sym])
+            node = 0
+            for i in range(length - 1, -1, -1):
+                bit = (code >> i) & 1
+                if i == 0:
+                    children[node][bit] = -(int(sym) + 1)
+                else:
+                    nxt = children[node][bit]
+                    if nxt <= 0:
+                        children.append([0, 0])
+                        nxt = len(children) - 1
+                        children[node][bit] = nxt
+                    node = nxt
+        n_states = len(children)
+        # a byte may finish one pending code AND start/finish floor(8/min)
+        # fresh codes
+        max_emit = 8 // max(self._min_len(), 1) + 1
+        trans = np.zeros((n_states, 256), dtype=np.int32)
+        emit_count = np.zeros((n_states, 256), dtype=np.int8)
+        emit_syms = np.zeros((n_states, 256, max_emit), dtype=np.int64)
+        for s in range(n_states):
+            for byte in range(256):
+                node = s
+                cnt = 0
+                for i in range(7, -1, -1):
+                    nxt = children[node][(byte >> i) & 1]
+                    if nxt <= 0:
+                        emit_syms[s, byte, cnt] = -nxt - 1
+                        cnt += 1
+                        node = 0
+                    else:
+                        node = nxt
+                trans[s, byte] = node
+                emit_count[s, byte] = cnt
+        self._fsm = (trans, emit_count, emit_syms, max_emit)
+
+    def _min_len(self) -> int:
+        nz = self.lengths[self.lengths > 0]
+        return int(nz.min()) if nz.size else 1
+
+    def decode_streams(
+        self, blobs: list[bytes], n_symbols: np.ndarray
+    ) -> list[np.ndarray]:
+        """Decode many independent streams with one shared FSM."""
+        n_streams = len(blobs)
+        if n_streams == 0:
+            return []
+        self._build_fsm()
+        trans, emit_count, emit_syms, max_emit = self._fsm
+        n_symbols = np.asarray(n_symbols, dtype=np.int64)
+        byte_arrays = [np.frombuffer(b, dtype=np.uint8) for b in blobs]
+        max_bytes = max((a.size for a in byte_arrays), default=0)
+        data = np.zeros((n_streams, max_bytes), dtype=np.uint8)
+        for i, a in enumerate(byte_arrays):
+            data[i, : a.size] = a
+        max_syms = int(n_symbols.max(initial=0))
+        # one scratch slot at the end absorbs post-quota emissions (zero
+        # padding of short streams keeps the FSM running; writes past a
+        # stream's quota are clamped there and never read back)
+        cap = max_syms + 1
+        out = np.zeros((n_streams, cap + 1), np.int64)
+
+        state = np.zeros(n_streams, dtype=np.int32)
+        pos = np.zeros(n_streams, dtype=np.int64)
+        rows = np.arange(n_streams)
+        for j in range(max_bytes):
+            byte = data[:, j]
+            cnt = emit_count[state, byte].astype(np.int64)
+            syms = emit_syms[state, byte]  # (n_streams, max_emit)
+            for e in range(max_emit):
+                w = e < cnt
+                idx = np.minimum(pos[w] + e, cap)
+                out[rows[w], idx] = syms[w, e]
+            pos = np.minimum(pos + cnt, cap)
+            state = trans[state, byte]
+        if (pos < n_symbols).any():
+            raise ValueError("truncated Huffman stream")
+        return [out[i, : n_symbols[i]] for i in range(n_streams)]
+
+    def decode(self, blob: bytes, n: int) -> np.ndarray:
+        return self.decode_streams([blob], np.array([n]))[0]

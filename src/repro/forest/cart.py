@@ -1,0 +1,178 @@
+"""Histogram CART in pure JAX — level-wise growth over fixed-shape heap
+arrays (the TPU adaptation of greedy recursive partitioning; see DESIGN.md).
+
+Every tree is a perfect-heap layout of ``2^(max_depth+1) - 1`` slots:
+node ``i`` has children ``2i+1`` / ``2i+2``.  Growth is level-synchronous:
+one dense histogram + argmax per level, for all of the level's nodes at
+once.  All shapes are static, so the whole forest is a single
+``vmap(grow_tree)`` program — no pointer chasing, no recursion, no host
+round-trips during growth.
+
+Semantics vs classical CART: splits are chosen over the pre-binned feature
+values (<=256 bins/feature), impurity is Gini (classification) or variance
+(regression), ``mtry`` features are drawn per NODE as in Breiman's random
+forest, bootstrap resampling is expressed as integer sample weights.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NEG = -1e30
+
+
+@dataclass(frozen=True)
+class CartConfig:
+    n_features: int
+    n_bins: int  # max bins over features (histogram width)
+    max_depth: int = 8
+    mtry: int = 0  # 0 => d/3 (reg) or sqrt(d) (cls), set in forest.py
+    min_samples_leaf: int = 1
+    task: str = "classification"  # or "regression"
+    n_classes: int = 2
+
+    @property
+    def n_heap(self) -> int:
+        return (1 << (self.max_depth + 1)) - 1
+
+
+def _node_stats(stats_flat, cfg: CartConfig, n_nodes: int):
+    """stats_flat: (n_nodes*d*B, C_stats) -> (n_nodes, d, B, C_stats)."""
+    return stats_flat.reshape(n_nodes, cfg.n_features, cfg.n_bins, -1)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def grow_tree(xb: jnp.ndarray, y_enc: jnp.ndarray, w: jnp.ndarray,
+              key: jax.Array, cfg: CartConfig):
+    """Grow one tree.
+
+    xb:    (n, d) int32 bin ids
+    y_enc: (n, C) float32 — one-hot classes, or [y, y^2] for regression
+    w:     (n,)  float32 bootstrap weights (integer counts)
+    key:   PRNG key for per-node feature subsampling
+
+    Returns heap arrays:
+      feature   (H,) int32   split feature, -1 where leaf/dead
+      threshold (H,) int32   split bin (go left iff bin <= threshold)
+      node_fit  (H, C) float32  per-node fitted value/class scores
+      is_internal (H,) bool
+      node_count (H,) float32  (diagnostics / min-leaf accounting)
+    """
+    n, d = xb.shape
+    b = cfg.n_bins
+    c = y_enc.shape[1]
+    h = cfg.n_heap
+
+    feature = jnp.full(h, -1, jnp.int32)
+    threshold = jnp.full(h, -1, jnp.int32)
+    node_fit = jnp.zeros((h, c), jnp.float32)
+    is_internal = jnp.zeros(h, bool)
+    node_count = jnp.zeros(h, jnp.float32)
+
+    # per-sample state: current heap position; -2 once settled in a leaf
+    pos = jnp.zeros(n, jnp.int32)
+    wy = w[:, None] * y_enc  # (n, C)
+
+    for level in range(cfg.max_depth + 1):
+        lo = (1 << level) - 1
+        n_nodes = 1 << level
+        rel = pos - lo
+        active = (rel >= 0) & (rel < n_nodes)
+        relc = jnp.clip(rel, 0, n_nodes - 1)
+
+        # ---- histograms: (n_nodes, d, B) counts and (.., C) sums ----------
+        base = relc * (d * b)
+        idx = base[:, None] + jnp.arange(d)[None, :] * b + xb  # (n, d)
+        wmask = jnp.where(active, w, 0.0)
+        cnt = jnp.zeros(n_nodes * d * b, jnp.float32).at[idx.reshape(-1)].add(
+            jnp.broadcast_to(wmask[:, None], (n, d)).reshape(-1)
+        ).reshape(n_nodes, d, b)
+        ysum = (
+            jnp.zeros((n_nodes * d * b, c), jnp.float32)
+            .at[idx.reshape(-1)]
+            .add(
+                jnp.broadcast_to(
+                    jnp.where(active[:, None], wy, 0.0)[:, None, :], (n, d, c)
+                ).reshape(-1, c)
+            )
+            .reshape(n_nodes, d, b, c)
+        )
+
+        # ---- node totals & fits -------------------------------------------
+        cnt_node = cnt[:, 0, :].sum(-1)  # (n_nodes,)
+        ysum_node = ysum[:, 0, :, :].sum(-2)  # (n_nodes, C)
+        fit = ysum_node / jnp.maximum(cnt_node, 1.0)[:, None]
+
+        # ---- split scores ---------------------------------------------------
+        cl = jnp.cumsum(cnt, axis=-1)  # (n_nodes, d, B) left count at bin<=t
+        yl = jnp.cumsum(ysum, axis=-2)  # (n_nodes, d, B, C)
+        cr = cnt_node[:, None, None] - cl
+        yr = ysum_node[:, None, None, :] - yl
+        if cfg.task == "regression":
+            # y_enc = [y, y^2]; gain = SSE reduction = s1L^2/nL + s1R^2/nR - s1^2/n
+            s1l, s1r = yl[..., 0], yr[..., 0]
+            score = s1l**2 / jnp.maximum(cl, 1e-9) + s1r**2 / jnp.maximum(
+                cr, 1e-9
+            )
+            parent = (ysum_node[:, 0] ** 2 / jnp.maximum(cnt_node, 1e-9))[
+                :, None, None
+            ]
+        else:
+            # Gini gain ∝ sum_c nLc^2/nL + nRc^2/nR - nc^2/n
+            score = (yl**2).sum(-1) / jnp.maximum(cl, 1e-9) + (yr**2).sum(
+                -1
+            ) / jnp.maximum(cr, 1e-9)
+            parent = ((ysum_node**2).sum(-1) / jnp.maximum(cnt_node, 1e-9))[
+                :, None, None
+            ]
+        gain = score - parent  # (n_nodes, d, B)
+
+        valid = (cl >= cfg.min_samples_leaf) & (cr >= cfg.min_samples_leaf)
+        # per-node mtry feature draw (exactly mtry of d via top-k of uniforms)
+        key, sub = jax.random.split(key)
+        scores_f = jax.random.uniform(sub, (n_nodes, d))
+        ranks = jnp.argsort(jnp.argsort(scores_f, axis=1), axis=1)
+        fmask = ranks < max(cfg.mtry, 1)  # (n_nodes, d)
+        gain = jnp.where(valid & fmask[:, :, None], gain, _NEG)
+
+        flat = gain.reshape(n_nodes, d * b)
+        best = jnp.argmax(flat, axis=-1)
+        best_gain = jnp.take_along_axis(flat, best[:, None], 1)[:, 0]
+        best_f = (best // b).astype(jnp.int32)
+        best_t = (best % b).astype(jnp.int32)
+
+        can_split = (
+            (best_gain > 1e-7)
+            & (cnt_node >= 2 * cfg.min_samples_leaf)
+            & (level < cfg.max_depth)
+        )
+
+        sl = slice(lo, lo + n_nodes)
+        feature = feature.at[sl].set(jnp.where(can_split, best_f, -1))
+        threshold = threshold.at[sl].set(jnp.where(can_split, best_t, -1))
+        node_fit = node_fit.at[sl].set(fit)
+        is_internal = is_internal.at[sl].set(can_split & (cnt_node > 0))
+        node_count = node_count.at[sl].set(cnt_node)
+
+        # ---- route samples ---------------------------------------------------
+        nf = best_f[relc]
+        nt = best_t[relc]
+        split_here = can_split[relc] & active
+        go_left = xb[jnp.arange(n), jnp.clip(nf, 0, d - 1)] <= nt
+        child = jnp.where(go_left, 2 * pos + 1, 2 * pos + 2)
+        pos = jnp.where(split_here, child, jnp.where(active, -2, pos))
+
+    return feature, threshold, node_fit, is_internal, node_count
+
+
+def heap_children(h: int):
+    i = np.arange(h)
+    left = 2 * i + 1
+    right = 2 * i + 2
+    left[left >= h] = -1
+    right[right >= h] = -1
+    return left, right

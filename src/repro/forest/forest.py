@@ -1,0 +1,227 @@
+"""Random forest on top of the histogram CART grower.
+
+``train_forest`` vmaps :func:`repro.forest.cart.grow_tree` over bootstrap
+weights + PRNG keys (trees are i.i.d. given the data — the exact premise the
+paper's codec exploits), in memory-bounded chunks.  ``to_compact_forest``
+converts heap arrays to the codec's preorder compact trees.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.tree import Forest, ForestMeta, Tree
+from .binning import Binner
+from .cart import CartConfig, grow_tree
+
+
+@dataclass
+class ForestModel:
+    """Device-side forest: stacked heap arrays."""
+
+    feature: np.ndarray  # (T, H) int32
+    threshold: np.ndarray  # (T, H) int32
+    node_fit: np.ndarray  # (T, H, C) float32
+    is_internal: np.ndarray  # (T, H) bool
+    node_count: np.ndarray  # (T, H) float32
+    cfg: CartConfig
+    binner: Binner
+    n_train_obs: int
+
+    @property
+    def n_trees(self) -> int:
+        return self.feature.shape[0]
+
+
+def _bootstrap_weights(key, n_trees: int, n: int) -> jnp.ndarray:
+    """Integer bootstrap counts per tree: n draws with replacement."""
+
+    def one(k):
+        idx = jax.random.randint(k, (n,), 0, n)
+        return jnp.zeros(n, jnp.float32).at[idx].add(1.0)
+
+    return jax.vmap(one)(jax.random.split(key, n_trees))
+
+
+def train_forest(
+    x_raw: np.ndarray,
+    y: np.ndarray,
+    binner: Binner,
+    n_trees: int = 100,
+    max_depth: int = 8,
+    mtry: int = 0,
+    min_samples_leaf: int = 1,
+    task: str = "classification",
+    n_classes: int = 2,
+    seed: int = 0,
+    chunk: int = 16,
+) -> ForestModel:
+    n, d = x_raw.shape
+    xb = jnp.asarray(binner.transform(x_raw))
+    n_bins = int(binner.n_bins_per_feature.max())
+    if mtry <= 0:
+        mtry = max(1, int(np.sqrt(d)) if task == "classification" else d // 3)
+    cfg = CartConfig(
+        n_features=d,
+        n_bins=n_bins,
+        max_depth=max_depth,
+        mtry=mtry,
+        min_samples_leaf=min_samples_leaf,
+        task=task,
+        n_classes=n_classes,
+    )
+    if task == "classification":
+        y_enc = jax.nn.one_hot(jnp.asarray(y, jnp.int32), n_classes)
+    else:
+        yj = jnp.asarray(y, jnp.float32)
+        y_enc = jnp.stack([yj, yj**2], axis=-1)
+
+    key = jax.random.PRNGKey(seed)
+    kw, kt = jax.random.split(key)
+    weights = _bootstrap_weights(kw, n_trees, n)
+    tkeys = jax.random.split(kt, n_trees)
+
+    grow = jax.vmap(grow_tree, in_axes=(None, None, 0, 0, None))
+    outs = []
+    for s in range(0, n_trees, chunk):
+        e = min(s + chunk, n_trees)
+        outs.append(
+            jax.tree.map(
+                np.asarray,
+                grow(xb, y_enc, weights[s:e], tkeys[s:e], cfg),
+            )
+        )
+    feature, threshold, node_fit, is_internal, node_count = (
+        np.concatenate([o[i] for o in outs], axis=0) for i in range(5)
+    )
+    return ForestModel(
+        feature, threshold, node_fit, is_internal, node_count, cfg, binner, n
+    )
+
+
+def predict_forest(model: ForestModel, x_raw: np.ndarray) -> np.ndarray:
+    """Batched heap traversal (pure JAX; the Pallas tree_predict kernel is
+    the compact-tree twin used at serving time)."""
+    xb = jnp.asarray(model.binner.transform(x_raw))
+    feat = jnp.asarray(model.feature)
+    thr = jnp.asarray(model.threshold)
+    fit = jnp.asarray(model.node_fit)
+    internal = jnp.asarray(model.is_internal)
+    n = xb.shape[0]
+    t = model.n_trees
+
+    def tree_pred(f, th, nfit, inter):
+        idx = jnp.zeros(n, jnp.int32)
+        for _ in range(model.cfg.max_depth):
+            fe = f[idx]
+            go_left = xb[jnp.arange(n), jnp.clip(fe, 0, xb.shape[1] - 1)] <= th[idx]
+            child = jnp.where(go_left, 2 * idx + 1, 2 * idx + 2)
+            idx = jnp.where(inter[idx], child, idx)
+        return nfit[idx]  # (n, C)
+
+    preds = jax.vmap(tree_pred)(feat, thr, fit, internal)  # (T, n, C)
+    if model.cfg.task == "classification":
+        votes = preds.argmax(-1)  # (T, n) per-tree class
+        onehot = jax.nn.one_hot(votes, model.cfg.n_classes).sum(0)
+        return np.asarray(onehot.argmax(-1))
+    return np.asarray(preds[..., 0].mean(0))
+
+
+def per_tree_predictions(model: ForestModel, x_raw: np.ndarray) -> np.ndarray:
+    """(T, n) per-tree predictions — used by §7's sigma^2 estimator."""
+    xb = jnp.asarray(model.binner.transform(x_raw))
+    n = xb.shape[0]
+
+    def tree_pred(f, th, nfit, inter):
+        idx = jnp.zeros(n, jnp.int32)
+        for _ in range(model.cfg.max_depth):
+            fe = f[idx]
+            go_left = xb[jnp.arange(n), jnp.clip(fe, 0, xb.shape[1] - 1)] <= th[idx]
+            child = jnp.where(go_left, 2 * idx + 1, 2 * idx + 2)
+            idx = jnp.where(inter[idx], child, idx)
+        return nfit[idx]
+
+    preds = jax.vmap(tree_pred)(
+        jnp.asarray(model.feature),
+        jnp.asarray(model.threshold),
+        jnp.asarray(model.node_fit),
+        jnp.asarray(model.is_internal),
+    )
+    if model.cfg.task == "classification":
+        return np.asarray(preds.argmax(-1))
+    return np.asarray(preds[..., 0])
+
+
+def to_compact_forest(model: ForestModel) -> Forest:
+    """Heap arrays -> preorder compact trees + forest-level fit dictionary
+    (regression fits become indices into a distinct-64-bit-value table,
+    mirroring the paper's fit dictionaries)."""
+    cfg = model.cfg
+    trees_raw = []
+    all_fits = []
+    for t in range(model.n_trees):
+        feature, threshold, fit, internal = (
+            model.feature[t],
+            model.threshold[t],
+            model.node_fit[t],
+            model.is_internal[t],
+        )
+        # iterative preorder over the live heap nodes
+        compact_of = {}
+        seq = []
+        st = [0]
+        while st:
+            i = st.pop()
+            me = len(seq)
+            seq.append(i)
+            compact_of[i] = me
+            if internal[i]:
+                st.append(2 * i + 2)  # right pushed first -> left popped first
+                st.append(2 * i + 1)
+        n_nodes = len(seq)
+        cf = np.full(n_nodes, -1, np.int32)
+        ct = np.full(n_nodes, -1, np.int32)
+        cl = np.full(n_nodes, -1, np.int32)
+        cr = np.full(n_nodes, -1, np.int32)
+        cfit_raw = np.zeros(n_nodes, np.float64)
+        for me, i in enumerate(seq):
+            if internal[i]:
+                cf[me] = feature[i]
+                ct[me] = threshold[i]
+                cl[me] = compact_of[2 * i + 1]
+                cr[me] = compact_of[2 * i + 2]
+            if cfg.task == "classification":
+                cfit_raw[me] = float(np.argmax(fit[i]))
+            else:
+                cfit_raw[me] = float(fit[i][0])
+        trees_raw.append((cf, ct, cl, cr, cfit_raw))
+        all_fits.append(cfit_raw)
+
+    meta = ForestMeta(
+        n_features=cfg.n_features,
+        task=cfg.task,
+        n_classes=cfg.n_classes,
+        n_bins_per_feature=model.binner.n_bins_per_feature,
+        bin_edges=model.binner.bin_edges,
+        n_train_obs=model.n_train_obs,
+        categorical=model.binner.categorical,
+    )
+    if cfg.task == "classification":
+        trees = [
+            Tree(cf, ct, cl, cr, cfit.astype(np.int64))
+            for cf, ct, cl, cr, cfit in trees_raw
+        ]
+        return Forest(trees=trees, meta=meta)
+    # regression: global distinct fit-value dictionary
+    concat = np.concatenate(all_fits)
+    fit_values, inv = np.unique(concat, return_inverse=True)
+    trees = []
+    off = 0
+    for cf, ct, cl, cr, cfit in trees_raw:
+        k = len(cfit)
+        trees.append(Tree(cf, ct, cl, cr, inv[off : off + k].astype(np.int64)))
+        off += k
+    return Forest(trees=trees, meta=meta, fit_values=fit_values)

@@ -1,0 +1,139 @@
+"""Blockwise (flash) causal attention Pallas TPU kernel.
+
+Tiling: grid = (batch*q_heads, n_q_blocks, n_kv_blocks) with the kv-block
+axis INNERMOST so the output block (indexed only by the first two axes) is
+revisited across kv steps; running max / sum / accumulator live in VMEM
+scratch, carried across the kv sweep — the standard online-softmax flash
+schedule mapped onto the Pallas revisiting-grid idiom.
+
+Block shapes default to (128, head_dim): q/k/v tiles of 128x128 keep the MXU
+fed (contraction dims are multiples of 128 for the assigned archs) and the
+working set (3 tiles + accumulator + stats) well under VMEM.
+
+Causal + sliding-window masking is applied per tile; fully-masked tiles
+skip the matmuls via ``pl.when`` (on-diagonal tiles pay the mask, strictly
+lower tiles don't).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int | None,
+    block_q: int, block_k: int, n_kv_blocks: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # tile-level reachability: q row r attends to k col c iff c <= r
+    # (causal) and r - c < window; fully-masked tiles skip both matmuls
+    run = jnp.bool_(True)
+    if causal:
+        run &= k_start <= q_start + block_q - 1
+    if window is not None:
+        run &= q_start - (k_start + block_k - 1) < window
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (bq, bk)
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= rows >= cols
+        if window is not None:
+            mask &= rows - cols < window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]  # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_bh(
+    q: jnp.ndarray,  # (BH, S, hd)
+    k: jnp.ndarray,  # (BH, T, hd)
+    v: jnp.ndarray,  # (BH, T, hd)
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, s, hd = q.shape
+    t = k.shape[1]
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    n_q = pl.cdiv(s, block_q)
+    n_k = pl.cdiv(t, block_k)
+    scale = hd**-0.5
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv_blocks=n_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),  # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running sum
+        ],
+        interpret=interpret,
+    )(q, k, v)

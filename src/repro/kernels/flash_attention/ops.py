@@ -1,0 +1,46 @@
+"""jit'd public wrapper: GQA layout handling around the flash kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bh
+from .ref import mha_reference
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, H, hd)
+    k: jnp.ndarray,  # (B, S, KV, hd)
+    v: jnp.ndarray,  # (B, S, KV, hd)
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Returns (B, S, H, hd). KV heads are repeated to H (GQA)."""
+    if interpret is None:
+        # interpret=True lets the kernel body run on CPU for validation
+        interpret = jax.default_backend() == "cpu"
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    n_rep = h // kv
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), n_rep, axis=1).reshape(b * h, s, hd)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), n_rep, axis=1).reshape(b * h, s, hd)
+    out = flash_attention_bh(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+def flash_attention_reference(q, k, v, causal=True, window=None):
+    """Same signature as flash_attention, evaluated with the jnp oracle."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    n_rep = h // kv
+    qr = q.transpose(0, 2, 1, 3)
+    kr = jnp.repeat(k.transpose(0, 2, 1, 3), n_rep, axis=1)
+    vr = jnp.repeat(v.transpose(0, 2, 1, 3), n_rep, axis=1)
+    return mha_reference(qr, kr, vr, causal, window).transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+_NEG_INF = -1e30
+
+
+def mha_reference(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """q: (B, H, S, hd); k, v: (B, H, T, hd) (kv heads already repeated).
+
+    Returns (B, H, S, hd)."""
+    s, t = q.shape[2], k.shape[2]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32)
+    scores = scores / (q.shape[-1] ** 0.5)
+    idx_s = jnp.arange(s)[:, None]
+    idx_t = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= idx_s + (t - s) >= idx_t  # right-aligned causal
+    if window is not None:
+        mask &= idx_s + (t - s) - idx_t < window
+    scores = jnp.where(mask[None, None], scores, _NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,30 @@
+"""jit'd wrapper: quantize/dequantize arbitrary-shape tensors."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .quantize import quantize
+from .ref import dequantize_reference
+
+
+def quantize_tensor(x, bits: int, dither: bool = False, seed: int = 0,
+                    interpret: bool | None = None):
+    """x: any shape -> (q int32 same shape, recon float32, (lo, step))."""
+    n_levels = 1 << bits
+    flat = x.reshape(-1)
+    lo = float(flat.min())
+    hi = float(flat.max())
+    step = max((hi - lo) / n_levels, 1e-30)
+    # kernel operates on 2-D tiles
+    n = flat.shape[0]
+    cols = 256 if n >= 256 else n
+    pad = (-n) % cols
+    x2 = jnp.pad(flat, (0, pad)).reshape(-1, cols)
+    q, recon = quantize(x2, lo, step, n_levels, dither, seed, interpret=interpret)
+    q = q.reshape(-1)[:n].reshape(x.shape)
+    recon = recon.reshape(-1)[:n].reshape(x.shape)
+    return q, recon, (lo, step)
+
+
+def dequantize_tensor(q, lo: float, step: float):
+    return dequantize_reference(q, lo, step)

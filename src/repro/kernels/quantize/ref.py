@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the uniform quantization kernel (§7 quantizer)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_reference(x, lo, step, n_levels: int, dither=None):
+    """x float -> (q int32, reconstruction float32).
+
+    q = clip(floor((x - lo)/step + dither), 0, n_levels-1)
+    recon = lo + (q + 0.5) * step   (midpoint reconstruction)
+    """
+    d = dither if dither is not None else 0.0
+    q = jnp.clip(
+        jnp.floor((x.astype(jnp.float32) - lo) / step + d), 0, n_levels - 1
+    ).astype(jnp.int32)
+    recon = lo + (q.astype(jnp.float32) + 0.5) * step
+    return q, recon
+
+
+def dequantize_reference(q, lo, step):
+    return lo + (q.astype(jnp.float32) + 0.5) * step

@@ -1,0 +1,24 @@
+"""jit'd wrapper: (B,S,H,hd) model layout <-> (BH,S,hd) kernel layout."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .rwkv6_scan import wkv6_scan
+
+
+def wkv6(r, k, v, w, u, state, chunk: int = 64, interpret: bool | None = None):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd) float32.
+
+    Returns (y (B,S,H,hd) float32, final state)."""
+    b, s, h, hd = r.shape
+    fold = lambda a: a.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    rf, kf, vf, wf = fold(r), fold(k), fold(v), fold(w)
+    uf = jnp.broadcast_to(u.astype(jnp.float32)[None], (b, h, hd)).reshape(b * h, hd)
+    sf = state.astype(jnp.float32).reshape(b * h, hd, hd)
+    pad = (-s) % chunk
+    if pad:
+        rf, kf, vf = (jnp.pad(a, ((0, 0), (0, pad), (0, 0))) for a in (rf, kf, vf))
+        wf = jnp.pad(wf, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    y, s_final = wkv6_scan(rf, kf, vf, wf, uf, sf, chunk=chunk, interpret=interpret)
+    y = y[:, :s].reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    return y, s_final.reshape(b, h, hd, hd)

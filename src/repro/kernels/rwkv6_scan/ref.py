@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the WKV6 recurrence kernel (mirrors models.rwkv6)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_reference(r, k, v, w, u, state):
+    """r,k,v,w: (BH, S, hd) float32; u: (BH, hd); state: (BH, hd, hd).
+
+    y_t = r_t . (S_{t-1} + (u*k_t) v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (y (BH, S, hd), final state)."""
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (BH, hd)
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bi,bij->bj", rt, s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state

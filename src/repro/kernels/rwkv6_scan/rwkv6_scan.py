@@ -1,0 +1,101 @@
+"""Chunked WKV6 recurrence Pallas TPU kernel.
+
+Schedule: grid = (BH, n_chunks) with the chunk axis innermost/sequential;
+the (hd, hd) recurrent state lives in VMEM scratch and is carried across
+chunk steps (the Pallas revisiting idiom — same as the flash kernel).  Each
+step DMAs one (C, hd) tile of r/k/v/w from HBM into VMEM and runs the
+C-step recurrence on-chip, so HBM traffic is O(S*hd) rather than
+O(S*hd*hd) — the kernel exists to keep the state resident.
+
+Inside a chunk the update is expressed with outer products on the VPU
+(hd=64 for rwkv6-1.6b; the state fits in a handful of vregs).  A fully
+matmul-form intra-chunk expansion (MXU) is possible but needs log-space
+decay handling; measured against the roofline, this op is memory-bound at
+hd=64 so the VPU form already saturates (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+                 s_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = s0_ref[0]
+
+    u = u_ref[0]  # (1, hd) — broadcast row
+    r = r_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    w = w_ref[0]
+
+    def step(t, state):
+        kt = jax.lax.dynamic_slice_in_dim(k, t, 1, 0)  # (1, hd)
+        vt = jax.lax.dynamic_slice_in_dim(v, t, 1, 0)
+        rt = jax.lax.dynamic_slice_in_dim(r, t, 1, 0)
+        wt = jax.lax.dynamic_slice_in_dim(w, t, 1, 0)
+        kv = kt.T * vt  # (hd, hd) outer product
+        yt = rt @ (state + u.T * kv)  # (1, hd)
+        y_ref[0, t, :] = yt[0]
+        return wt.T * state + kv
+
+    state = jax.lax.fori_loop(0, chunk, step, s_ref[...])
+    s_ref[...] = state
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        sT_ref[0] = state
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret")
+)
+def wkv6_scan(
+    r: jnp.ndarray,  # (BH, S, hd) float32
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,  # (BH, hd)
+    state: jnp.ndarray,  # (BH, hd, hd)
+    chunk: int = 64,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bh, s, hd = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, "pad sequence to a chunk multiple"
+    n_chunks = s // chunk
+
+    kernel = functools.partial(
+        _wkv6_kernel, chunk=chunk, n_chunks=n_chunks
+    )
+    seq_spec = pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0))
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=(bh, n_chunks),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, 1, hd), lambda b, c: (b, 0, 0)),  # u
+            pl.BlockSpec((1, hd, hd), lambda b, c: (b, 0, 0)),  # s0
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, hd, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u[:, None, :], state)
+    return y, s_final

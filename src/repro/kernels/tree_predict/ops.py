@@ -1,0 +1,34 @@
+"""jit'd wrapper: ForestModel-level prediction via the Pallas kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .tree_predict import forest_predict
+
+
+def predict_forest_kernel(model, x_raw: np.ndarray, interpret: bool | None = None):
+    """Ensemble prediction matching repro.forest.predict_forest, but through
+    the Pallas traversal kernel. Returns (n,) predictions."""
+    xb = jnp.asarray(model.binner.transform(x_raw), jnp.int32)
+    cfg = model.cfg
+    if cfg.task == "classification":
+        # per-tree argmax class encoded as scalar fit
+        fit = jnp.asarray(model.node_fit.argmax(-1), jnp.float32)
+    else:
+        fit = jnp.asarray(model.node_fit[..., 0], jnp.float32)
+    per_tree = forest_predict(
+        xb,
+        jnp.asarray(model.feature),
+        jnp.asarray(model.threshold),
+        fit,
+        jnp.asarray(model.is_internal),
+        max_depth=cfg.max_depth,
+        interpret=interpret,
+    )  # (T, N)
+    if cfg.task == "classification":
+        votes = jnp.stack(
+            [(per_tree == c).sum(0) for c in range(cfg.n_classes)], -1
+        )
+        return np.asarray(votes.argmax(-1))
+    return np.asarray(per_tree.mean(0))

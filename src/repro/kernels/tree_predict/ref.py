@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for batched forest traversal over heap-layout trees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def forest_predict_reference(
+    xb: jnp.ndarray,  # (N, d) int32 binned observations
+    feature: jnp.ndarray,  # (T, H) int32
+    threshold: jnp.ndarray,  # (T, H) int32
+    fit: jnp.ndarray,  # (T, H) float32 per-node scalar fit
+    is_internal: jnp.ndarray,  # (T, H) bool
+    max_depth: int,
+) -> jnp.ndarray:
+    """Returns (T, N) leaf fit per (tree, observation)."""
+    n, d = xb.shape
+
+    def one_tree(f, th, nf, inter):
+        idx = jnp.zeros(n, jnp.int32)
+        for _ in range(max_depth):
+            fe = f[idx]
+            go_left = xb[jnp.arange(n), jnp.clip(fe, 0, d - 1)] <= th[idx]
+            child = jnp.where(go_left, 2 * idx + 1, 2 * idx + 2)
+            idx = jnp.where(inter[idx], child, idx)
+        return nf[idx]
+
+    return jax.vmap(one_tree)(feature, threshold, fit, is_internal)

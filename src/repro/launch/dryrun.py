@@ -1,0 +1,238 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, with NO array allocation (ShapeDtypeStruct
+inputs only), and record memory / FLOP / collective statistics.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --shape train_4k --multi-pod
+
+Results land in experiments/dryrun/<cell>.json; benchmarks/roofline.py
+turns them into the EXPERIMENTS.md tables.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"  # noqa: E402 — must precede any jax import
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs.base import SHAPES, ShapeConfig
+from ..configs.registry import ARCHITECTURES, get_config
+from ..models.sharding import logical_sharding, multi_pod_rules, single_pod_rules
+from ..optim.adamw import AdamWConfig
+from . import specs as specs_mod
+from .hlo_stats import hlo_stats
+from .mesh import make_production_mesh
+from .shardings import to_named
+from .steps import make_decode_step, make_prefill_step, make_train_step
+
+# TPU v5e hardware model for the roofline terms
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+DEFAULT_OUT = Path("experiments/dryrun")
+
+
+def applicable(cfg, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False  # quadratic attention at 500k is exactly what we skip
+    return True
+
+
+def model_flops(cfg, shape: ShapeConfig) -> float:
+    """Analytic useful FLOPs for the cell (6ND train / 2ND inference)."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def cell_name(arch: str, shape: str, multi_pod: bool) -> str:
+    return f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    out_dir: Path,
+    *,
+    remat: str | None = "full",
+    label: str | None = None,
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    name = label or cell_name(arch, shape_name, multi_pod)
+    if not applicable(cfg, shape):
+        return {"cell": name, "status": "skipped",
+                "reason": "full attention at 500k context (see DESIGN.md)"}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = multi_pod_rules() if multi_pod else single_pod_rules()
+    args, in_pspecs = specs_mod.input_specs(cfg, shape, mesh)
+
+    from jax.sharding import PartitionSpec as P
+
+    from .shardings import batch_spec
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        step = make_train_step(cfg, opt_cfg, remat=remat)
+        donate = (0, 1)
+        metrics_specs = {"grad_norm": P(), "lr": P(), "loss": P()}
+        out_pspecs = (in_pspecs[0], in_pspecs[1], metrics_specs)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        donate = ()
+        out_pspecs = None
+    else:
+        step = make_decode_step(cfg)
+        donate = (2,)
+        out_pspecs = (batch_spec(mesh, shape.global_batch, 2), in_pspecs[2])
+
+    jit_kwargs = dict(
+        in_shardings=to_named(mesh, in_pspecs),
+        donate_argnums=donate,
+    )
+    if out_pspecs is not None:
+        jit_kwargs["out_shardings"] = _named_or_none(mesh, out_pspecs)
+
+    with logical_sharding(mesh, rules):
+        lowered = jax.jit(step, **jit_kwargs).lower(*args)
+        compiled = lowered.compile()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    stats = hlo_stats(compiled.as_text())
+    colls = stats["collectives"]
+    n_dev = mesh.devices.size
+
+    flops_dev = stats["flops"]
+    bytes_dev = stats["hbm_bytes"]
+    coll_dev = stats["collective_bytes"]
+    mf = model_flops(cfg, shape)
+
+    rec = {
+        "cell": name,
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "multi_pod": multi_pod,
+        "n_devices": int(n_dev),
+        "status": "ok",
+        "compile_s": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "per_device": {
+            "hlo_flops": flops_dev,
+            "hlo_bytes": bytes_dev,
+            "collective_bytes": coll_dev,
+        },
+        "collectives": colls,
+        "top_collective_sites": stats["top_collective_sites"],
+        "cost_analysis_naive": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+        },
+        "roofline_s": {
+            "compute": flops_dev / PEAK_FLOPS,
+            "memory": bytes_dev / HBM_BW,
+            "collective": coll_dev / ICI_BW,
+        },
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_flop_fraction": (mf / n_dev) / flops_dev if flops_dev else 0.0,
+        "remat": remat,
+    }
+    terms = rec["roofline_s"]
+    rec["bottleneck"] = max(terms, key=terms.get)
+    return rec
+
+
+def _named_or_none(mesh, tree):
+    """to_named, but passing None subtrees through (= auto sharding)."""
+    import jax.tree_util as jtu
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def conv(x):
+        if isinstance(x, P):
+            return NamedSharding(mesh, x)
+        return x
+
+    return jtu.tree_map(conv, tree,
+                        is_leaf=lambda x: x is None or isinstance(x, P))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run each cell on the 16x16 AND 2x16x16 meshes")
+    ap.add_argument("--all", action="store_true", help="every cell")
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    remat = None if args.remat == "none" else args.remat
+    args.out.mkdir(parents=True, exist_ok=True)
+
+    archs = [args.arch] if args.arch else sorted(ARCHITECTURES)
+    shapes = [args.shape] if args.shape else sorted(SHAPES)
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                name = cell_name(arch, shape, mp)
+                path = args.out / f"{name}.json"
+                try:
+                    rec = run_cell(arch, shape, mp, args.out, remat=remat)
+                except Exception as e:  # a failing cell is a bug; record it
+                    rec = {"cell": name, "status": "failed",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()}
+                path.write_text(json.dumps(rec, indent=1))
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "failed"
+                if st == "ok":
+                    m = rec["memory"]["peak_bytes"] / 2**30
+                    r = rec["roofline_s"]
+                    print(
+                        f"[ok]   {name:55s} {rec['compile_s']:7.1f}s "
+                        f"peak {m:6.2f} GiB/dev  "
+                        f"c={r['compute']:.3e} m={r['memory']:.3e} "
+                        f"x={r['collective']:.3e}  -> {rec['bottleneck']}",
+                        flush=True,
+                    )
+                else:
+                    print(f"[{st[:4]}] {name:55s} "
+                          f"{rec.get('reason', rec.get('error', ''))[:90]}",
+                          flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

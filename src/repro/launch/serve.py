@@ -1,0 +1,85 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import ARCHITECTURES, get_config
+from ..models import init_params
+from .steps import make_decode_step, make_prefill_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES), required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    key = jax.random.PRNGKey(args.seed)
+    k_param, k_prompt, k_sample = jax.random.split(key, 3)
+    params = init_params(cfg, k_param)
+
+    max_len = args.prompt_len + args.gen
+    prompts = jax.random.randint(
+        k_prompt, (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+    fe = None
+    if cfg.frontend is not None and cfg.n_frontend_tokens:
+        fe = jax.random.normal(
+            k_prompt, (args.batch, cfg.n_frontend_tokens, cfg.d_model),
+            jnp.dtype(cfg.dtype),
+        )
+
+    prefill_step = jax.jit(
+        make_prefill_step(cfg), static_argnames=(), donate_argnums=()
+    )
+    decode_step = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+
+    t0 = time.time()
+    from ..models import prefill as _prefill
+
+    logits, cache = jax.jit(
+        lambda p, t, f: _prefill(cfg, p, t, f, max_len=max_len)
+    )(params, prompts, fe)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    tokens = jnp.argmax(logits, -1)
+    out = [tokens]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        k_sample, k = jax.random.split(k_sample)
+        logits, cache = decode_step(params, tokens, cache)
+        if args.temperature > 0:
+            tokens = jax.random.categorical(k, logits / args.temperature, -1)
+        else:
+            tokens = jnp.argmax(logits, -1)
+        out.append(tokens)
+    jax.block_until_ready(out[-1])
+    t_decode = time.time() - t0
+
+    gen = jnp.stack(out, 1)
+    toks_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"arch={cfg.name} prefill({args.batch}x{args.prompt_len}) "
+          f"{t_prefill:.2f}s; decode {args.gen - 1} steps "
+          f"{t_decode:.2f}s = {toks_s:.1f} tok/s")
+    print("sample token ids:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

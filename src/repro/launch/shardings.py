@@ -1,0 +1,192 @@
+"""Parameter / optimizer / batch / cache PartitionSpecs for the production
+mesh, for every assigned architecture.
+
+Strategy (see DESIGN.md §6):
+  * TP over ``model``: attention head dims, FF hidden, vocab, expert dim.
+  * ZeRO-3 FSDP over ``data``: the d_model dim of every weight matrix.
+  * ``pod`` joins ``data`` for batch parallelism (multi-pod default).
+  * KV caches: batch over data; kv-head dim over model when divisible,
+    else the TIME dim over model (ragged head sharding would pad memory).
+
+Every rule checks divisibility and falls back to replication — e.g.
+hymba's vocab 32001 and granite's 49155 don't split 16 ways, so their
+embeddings stay replicated rather than unevenly padded.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import init_cache, init_params
+from ..optim.adamw import init_opt_state
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _div(mesh: Mesh, dim: int, axis):
+    """axis if dim divides evenly over it, else None (replicate)."""
+    return axis if axis is not None and dim % _axis_size(mesh, axis) == 0 else None
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def batch_spec(mesh: Mesh, global_batch: int, rank: int) -> P:
+    ba = _div(mesh, global_batch, batch_axes(mesh))
+    if ba is None and global_batch % mesh.shape["data"] == 0:
+        ba = "data"
+    return P(ba, *([None] * (rank - 1)))
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+# name -> logical spec for the UNSTACKED leaf; "D" = d_model dim (FSDP over
+# data), "M" = tensor-parallel dim (over model), "E" = expert dim.
+_PARAM_RULES: dict[str, tuple[str | None, ...]] = {
+    "embed": ("M", "D"),
+    "lm_head": ("D", "M"),
+    # attention (gqa)
+    "wq": ("D", "M"), "wk": ("D", "M"), "wv": ("D", "M"), "wo": ("M", "D"),
+    # dense mlp / shared expert
+    "w1": ("D", "M"), "w3": ("D", "M"), "w2": ("M", "D"),
+    # mla
+    "w_dq": ("D", None), "w_uq": (None, "M"), "w_dkv": ("D", None),
+    "w_kr": ("D", None), "w_uk": (None, "M"), "w_uv": (None, "M"),
+    # rwkv6
+    "w_r": ("D", "M"), "w_k": ("D", "M"), "w_v": ("D", "M"),
+    "w_g": ("D", "M"), "w_o": ("M", "D"),
+    "w_lora_a": ("D", None), "w_lora_b": (None, None),
+    "u": (None, None), "mu": (None, None),
+    # ssm (hymba)
+    "w_in": ("D", "M"), "conv_w": (None, "M"), "w_dt": ("M", None),
+    "w_b": ("M", None), "w_c": ("M", None), "a_log": ("M", None),
+    "w_out": ("M", "D"),
+    # mtp
+    "proj": ("D", None),
+}
+
+# MoE expert tensors are matched by (name, rank) to avoid clashing with the
+# dense-mlp names above.
+_MOE_RULES: dict[str, tuple[str | None, ...]] = {
+    "w1": ("E", "D", None),
+    "w3": ("E", "D", None),
+    "w2": ("E", None, "D"),
+    "router": (None, None),
+}
+
+
+def _logical_to_mesh(mesh: Mesh, logical: tuple[str | None, ...],
+                     shape: tuple[int, ...]) -> P:
+    out = []
+    for name, dim in zip(logical, shape):
+        if name == "D":
+            out.append(_div(mesh, dim, "data"))
+        elif name in ("M", "E"):
+            out.append(_div(mesh, dim, "model"))
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _param_leaf_spec(mesh: Mesh, path, leaf) -> P:
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1]
+    stacked = any(k in ("layers", "layers_dense") for k in keys)
+    shape = tuple(leaf.shape)
+    base_shape = shape[1:] if stacked else shape
+    rule: tuple[str | None, ...] | None = None
+    if "mlp" in keys and "shared" not in keys and name in _MOE_RULES:
+        if len(base_shape) == len(_MOE_RULES[name]):
+            rule = _MOE_RULES[name]
+    if rule is None:
+        rule = _PARAM_RULES.get(name)
+    if rule is None or len(rule) != len(base_shape):
+        rule = (None,) * len(base_shape)
+    spec = _logical_to_mesh(mesh, rule, base_shape)
+    if stacked:
+        spec = P(None, *spec)
+    return spec
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec pytree matching init_params(cfg)."""
+    shapes = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0))
+    )
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_leaf_spec(mesh, path, leaf), shapes
+    )
+
+
+def opt_pspecs(cfg: ModelConfig, mesh: Mesh, pspecs=None):
+    """Optimizer state mirrors the parameter sharding; step is replicated."""
+    pspecs = pspecs if pspecs is not None else param_pspecs(cfg, mesh)
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+def _cache_leaf_spec(mesh: Mesh, path, leaf, batch: int) -> P:
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1]
+    shape = tuple(leaf.shape)
+    ba = _div(mesh, batch, batch_axes(mesh)) or _div(mesh, batch, "data")
+    if name == "pos":
+        return P(ba)
+    # all other leaves are stacked (L, B, ...)
+    body = shape[2:]
+    if name in ("k", "v"):  # (L,B,T,KV,hd): prefer KV over model, else T
+        t, kv = body[0], body[1]
+        if kv % mesh.shape["model"] == 0:
+            return P(None, ba, None, "model", None)
+        return P(None, ba, _div(mesh, t, "model"), None, None)
+    if name in ("c_kv", "k_rope"):  # (L,B,T,r): shard T
+        return P(None, ba, _div(mesh, body[0], "model"), None)
+    if name == "state":  # rwkv6 (L,B,H,hd,hd)
+        return P(None, ba, _div(mesh, body[0], "model"), None, None)
+    if name in ("x_prev_tm", "x_prev_cm"):  # (L,B,d)
+        return P(None, ba, _div(mesh, body[0], "model"))
+    if name == "h":  # ssm (L,B,di,st)
+        return P(None, ba, _div(mesh, body[0], "model"), None)
+    if name == "conv":  # (L,B,3,di)
+        return P(None, ba, None, _div(mesh, body[1], "model"))
+    return P(None, ba, *([None] * len(body)))
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int):
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_leaf_spec(mesh, path, leaf, batch), shapes
+    )
+
+
+# ---------------------------------------------------------------------------
+# convenience: NamedSharding trees + eval_shape structs for the dry-run
+# ---------------------------------------------------------------------------
+def to_named(mesh: Mesh, pspecs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def abstract_train_state(cfg: ModelConfig):
+    """(params, opt_state) as ShapeDtypeStructs — no allocation."""
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    opt = jax.eval_shape(lambda: init_opt_state(params))
+    return params, opt

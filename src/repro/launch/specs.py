@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these; nothing is ever allocated.
+
+``input_specs(cfg, shape)`` returns (args, pspec tree) for the step that
+the cell lowers:
+  * train_*   -> train_step(params, opt_state, batch)
+  * prefill_* -> prefill_step(params, tokens[, frontend_embeds])
+  * decode_*  -> serve_step(params, tokens, cache)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import init_cache
+from . import shardings as sh
+
+
+def _token_struct(b, s=None, dtype=jnp.int32):
+    shape = (b,) if s is None else (b, s)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig):
+    """Training batch pytree (host pipeline produces exactly this)."""
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _token_struct(b, s),
+        "labels": _token_struct(b, s),
+    }
+    if cfg.frontend is not None and cfg.n_frontend_tokens:
+        batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    return batch
+
+
+def batch_pspecs(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    b = shape.global_batch
+    specs = {
+        "tokens": sh.batch_spec(mesh, b, 2),
+        "labels": sh.batch_spec(mesh, b, 2),
+    }
+    if cfg.frontend is not None and cfg.n_frontend_tokens:
+        specs["frontend_embeds"] = sh.batch_spec(mesh, b, 3)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """(abstract args tuple, matching PartitionSpec tuple) for the cell."""
+    params, opt = sh.abstract_train_state(cfg)
+    pspecs = sh.param_pspecs(cfg, mesh)
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        args = (params, opt, batch_struct(cfg, shape))
+        specs = (pspecs, sh.opt_pspecs(cfg, mesh, pspecs),
+                 batch_pspecs(cfg, mesh, shape))
+        return args, specs
+
+    if shape.kind == "prefill":
+        args = [params, _token_struct(b, s)]
+        specs = [pspecs, sh.batch_spec(mesh, b, 2)]
+        if cfg.frontend is not None and cfg.n_frontend_tokens:
+            args.append(jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+            ))
+            specs.append(sh.batch_spec(mesh, b, 3))
+        return tuple(args), tuple(specs)
+
+    # decode: one new token against a seq_len cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    cache_specs = sh.cache_pspecs(cfg, mesh, b, s)
+    args = (params, _token_struct(b), cache)
+    specs = (pspecs, sh.batch_spec(mesh, b, 1), cache_specs)
+    return args, specs

@@ -1,0 +1,121 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --smoke --steps 50 --batch 8 --seq 256 --ckpt-dir /tmp/run1 \
+        [--ckpt-codec lossless] [--grad-bits 4] [--resume]
+
+On this CPU container you train the reduced (``--smoke``) configs; the
+same driver drives the full configs on a real pod (the dry-run proves
+they lower/compile on the production mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointConfig, CheckpointManager
+from ..configs.registry import ARCHITECTURES, get_config
+from ..data.tokens import Prefetcher, TokenDataConfig
+from ..models import init_params
+from ..optim.adamw import AdamWConfig, init_opt_state
+from ..optim.compression import GradCompressionConfig, init_error_feedback
+from ..runtime import StragglerMonitor, TrainLoop
+from .steps import make_train_step
+
+
+def build_state(cfg, opt_cfg, seed: int, grad_comp=None):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = init_opt_state(params)
+    if grad_comp is not None and grad_comp.enabled:
+        opt["ef"] = init_error_feedback(params)
+    return {"params": params, "opt": opt}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES), required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--ckpt-codec", default=None,
+                    choices=[None, "lossless", "q8", "q10", "q12"])
+    ap.add_argument("--grad-bits", type=int, default=0,
+                    help=">0 enables §7 dithered gradient compression")
+    ap.add_argument("--remat", default=None, choices=[None, "full", "dots"])
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=args.warmup,
+                          total_steps=args.steps)
+    grad_comp = (
+        GradCompressionConfig(bits=args.grad_bits)
+        if args.grad_bits else None
+    )
+    data_cfg = TokenDataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+        seed=args.seed,
+    )
+    step_fn_raw = jax.jit(
+        make_train_step(cfg, opt_cfg, remat=args.remat, grad_comp=grad_comp),
+        donate_argnums=(0, 1),
+    )
+
+    prefetch = Prefetcher(data_cfg, start_step=0)
+    straggler = StragglerMonitor()
+
+    def step_fn(state, step):
+        t0 = time.time()
+        got_step, batch = prefetch.get()
+        fetch_s = time.time() - t0
+        if straggler.should_skip(step, host=0, seconds=fetch_s):
+            return state, {"skipped": 1.0}
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = step_fn_raw(state["params"], state["opt"], batch)
+        return {"params": params, "opt": opt}, {
+            k: float(v) for k, v in metrics.items()
+        }
+
+    state = build_state(cfg, opt_cfg, args.seed, grad_comp)
+    n_params = sum(p.size for p in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"tokens/step={args.batch * args.seq}", flush=True)
+
+    if args.ckpt_dir:
+        mgr = CheckpointManager(
+            CheckpointConfig(args.ckpt_dir, codec=args.ckpt_codec)
+        )
+        loop = TrainLoop(step_fn, mgr, save_every=args.ckpt_every)
+        state = loop.run(state, args.steps)
+        log = loop.metrics_log
+    else:
+        log = []
+        for step in range(args.steps):
+            state, m = step_fn(state, step)
+            log.append(dict(m, step=step))
+    for m in log:
+        if m["step"] % args.log_every == 0 and "loss" in m:
+            print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
+                  f"lr {m.get('lr', 0):.2e}", flush=True)
+    losses = [m["loss"] for m in log if "loss" in m]
+    if losses:
+        print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})",
+              flush=True)
+    prefetch.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""repro.models — composable decoder-only LM covering the 10 assigned
+architectures."""
+
+from .model import (
+    decode_step,
+    embed_inputs,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    mtp_loss,
+    prefill,
+)
+
+__all__ = [
+    "decode_step",
+    "embed_inputs",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "mtp_loss",
+    "prefill",
+]

@@ -1,0 +1,253 @@
+"""GQA/MQA/MHA attention with RoPE, qk-norm, optional bias, sliding window,
+KV-cache decode, and an optional Pallas flash path for TPU."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .blockwise import chunked_attention
+from .layers import apply_rope, rms_norm
+from .sharding import ax
+
+_NEG_INF = -1e30
+
+# Full-sequence attention switches to the chunked online-softmax path at
+# this length: keeps peak memory O(S * chunk) instead of O(S^2) and keeps
+# HLO FLOPs at the causal optimum via the paired schedule (blockwise.py).
+# Measured at train_4k: the chunked path cuts compute 7% and peak memory
+# 9%, but its scan-residual traffic RAISES the memory roofline term 22%
+# (the dense (S,S) scores are cheaper than per-block residual stacking at
+# this size) — so the dense path keeps 4k and chunked starts at 8k, where
+# it wins on every term (§Perf iteration log).
+BLOCKWISE_THRESHOLD = 8192
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict[str, Any]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * d**-0.5).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, kv * hd)) * d**-0.5).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, kv * hd)) * d**-0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (h * hd, d)) * (h * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"])
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_rep: int):
+    """q (B,S,H,hd), k/v (B,T,KV,hd); mask (B,1,S,T) or (1,1,S,T) bool."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    q = q.reshape(b, s, kvh, n_rep, hd)
+    scores = jnp.einsum("bsgrh,btgh->bgrst", q, k) / (hd**0.5)
+    scores = jnp.where(mask[:, :, None], scores.astype(jnp.float32), _NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrst,btgh->bsgrh", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _head_padding(cfg: ModelConfig) -> tuple[int, int]:
+    """(kv_pad, rep_pad) so kv_pad*rep_pad divides the model axis evenly.
+
+    Archs whose head count doesn't divide the 16-way model axis
+    (starcoder2/granite: 24H, hymba: 25H/5KV) would otherwise be silently
+    REPLICATED by the ax() divisibility guard — a full axis-factor (16x)
+    of redundant attention FLOPs.  Padding heads to the next layout that
+    divides costs only the pad ratio (1.33x for 24->32, 1.92x for
+    hymba's 5x5 -> 8x6) and keeps every real head sharded.
+    """
+    from .sharding import _axis_size, current_mesh, current_rules
+
+    mesh = current_mesh()
+    kv, rep = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    if mesh is None:
+        return kv, rep
+    axis = _axis_size(mesh, (current_rules() or {}).get("heads"))
+    if (kv * rep) % axis == 0:
+        return kv, rep
+    best = None
+    for kv_pad in range(kv, kv + axis + 1):
+        for rep_pad in range(rep, rep + axis + 1):
+            if (kv_pad * rep_pad) % axis == 0:
+                if best is None or kv_pad * rep_pad < best[0] * best[1]:
+                    best = (kv_pad, rep_pad)
+    return best if best else (kv, rep)
+
+
+def _shard_qkv(cfg: ModelConfig, q, k, v):
+    """Shard attention over the model axis, padding heads if needed.
+
+    Returns (q, k, v, (kv_pad, rep_pad)); padded q/k/v have
+    kv_pad*rep_pad total / kv_pad kv heads.  Callers slice the output
+    back with _unpad_heads.
+    """
+    b, s, _, hd = q.shape
+    kv, rep = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    kv_pad, rep_pad = _head_padding(cfg)
+    if (kv_pad, rep_pad) != (kv, rep):
+        q = q.reshape(b, s, kv, rep, hd)
+        q = jnp.pad(q, [(0, 0), (0, 0), (0, kv_pad - kv),
+                        (0, rep_pad - rep), (0, 0)])
+        q = q.reshape(b, s, kv_pad * rep_pad, hd)
+        pad_kv = [(0, 0), (0, 0), (0, kv_pad - kv), (0, 0)]
+        k = jnp.pad(k, pad_kv)
+        v = jnp.pad(v, pad_kv)
+    q = ax(q, "batch", None, "heads", None)
+    k = ax(k, "batch", None, "kv_heads", None)
+    v = ax(v, "batch", None, "kv_heads", None)
+    return q, k, v, (kv_pad, rep_pad)
+
+
+def _unpad_heads(cfg: ModelConfig, out, pads):
+    """out (B,S,kv_pad*rep_pad,hd) -> (B,S,H,hd) real heads only."""
+    kv, rep = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    kv_pad, rep_pad = pads
+    if (kv_pad, rep_pad) == (kv, rep):
+        return out
+    b, s, _, hd = out.shape
+    out = out.reshape(b, s, kv_pad, rep_pad, hd)[:, :, :kv, :rep]
+    return out.reshape(b, s, kv * rep, hd)
+
+
+def _attend_full(q, k, v, cfg: ModelConfig, use_flash: bool):
+    """Causal self-attention over the full sequence, picking the path:
+    Pallas flash kernel (TPU) > chunked online-softmax (long seq) > dense.
+    Shapes may carry padded heads (see _head_padding)."""
+    s = q.shape[1]
+    n_rep = q.shape[2] // k.shape[2]
+    if use_flash:
+        from ..kernels.flash_attention.ops import flash_attention
+
+        return flash_attention(q, k, v, causal=True,
+                               window=cfg.sliding_window or None)
+    # (measured on hymba train_4k: routing windowed attention blockwise
+    # already at 2*window cuts peak memory 114->76 GiB and compute 18%,
+    # but the scan-residual traffic raises the dominant memory TERM
+    # 55->90 s — so the dense path keeps short windowed sequences and
+    # blockwise starts at the usual threshold, where the near-diagonal
+    # block table wins on every metric.)
+    if s >= BLOCKWISE_THRESHOLD:
+        return chunked_attention(
+            q, k, v, causal=True, window=cfg.sliding_window,
+            q_chunk=min(1024, cfg.sliding_window or 1024),
+            kv_chunk=min(1024, cfg.sliding_window or 1024),
+        )
+    idx = jnp.arange(s)
+    mask = idx[:, None] >= idx[None, :]
+    if cfg.sliding_window:
+        mask &= idx[:, None] - idx[None, :] < cfg.sliding_window
+    return _sdpa(q, k, v, mask[None, None], n_rep)
+
+
+def attention_train(p, cfg: ModelConfig, x, positions, use_flash: bool = False):
+    """Full-sequence causal attention (train / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    q, k, v, pads = _shard_qkv(cfg, q, k, v)
+    out = _attend_full(q, k, v, cfg, use_flash)
+    out = _unpad_heads(cfg, ax(out, "batch", None, "heads", None), pads)
+    return jnp.einsum("bsq,qd->bsd", out.reshape(b, s, -1), p["wo"])
+
+
+def attention_prefill(
+    p, cfg: ModelConfig, x, positions, max_len: int, use_flash: bool = False
+):
+    """Full-sequence attention that also returns the decode-ready KV cache.
+
+    The cache buffer matches init_kv_cache(max_len): with a sliding window
+    it is the ring buffer holding the last ``window`` tokens (assumes
+    window | S so ring slots line up with a plain tail slice).
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    q, k, v, pads = _shard_qkv(cfg, q, k, v)
+    out = _attend_full(q, k, v, cfg, use_flash)
+    out = _unpad_heads(cfg, ax(out, "batch", None, "heads", None), pads)
+    out = jnp.einsum("bsq,qd->bsd", out.reshape(b, s, -1), p["wo"])
+
+    # the decode cache stores REAL kv heads only (init_kv_cache layout)
+    k = k[:, :, : cfg.n_kv_heads]
+    v = v[:, :, : cfg.n_kv_heads]
+    length = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    if length < s:
+        assert s % length == 0, (s, length)
+        k_buf, v_buf = k[:, -length:], v[:, -length:]
+    elif length > s:
+        pad = [(0, 0), (0, length - s), (0, 0), (0, 0)]
+        k_buf, v_buf = jnp.pad(k, pad), jnp.pad(v, pad)
+    else:
+        k_buf, v_buf = k, v
+    return out, {"k": k_buf, "v": v_buf}
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    length = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {
+        "k": jnp.zeros((batch, length, kv, hd), dtype),
+        "v": jnp.zeros((batch, length, kv, hd), dtype),
+    }
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache, position):
+    """One-token decode step.
+
+    x: (B, 1, d); cache {k,v}: (B, T, KV, hd); position: (B,) current index.
+    With a sliding window the cache is a ring buffer of size window.
+    Returns (out (B,1,d), new cache).
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, cfg, x, position[:, None])
+    t = cache["k"].shape[1]
+    slot = jnp.where(
+        cfg.sliding_window > 0, position % jnp.maximum(t, 1), position
+    )
+    # scatter ONE slot per row — a one-hot masked rewrite would read and
+    # write the whole cache every decode step (2x the unavoidable
+    # attention read; decode is memory-bound, so that's a 2-3x tax)
+    rows = jnp.arange(b)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0])
+    v = cache["v"].at[rows, slot].set(v_new[:, 0])
+    k = ax(k, "batch", None, "kv_heads", None)
+    v = ax(v, "batch", None, "kv_heads", None)
+
+    idx = jnp.arange(t)[None, :]  # (1, T)
+    if cfg.sliding_window:
+        # ring buffer: every slot written within the last `t` tokens is valid
+        mask = (idx <= position[:, None]) | (position[:, None] >= t)
+    else:
+        mask = idx <= position[:, None]
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    out = _sdpa(q, k, v, mask[:, None, None, :], n_rep)
+    out = jnp.einsum("bsq,qd->bsd", out.reshape(b, 1, -1), p["wo"])
+    return out, {"k": k, "v": v}

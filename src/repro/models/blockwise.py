@@ -1,0 +1,211 @@
+"""Chunked online-softmax attention in pure jnp (XLA flash attention).
+
+This is the sub-quadratic attention path used by the 32k-prefill and 500k
+shapes when lowering on backends where the Pallas kernel is unavailable
+(the CPU dry-run) — and it is also the memory-bounded fallback on TPU for
+shapes the kernel does not cover.  Math matches kernels/flash_attention.
+
+Key property for the roofline: the set of (q-block, kv-block) pairs is
+enumerated STATICALLY from the causal/window structure, so masked-out
+blocks are never computed — HLO FLOPs stay ~optimal (half the rectangle
+for causal, O(S*window) for sliding-window) instead of the 2x-waste of a
+masked dense rectangle.  Rows are padded to the max block count with
+invalid entries masked inside the online-softmax update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def _block_table(n_q: int, n_k: int, q_chunk: int, kv_chunk: int,
+                 causal: bool, window: int):
+    """Static (idx, valid) arrays: for each q block, which kv blocks touch it."""
+    rows = []
+    for i in range(n_q):
+        q_lo, q_hi = i * q_chunk, i * q_chunk + q_chunk - 1
+        j_hi = (q_hi // kv_chunk) if causal else n_k - 1
+        j_lo = 0
+        if window:
+            j_lo = max(0, (q_lo - window + 1) // kv_chunk)
+        rows.append(list(range(j_lo, min(j_hi, n_k - 1) + 1)))
+    width = max(len(r) for r in rows)
+    idx = [[r[m] if m < len(r) else 0 for m in range(width)] for r in rows]
+    valid = [[m < len(r) for m in range(width)] for r in rows]
+    return jnp.asarray(idx, jnp.int32), jnp.asarray(valid, jnp.bool_)
+
+
+def chunked_attention(
+    q: jnp.ndarray,  # (B, S, H, hd)
+    k: jnp.ndarray,  # (B, T, KV, hd)
+    v: jnp.ndarray,  # (B, T, KV, hd_v)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Online-softmax attention over statically enumerated blocks.
+
+    GQA layout: H = KV * rep.  Never materializes more than one
+    (q_chunk x kv_chunk) score tile per (batch, head) at a time.
+
+    Plain causal self-attention uses the BALANCED PAIRING schedule
+    (_paired_causal): q-row p is co-scheduled with row nq-1-p so every
+    scan iteration does constant work with no masked-out padding blocks
+    — total FLOPs = the causal optimum, not the dense rectangle.
+    Windowed / cross attention falls back to the padded block table.
+    Returns (B, S, H, hd_v) in q.dtype.
+    """
+    if (causal and not window and q.shape[1] == k.shape[1]
+            and q_chunk == kv_chunk and q.shape[1] >= 2 * q_chunk
+            and (q.shape[1] // q_chunk) % 2 == 0):
+        return _paired_causal(q, k, v, chunk=q_chunk, scale=scale)
+    return _table_attention(q, k, v, causal=causal, window=window,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk, scale=scale)
+
+
+def _table_attention(q, k, v, *, causal, window, q_chunk, kv_chunk, scale):
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    rep = h // kv
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    assert s % q_chunk == 0 and t % kv_chunk == 0, (s, t, q_chunk, kv_chunk)
+    n_q, n_k = s // q_chunk, t // kv_chunk
+    scale = scale if scale is not None else hd**-0.5
+
+    idx, valid = _block_table(n_q, n_k, q_chunk, kv_chunk, causal, window)
+
+    # (n_q, B, qc, KV, rep, hd)
+    qs = q.reshape(b, n_q, q_chunk, kv, rep, hd).transpose(1, 0, 2, 3, 4, 5)
+    q_base = jnp.arange(n_q, dtype=jnp.int32) * q_chunk
+    k_off = jnp.arange(kv_chunk, dtype=jnp.int32)
+
+    def one_q_block(carry, xs):
+        del carry
+        q_i, idx_row, valid_row, base = xs
+        q_pos = base + jnp.arange(q_chunk, dtype=jnp.int32)
+
+        def one_kv_block(st, xs_inner):
+            m, l, acc = st  # (B,KV,rep,qc), same, (B,KV,rep,qc,hd_v) f32
+            j, ok = xs_inner
+            kb = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, 1)
+            sc = jnp.einsum(
+                "bqgrh,bkgh->bgrqk", q_i.astype(jnp.float32),
+                kb.astype(jnp.float32),
+            ) * scale
+            k_pos = j * kv_chunk + k_off
+            mask = jnp.ones((q_chunk, kv_chunk), jnp.bool_)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            mask &= ok
+            sc = jnp.where(mask, sc, _NEG_INF)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bkgh->bgrqh", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l, acc), None
+
+        init = (
+            jnp.full((b, kv, rep, q_chunk), _NEG_INF, jnp.float32),
+            jnp.zeros((b, kv, rep, q_chunk), jnp.float32),
+            jnp.zeros((b, kv, rep, q_chunk, hd_v), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(one_kv_block, init, (idx_row, valid_row))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KV,rep,qc,hd_v)
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B,qc,KV,rep,hd_v)
+
+    _, outs = jax.lax.scan(one_q_block, None, (qs, idx, valid, q_base))
+    # (n_q, B, qc, KV, rep, hd_v) -> (B, S, H, hd_v)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd_v)
+    return out.astype(q.dtype)
+
+
+def _paired_causal(q, k, v, *, chunk: int, scale: float | None):
+    """Causal attention with the balanced (p, nq-1-p) row pairing.
+
+    Row p needs p+1 kv blocks and row nq-1-p needs nq-p, so a pair always
+    needs nq+1 — the inner scan has constant length and every block it
+    computes is live (the only masking left is the two diagonal tiles).
+    FLOPs = nq(nq+1)/2 block-pairs per (b, head) = the causal optimum.
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    hd_v = v.shape[-1]
+    rep = h // kv
+    nq = s // chunk
+    half = nq // 2
+    scale = scale if scale is not None else hd**-0.5
+
+    # (nq, B, C, KV, rep, hd)
+    qs = q.reshape(b, nq, chunk, kv, rep, hd).transpose(1, 0, 2, 3, 4, 5)
+    q_lo, q_hi = qs[:half], qs[half:][::-1]  # pair p: rows (p, nq-1-p)
+    p_idx = jnp.arange(half, dtype=jnp.int32)
+    diag_mask = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+
+    def one_pair(carry, xs):
+        del carry
+        ql, qh, p = xs  # (B,C,KV,rep,hd) x2, scalar row index
+        row_hi = nq - 1 - p
+
+        def inner(st, l):
+            m, lsum, acc = st  # (2,B,KV,rep,C), ..., (2,B,KV,rep,C,hd_v)
+            sel = (l > p).astype(jnp.int32)  # 0 -> low row, 1 -> high row
+            j = jnp.where(sel == 0, l, l - p - 1)
+            diag = jnp.where(sel == 0, j == p, j == row_hi)
+            kb = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, 1)
+            q_blk = jnp.where(sel == 0, ql, qh)
+            sc = jnp.einsum(
+                "bqgrh,bkgh->bgrqk", q_blk.astype(jnp.float32),
+                kb.astype(jnp.float32),
+            ) * scale
+            sc = jnp.where(
+                jnp.logical_or(~diag, diag_mask)[None, None, None],
+                sc, _NEG_INF,
+            )
+            m_prev = m[sel]
+            l_prev = lsum[sel]
+            acc_prev = acc[sel]
+            m_new = jnp.maximum(m_prev, sc.max(-1))
+            pmat = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + pmat.sum(-1)
+            acc_new = acc_prev * alpha[..., None] + jnp.einsum(
+                "bgrqk,bkgh->bgrqh", pmat, vb.astype(jnp.float32)
+            )
+            pick = (jnp.arange(2) == sel)[:, None, None, None, None]
+            m = jnp.where(pick, m_new[None], m)
+            lsum = jnp.where(pick, l_new[None], lsum)
+            acc = jnp.where(pick[..., None], acc_new[None], acc)
+            return (m, lsum, acc), None
+
+        init = (
+            jnp.full((2, b, kv, rep, chunk), _NEG_INF, jnp.float32),
+            jnp.zeros((2, b, kv, rep, chunk), jnp.float32),
+            jnp.zeros((2, b, kv, rep, chunk, hd_v), jnp.float32),
+        )
+        (m, lsum, acc), _ = jax.lax.scan(
+            inner, init, jnp.arange(nq + 1, dtype=jnp.int32)
+        )
+        out = acc / jnp.maximum(lsum, 1e-30)[..., None]
+        return None, out.transpose(0, 1, 4, 2, 3, 5)  # (2,B,C,KV,rep,hd_v)
+
+    _, outs = jax.lax.scan(one_pair, None, (q_lo, q_hi, p_idx))
+    # outs: (half, 2, B, C, KV, rep, hd_v); row order: [p] and [nq-1-p]
+    lo = outs[:, 0]
+    hi = outs[:, 1][::-1]
+    rows = jnp.concatenate([lo, hi], 0)  # (nq, B, C, KV, rep, hd_v)
+    out = rows.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd_v)
+    return out.astype(q.dtype)

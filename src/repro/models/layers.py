@@ -1,0 +1,97 @@
+"""Shared model primitives: norms, RoPE, MLPs, embeddings, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import ax
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w1, w3, w2, b1=None, b3=None, b2=None):
+    """SwiGLU MLP: w2( silu(x w1) * (x w3) )."""
+    h = jnp.einsum("...d,df->...f", x, w1)
+    g = jnp.einsum("...d,df->...f", x, w3)
+    if b1 is not None:
+        h = h + b1
+        g = g + b3
+    h = jax.nn.silu(h) * g
+    h = ax(h, "batch", None, "ff") if h.ndim == 3 else h
+    out = jnp.einsum("...f,fd->...d", h, w2)
+    if b2 is not None:
+        out = out + b2
+    return out
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in**-0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Stable softmax XENT; logits (B, S, V) possibly vocab-sharded."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def chunked_ce_loss(
+    x: jnp.ndarray,  # final hidden states (B, S, d)
+    head: jnp.ndarray,  # (d, V)
+    labels: jnp.ndarray,  # (B, S)
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Cross entropy WITHOUT materializing the full (B, S, V) logits.
+
+    Scans over sequence chunks; the chunk body is rematted so the backward
+    pass recomputes each chunk's logits instead of stashing them — peak
+    logits memory drops from O(S*V) to O(chunk*V).
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    xs = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xc, lc = inp
+        logits = jnp.einsum("bsd,dv->bsv", xc, head)
+        logits = ax(logits, "batch", None, "vocab").astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + (logz - gold).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return total / (b * s)

@@ -1,0 +1,163 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries and KV are projected through low-rank latents; the decode cache
+stores only the compressed ``c_kv`` (kv_lora_rank) plus the shared RoPE key
+(qk_rope_dim) per token — the whole point of MLA: a 512+64-wide cache versus
+GQA's n_kv_heads*head_dim.  Decode uses the W_uk-absorption trick so scores
+are computed directly in latent space.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import apply_rope, rms_norm
+from .sharding import ax
+
+_NEG_INF = -1e30
+
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    qk_n, qk_r, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+
+    def lin(k, i, o):
+        return (jax.random.normal(k, (i, o)) * i**-0.5).astype(dtype)
+
+    return {
+        "w_dq": lin(ks[0], d, qr),
+        "q_norm": jnp.ones((qr,), dtype),
+        "w_uq": lin(ks[1], qr, h * (qk_n + qk_r)),
+        "w_dkv": lin(ks[2], d, kvr),
+        "kv_norm": jnp.ones((kvr,), dtype),
+        "w_kr": lin(ks[3], d, qk_r),
+        "w_uk": lin(ks[4], kvr, h * qk_n),
+        "w_uv": lin(ks[5], kvr, h * vh),
+        "wo": lin(ks[6], h * vh, d),
+    }
+
+
+def _queries(p, cfg: ModelConfig, x, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk_n, qk_r = cfg.qk_nope_dim, cfg.qk_rope_dim
+    c_q = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"], cfg.rms_eps)
+    q = jnp.einsum("bsr,rq->bsq", c_q, p["w_uq"]).reshape(b, s, h, qk_n + qk_r)
+    q_nope, q_rope = q[..., :qk_n], q[..., qk_n:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, cfg: ModelConfig, x, positions):
+    c_kv = rms_norm(
+        jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"], cfg.rms_eps
+    )
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_kr"])  # shared across heads
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def _mla_attend(p, cfg: ModelConfig, x, positions):
+    """Shared train/prefill body; returns (out, c_kv, k_rope)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk_n, qk_r, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c_kv, k_rope = _latents(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rq->bsq", c_kv, p["w_uk"]).reshape(b, s, h, qk_n)
+    v = jnp.einsum("bsr,rq->bsq", c_kv, p["w_uv"]).reshape(b, s, h, vh)
+    q_nope = ax(q_nope, "batch", None, "heads", None)
+    k_nope = ax(k_nope, "batch", None, "heads", None)
+    v = ax(v, "batch", None, "heads", None)
+    scale = (qk_n + qk_r) ** -0.5
+    # MLA goes chunked already at 4k: with 128 heads (8 per device) the
+    # dense f32 scores are (B,8,S,S) = 17 GiB/device at train_4k — the
+    # dominant memory-roofline site of the deepseek-v3 cell — while the
+    # chunked carry is only (2,B,8,C,hd).  (GQA archs with 1 local head
+    # keep the dense path at 4k; see attention.BLOCKWISE_THRESHOLD.)
+    if s >= 4096:
+        # chunked path: fold the shared rope key into per-head keys so the
+        # online-softmax kernel sees one (q, k, v) triple
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, qk_r))],
+            axis=-1,
+        )
+        from .blockwise import chunked_attention
+
+        out = chunked_attention(q_full, k_full, v, causal=True, scale=scale)
+        out = out.reshape(b, s, -1)
+    else:
+        scores = (
+            jnp.einsum("bshq,bthq->bhst", q_nope, k_nope)
+            + jnp.einsum("bshq,btq->bhst", q_rope, k_rope)
+        ) * scale
+        idx = jnp.arange(s)
+        mask = (idx[:, None] >= idx[None, :])[None, None]
+        w = jax.nn.softmax(
+            jnp.where(mask, scores.astype(jnp.float32), _NEG_INF), axis=-1
+        ).astype(x.dtype)
+        out = jnp.einsum("bhst,bthv->bshv", w, v).reshape(b, s, -1)
+    return jnp.einsum("bsq,qd->bsd", out, p["wo"]), c_kv, k_rope
+
+
+def mla_train(p, cfg: ModelConfig, x, positions):
+    """Full-sequence causal MLA (train / prefill): explicit k/v expansion."""
+    out, _, _ = _mla_attend(p, cfg, x, positions)
+    return out
+
+
+def mla_prefill(p, cfg: ModelConfig, x, positions, max_len: int):
+    """Full-sequence MLA returning the latent decode cache (c_kv, k_rope)."""
+    s = x.shape[1]
+    out, c_kv, k_rope = _mla_attend(p, cfg, x, positions)
+    if max_len > s:
+        c_kv = jnp.pad(c_kv, [(0, 0), (0, max_len - s), (0, 0)])
+        k_rope = jnp.pad(k_rope, [(0, 0), (0, max_len - s), (0, 0)])
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(p, cfg: ModelConfig, x, cache, position):
+    """One-token decode with latent cache + W_uk/W_uv absorption."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    qk_n, qk_r, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    q_nope, q_rope = _queries(p, cfg, x, position[:, None])  # (B,1,H,*)
+    c_new, kr_new = _latents(p, cfg, x, position[:, None])  # (B,1,kvr),(B,1,qk_r)
+
+    t = cache["c_kv"].shape[1]
+    rows = jnp.arange(b)
+    c_kv = cache["c_kv"].at[rows, position].set(c_new[:, 0])
+    k_rope = cache["k_rope"].at[rows, position].set(kr_new[:, 0])
+
+    # absorption: score_nope = (q_nope W_uk^T) . c_kv  in latent space
+    w_uk = p["w_uk"].reshape(kvr, h, qk_n)
+    q_lat = jnp.einsum("bshq,rhq->bshr", q_nope, w_uk)  # (B,1,H,kvr)
+    scale = (qk_n + qk_r) ** -0.5
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_lat, c_kv)
+        + jnp.einsum("bshq,btq->bhst", q_rope, k_rope)
+    ) * scale
+    mask = (jnp.arange(t)[None, :] <= position[:, None])[:, None, None, :]
+    w = jax.nn.softmax(
+        jnp.where(mask, scores.astype(jnp.float32), _NEG_INF), axis=-1
+    ).astype(x.dtype)
+    # output in latent space, then expand with W_uv
+    o_lat = jnp.einsum("bhst,btr->bshr", w, c_kv)  # (B,1,H,kvr)
+    w_uv = p["w_uv"].reshape(kvr, h, vh)
+    out = jnp.einsum("bshr,rhv->bshv", o_lat, w_uv).reshape(b, 1, -1)
+    return (
+        jnp.einsum("bsq,qd->bsd", out, p["wo"]),
+        {"c_kv": c_kv, "k_rope": k_rope},
+    )

@@ -1,0 +1,499 @@
+"""TransformerLM — one composable decoder-only LM covering all 10 assigned
+architectures (dense GQA / MLA+MoE / RWKV6 / Hymba hybrid / modality-stub
+backbones) with scan-over-layers, KV-cache decode and an optional MTP head.
+
+Design rules:
+  * params are plain dict pytrees; layers are STACKED on a leading L axis and
+    executed with ``lax.scan`` — HLO size is depth-independent (80-layer
+    InternVL compiles the same program as 1 layer), which keeps the 64
+    dry-run compiles tractable and production compile times flat.
+  * activations carry logical sharding annotations (models.sharding.ax);
+    the launcher decides what they mean.
+  * ``forward`` (train/prefill), ``decode_step`` (one token, cache), both
+    pure functions of (cfg, params, ...).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import (
+    attention_decode,
+    attention_prefill,
+    attention_train,
+    init_attention,
+    init_kv_cache,
+)
+from .layers import chunked_ce_loss, cross_entropy_loss, rms_norm, swiglu
+from .mla import init_mla, init_mla_cache, mla_decode, mla_prefill, mla_train
+from .moe import init_moe, moe_apply
+from .rwkv6 import (
+    channel_mix_decode,
+    channel_mix_train,
+    init_channel_mix,
+    init_rwkv6,
+    init_rwkv6_cache,
+    rwkv6_decode,
+    rwkv6_prefill,
+    rwkv6_train,
+)
+from .sharding import ax
+from .ssm import init_ssm, init_ssm_cache, ssm_decode, ssm_prefill, ssm_train
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _res_ax(cfg: ModelConfig, x):
+    """Residual-stream sharding between layers.
+
+    Attention archs carry the stream sequence-sharded over the model axis
+    (Megatron-style sequence parallelism): the lax.scan layer stash then
+    holds a 1/model-axis slice per layer instead of the full (B,S,d).
+    Recurrent archs (rwkv6 / hymba's SSM branch) scan over time, so their
+    stream stays batch-sharded only.
+    """
+    if cfg.attn_type in ("gqa", "mla"):
+        return ax(x, "batch", "seq_sp", None)
+    return ax(x, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_mlp_dense(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w1": (jax.random.normal(k1, (d, f)) * d**-0.5).astype(dtype),
+        "w3": (jax.random.normal(k2, (d, f)) * d**-0.5).astype(dtype),
+        "w2": (jax.random.normal(k3, (f, d)) * f**-0.5).astype(dtype),
+    }
+    if cfg.mlp_bias:
+        p["b1"] = jnp.zeros((f,), dtype)
+        p["b3"] = jnp.zeros((f,), dtype)
+        p["b2"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _init_layer(key, cfg: ModelConfig, moe: bool):
+    dtype = _dtype(cfg)
+    d = cfg.d_model
+    k_attn, k_mlp, k_x = jax.random.split(key, 3)
+    p: dict[str, Any] = {
+        "norm1": jnp.ones((d,), dtype),
+        "norm2": jnp.ones((d,), dtype),
+    }
+    if cfg.attn_type == "gqa":
+        p["attn"] = init_attention(k_attn, cfg, dtype)
+    elif cfg.attn_type == "mla":
+        p["attn"] = init_mla(k_attn, cfg, dtype)
+    elif cfg.attn_type == "rwkv6":
+        p["attn"] = init_rwkv6(k_attn, cfg, dtype)
+    elif cfg.attn_type == "hymba":
+        ka, km = jax.random.split(k_attn)
+        p["attn"] = init_attention(ka, cfg, dtype)
+        p["ssm"] = init_ssm(km, cfg, dtype)
+        p["norm_attn_out"] = jnp.ones((d,), dtype)
+        p["norm_ssm_out"] = jnp.ones((d,), dtype)
+        p["branch_beta"] = jnp.ones((2,), dtype)
+    else:
+        raise ValueError(cfg.attn_type)
+    if cfg.attn_type == "rwkv6":
+        p["mlp"] = init_channel_mix(k_mlp, cfg, dtype)
+    elif moe:
+        p["mlp"] = init_moe(k_mlp, cfg, dtype)
+    else:
+        p["mlp"] = _init_mlp_dense(k_mlp, cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict[str, Any]:
+    dtype = _dtype(cfg)
+    d, v = cfg.d_model, cfg.vocab_size
+    k_emb, k_layers, k_dense, k_head, k_mtp = jax.random.split(key, 5)
+    n_moe_layers = cfg.n_layers - cfg.n_dense_layers
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(k_emb, (v, d)) * 0.02).astype(dtype),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (d, v)) * d**-0.5
+        ).astype(dtype)
+    moe = cfg.mlp_type == "moe"
+    if moe and cfg.n_dense_layers:
+        params["layers_dense"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, moe=False)
+        )(jax.random.split(k_dense, cfg.n_dense_layers))
+    params["layers"] = jax.vmap(lambda k: _init_layer(k, cfg, moe=moe))(
+        jax.random.split(k_layers, n_moe_layers if moe else cfg.n_layers)
+    )
+    if cfg.mtp_depth:
+        km1, km2 = jax.random.split(k_mtp)
+        params["mtp"] = {
+            "proj": (jax.random.normal(km1, (2 * d, d)) * (2 * d) ** -0.5).astype(dtype),
+            "block": _init_layer(km2, cfg, moe=False),
+            "norm": jnp.ones((d,), dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _block_train(cfg: ModelConfig, p, x, positions, moe: bool, use_flash: bool):
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm1"], cfg.rms_eps)
+    if cfg.attn_type == "gqa":
+        a = attention_train(p["attn"], cfg, h, positions, use_flash)
+    elif cfg.attn_type == "mla":
+        a = mla_train(p["attn"], cfg, h, positions)
+    elif cfg.attn_type == "rwkv6":
+        a = rwkv6_train(p["attn"], cfg, h)
+    else:  # hymba: parallel attention + SSM heads on the same input
+        att = attention_train(p["attn"], cfg, h, positions, use_flash)
+        ssm = ssm_train(p["ssm"], cfg, h)
+        att = rms_norm(att, p["norm_attn_out"], cfg.rms_eps)
+        ssm = rms_norm(ssm, p["norm_ssm_out"], cfg.rms_eps)
+        beta = p["branch_beta"]
+        a = 0.5 * (beta[0] * att + beta[1] * ssm)
+    x = x + a
+    x = _res_ax(cfg, x)
+    h = rms_norm(x, p["norm2"], cfg.rms_eps)
+    if cfg.attn_type == "rwkv6":
+        m = channel_mix_train(p["mlp"], h)
+    elif moe:
+        m, aux = moe_apply(p["mlp"], cfg, h)
+    else:
+        m = swiglu(
+            h, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"],
+            p["mlp"].get("b1"), p["mlp"].get("b3"), p["mlp"].get("b2"),
+        )
+    x = x + m
+    return _res_ax(cfg, x), aux
+
+
+def _block_decode(cfg: ModelConfig, p, x, cache, position, moe: bool):
+    """One-token step. cache: this layer's cache pytree. Returns x, cache."""
+    h = rms_norm(x, p["norm1"], cfg.rms_eps)
+    if cfg.attn_type == "gqa":
+        a, kv = attention_decode(p["attn"], cfg, h, cache, position)
+        new_cache = kv
+    elif cfg.attn_type == "mla":
+        a, new_cache = mla_decode(p["attn"], cfg, h, cache, position)
+    elif cfg.attn_type == "rwkv6":
+        a, state, xprev = rwkv6_decode(p["attn"], cfg, h, cache)
+        new_cache = dict(cache, state=state, x_prev_tm=xprev)
+    else:  # hymba
+        att, kv = attention_decode(p["attn"], cfg, h, cache["kv"], position)
+        ssm_o, ssm_c = ssm_decode(p["ssm"], cfg, h, cache["ssm"])
+        att = rms_norm(att, p["norm_attn_out"], cfg.rms_eps)
+        ssm_o = rms_norm(ssm_o, p["norm_ssm_out"], cfg.rms_eps)
+        beta = p["branch_beta"]
+        a = 0.5 * (beta[0] * att + beta[1] * ssm_o)
+        new_cache = {"kv": kv, "ssm": ssm_c}
+    x = x + a
+    h = rms_norm(x, p["norm2"], cfg.rms_eps)
+    if cfg.attn_type == "rwkv6":
+        m, xprev_cm = channel_mix_decode(p["mlp"], h, cache["x_prev_cm"])
+        new_cache = dict(new_cache, x_prev_cm=xprev_cm)
+    elif moe:
+        m, _ = moe_apply(p["mlp"], cfg, h)
+    else:
+        m = swiglu(
+            h, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"],
+            p["mlp"].get("b1"), p["mlp"].get("b3"), p["mlp"].get("b2"),
+        )
+    return x + m, new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def embed_inputs(cfg: ModelConfig, params, tokens, frontend_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend is not None and frontend_embeds is not None:
+        nf = frontend_embeds.shape[1]
+        pad = x.shape[1] - nf
+        fe = jnp.pad(frontend_embeds.astype(x.dtype), ((0, 0), (0, pad), (0, 0)))
+        is_frontend = (jnp.arange(x.shape[1]) < nf)[None, :, None]
+        x = jnp.where(is_frontend, fe, x)
+    return ax(x, "batch", None, None)
+
+
+_REMAT_POLICIES = {
+    # save nothing: recompute the whole block in backward (min memory)
+    "full": None,
+    # save MXU outputs (matmul results), recompute elementwise ops
+    "dots": "dots_saveable",
+}
+
+
+def _maybe_remat(fn, remat: str | None):
+    if remat is None:
+        return fn
+    policy = _REMAT_POLICIES[remat]
+    if policy is None:
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=getattr(jax.checkpoint_policies, policy)
+    )
+
+
+def hidden_states(
+    cfg: ModelConfig,
+    params,
+    tokens,
+    frontend_embeds=None,
+    use_flash: bool = False,
+    remat: str | None = None,
+):
+    """tokens (B,S) -> (final-normed hidden (B,S,d), moe aux loss)."""
+    b, s = tokens.shape
+    x = embed_inputs(cfg, params, tokens, frontend_embeds)
+    x = _res_ax(cfg, x)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    moe = cfg.mlp_type == "moe"
+
+    def dense_body(carry, layer_p):
+        x, aux = carry
+        x, a = _block_train(cfg, layer_p, x, positions, False, use_flash)
+        return (x, aux + a), None
+
+    def body(carry, layer_p):
+        x, aux = carry
+        x, a = _block_train(cfg, layer_p, x, positions, moe, use_flash)
+        return (x, aux + a), None
+
+    dense_body = _maybe_remat(dense_body, remat)
+    body = _maybe_remat(body, remat)
+    aux = jnp.zeros((), jnp.float32)
+    if "layers_dense" in params:
+        (x, aux), _ = jax.lax.scan(dense_body, (x, aux), params["layers_dense"])
+    (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.rms_eps), aux
+
+
+def lm_head(cfg: ModelConfig, params):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    tokens,
+    frontend_embeds=None,
+    use_flash: bool = False,
+    remat: str | None = None,
+):
+    """tokens (B,S) -> logits (B,S,V), aux (moe load-balance loss)."""
+    x, aux = hidden_states(cfg, params, tokens, frontend_embeds, use_flash,
+                           remat)
+    logits = jnp.einsum("bsd,dv->bsv", x, lm_head(cfg, params))
+    return ax(logits, "batch", None, "vocab"), aux
+
+
+# below this sequence length the full logits tensor is cheap enough to
+# materialize; above it the loss scans over sequence chunks (rematted)
+_CE_CHUNK_THRESHOLD = 2048
+_CE_CHUNK = 512
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params,
+    tokens,
+    labels,
+    frontend_embeds=None,
+    aux_weight: float = 0.01,
+    use_flash: bool = False,
+    remat: str | None = None,
+):
+    s = tokens.shape[1]
+    x, aux = hidden_states(cfg, params, tokens, frontend_embeds, use_flash,
+                           remat)
+    head = lm_head(cfg, params)
+    if s >= _CE_CHUNK_THRESHOLD and s % _CE_CHUNK == 0:
+        loss = chunked_ce_loss(x, head, labels, _CE_CHUNK)
+    else:
+        logits = ax(jnp.einsum("bsd,dv->bsv", x, head),
+                    "batch", None, "vocab")
+        loss = cross_entropy_loss(logits, labels)
+    if cfg.mlp_type == "moe":
+        loss = loss + aux_weight * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# prefill: full-prompt forward that also builds the decode cache
+# ---------------------------------------------------------------------------
+def _block_prefill(cfg: ModelConfig, p, x, positions, moe: bool, max_len: int,
+                   use_flash: bool):
+    h = rms_norm(x, p["norm1"], cfg.rms_eps)
+    if cfg.attn_type == "gqa":
+        a, cache = attention_prefill(p["attn"], cfg, h, positions, max_len,
+                                     use_flash)
+    elif cfg.attn_type == "mla":
+        a, cache = mla_prefill(p["attn"], cfg, h, positions, max_len)
+    elif cfg.attn_type == "rwkv6":
+        a, cache = rwkv6_prefill(p["attn"], cfg, h)
+    else:  # hymba
+        att, kv = attention_prefill(p["attn"], cfg, h, positions, max_len,
+                                    use_flash)
+        ssm_o, ssm_c = ssm_prefill(p["ssm"], cfg, h)
+        att = rms_norm(att, p["norm_attn_out"], cfg.rms_eps)
+        ssm_o = rms_norm(ssm_o, p["norm_ssm_out"], cfg.rms_eps)
+        beta = p["branch_beta"]
+        a = 0.5 * (beta[0] * att + beta[1] * ssm_o)
+        cache = {"kv": kv, "ssm": ssm_c}
+    x = x + a
+    x = _res_ax(cfg, x)
+    h = rms_norm(x, p["norm2"], cfg.rms_eps)
+    if cfg.attn_type == "rwkv6":
+        m = channel_mix_train(p["mlp"], h)
+        cache = dict(cache, x_prev_cm=h[:, -1, :])
+    elif moe:
+        m, _ = moe_apply(p["mlp"], cfg, h)
+    else:
+        m = swiglu(
+            h, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"],
+            p["mlp"].get("b1"), p["mlp"].get("b3"), p["mlp"].get("b2"),
+        )
+    return _res_ax(cfg, x + m), cache
+
+
+def prefill(
+    cfg: ModelConfig,
+    params,
+    tokens,
+    frontend_embeds=None,
+    max_len: int | None = None,
+    use_flash: bool = False,
+):
+    """Process the whole prompt; return (last-token logits (B,V), cache).
+
+    The returned cache is layout-identical to init_cache(cfg, B, max_len)
+    so decode_step continues from position S.
+    """
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = embed_inputs(cfg, params, tokens, frontend_embeds)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    moe = cfg.mlp_type == "moe"
+
+    def mk_body(is_moe):
+        def body(x, layer_p):
+            x, cache = _block_prefill(cfg, layer_p, x, positions, is_moe,
+                                      max_len, use_flash)
+            return x, cache
+
+        return body
+
+    cache: dict[str, Any] = {"pos": jnp.full((b,), s, jnp.int32)}
+    if "layers_dense" in params:
+        x, dense_caches = jax.lax.scan(mk_body(False), x,
+                                       params["layers_dense"])
+        cache["layers_dense"] = dense_caches
+    x, layer_caches = jax.lax.scan(mk_body(moe), x, params["layers"])
+    cache["layers"] = layer_caches
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return ax(logits, "batch", "vocab"), cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def _init_layer_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if cfg.attn_type == "gqa":
+        return init_kv_cache(cfg, batch, max_len, dtype)
+    if cfg.attn_type == "mla":
+        return init_mla_cache(cfg, batch, max_len, dtype)
+    if cfg.attn_type == "rwkv6":
+        return init_rwkv6_cache(cfg, batch, dtype)
+    return {  # hymba
+        "kv": init_kv_cache(cfg, batch, max_len, dtype),
+        "ssm": init_ssm_cache(cfg, batch, dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked per-layer caches + current position."""
+    dtype = _dtype(cfg)
+
+    def stack(n):
+        one = _init_layer_cache(cfg, batch, max_len, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n, *a.shape)), one
+        )
+
+    cache: dict[str, Any] = {
+        "layers": stack(
+            cfg.n_layers - (cfg.n_dense_layers if cfg.mlp_type == "moe" else 0)
+        ),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.mlp_type == "moe" and cfg.n_dense_layers:
+        cache["layers_dense"] = stack(cfg.n_dense_layers)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache):
+    """tokens (B,) current token ids -> (logits (B,V), new cache)."""
+    b = tokens.shape[0]
+    position = cache["pos"]
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)
+    moe = cfg.mlp_type == "moe"
+
+    def mk_body(is_moe):
+        def body(x, scanned):
+            layer_p, layer_c = scanned
+            x, new_c = _block_decode(cfg, layer_p, x, layer_c, position, is_moe)
+            return x, new_c
+
+        return body
+
+    if "layers_dense" in cache:
+        x, new_dense = jax.lax.scan(
+            mk_body(False), x, (params["layers_dense"], cache["layers_dense"])
+        )
+    x, new_layers = jax.lax.scan(
+        mk_body(moe), x, (params["layers"], cache["layers"])
+    )
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    new_cache = dict(cache, layers=new_layers, pos=position + 1)
+    if "layers_dense" in cache:
+        new_cache["layers_dense"] = new_dense
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MTP (deepseek-v3 optional multi-token-prediction head)
+# ---------------------------------------------------------------------------
+def mtp_loss(cfg: ModelConfig, params, tokens, labels_next, labels_next2):
+    """Main next-token loss + depth-1 MTP loss sharing the embedding/head."""
+    logits, aux = forward(cfg, params, tokens)
+    main = cross_entropy_loss(logits, labels_next)
+    p = params["mtp"]
+    b, s = tokens.shape
+    h_last = jnp.take(params["embed"], labels_next, axis=0)  # teacher forcing
+    # combine current hidden stream with next-token embedding
+    x = jnp.concatenate(
+        [jnp.take(params["embed"], tokens, axis=0), h_last], axis=-1
+    )
+    x = jnp.einsum("bsd,dk->bsk", x, p["proj"])
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, _ = _block_train(cfg, p["block"], x, positions, False, False)
+    x = rms_norm(x, p["norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits2 = jnp.einsum("bsd,dv->bsv", x, head)
+    mtp = cross_entropy_loss(logits2, labels_next2)
+    return main + 0.3 * mtp + 0.01 * aux

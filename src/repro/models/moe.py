@@ -1,0 +1,226 @@
+"""Mixture-of-Experts MLP.
+
+Two dispatch paths:
+
+* ``_moe_apply_dense`` — single-device / no-mesh reference: top-k routing,
+  position-in-expert via one-hot cumsum over ALL tokens, scatter into a
+  dense (experts, capacity, d_model) buffer.  Correct everywhere, but on a
+  sharded mesh the global cumsum is a cross-device prefix sum and the
+  (N*k, d) replicated dispatch tensors dominate the roofline (measured:
+  the deepseek-v3 train cell was the most collective-bound of the sweep).
+
+* ``_moe_apply_ep`` — expert-parallel shard_map path used whenever a mesh
+  is installed and experts divide (after padding) the model axis: every
+  device routes its LOCAL tokens to its LOCAL expert shard (local cumsum,
+  local capacity buffer, local grouped matmuls) and one psum over the
+  ``model`` axis combines partial outputs.  No global prefix sum, no
+  replicated (N*k, d) tensors, and the only collective is the same-sized
+  all-reduce a dense TP MLP needs anyway.
+
+DeepSeek-V3 details supported: 1 shared expert always on, softmax gating
+over top-k renormalized probs, auxiliary load-balance loss.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import swiglu
+from .sharding import ax, batch_axes_in, current_mesh, current_rules
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * d**-0.5).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, d, f)) * d**-0.5).astype(dtype),
+        "w3": (jax.random.normal(ks[2], (e, d, f)) * d**-0.5).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (e, f, d)) * f**-0.5).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w1": (jax.random.normal(k1, (d, fs)) * d**-0.5).astype(dtype),
+            "w3": (jax.random.normal(k2, (d, fs)) * d**-0.5).astype(dtype),
+            "w2": (jax.random.normal(k3, (fs, d)) * fs**-0.5).astype(dtype),
+        }
+    return p
+
+
+def moe_apply(p, cfg: ModelConfig, x):
+    """x: (B,S,d) -> (out (B,S,d), aux load-balance loss)."""
+    mesh = current_mesh()
+    if mesh is not None and "model" in mesh.axis_names \
+            and mesh.shape["model"] > 1:
+        return _moe_apply_ep(p, cfg, x, mesh)
+    return _moe_apply_dense(p, cfg, x)
+
+
+def _moe_apply_ep(p, cfg: ModelConfig, x, mesh):
+    """Expert-parallel dispatch under shard_map (see module docstring).
+
+    Experts are padded up to a multiple of the model axis when needed
+    (granite's 40 -> 48 on a 16-way axis); padded experts get -inf router
+    logits and all-zero weights, so they are never selected and cost only
+    the pad ratio in expert-matmul FLOPs.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tp = mesh.shape["model"]
+    e_pad = -(-e // tp) * tp
+    router = p["router"]
+    w1, w3, w2 = p["w1"], p["w3"], p["w2"]
+    if e_pad != e:
+        router = jnp.pad(router, [(0, 0), (0, e_pad - e)])
+        pad_e = [(0, e_pad - e), (0, 0), (0, 0)]
+        w1, w3, w2 = (jnp.pad(w, pad_e) for w in (w1, w3, w2))
+    batch_ax = batch_axes_in()
+    if batch_ax is not None and b % _axsize(mesh, batch_ax) != 0:
+        batch_ax = None
+    other = tuple(a for a in mesh.axis_names if a != "model")
+    cap_loc = max(
+        int((b // max(_axsize(mesh, batch_ax), 1)) * s * k / e
+            * cfg.capacity_factor),
+        1,
+    )
+
+    @partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(
+            P(batch_ax, None, None),  # x: tokens local to the data shard
+            P(None, None),  # router replicated
+            P("model", None, None),  # expert weights: EP over model
+            P("model", None, None),
+            P("model", None, None),
+        ),
+        out_specs=(P(batch_ax, None, None), P()),
+        check_vma=False,
+    )
+    def body(xb, router_b, w1b, w3b, w2b):
+        bl, sl, _ = xb.shape
+        n = bl * sl
+        xf = xb.reshape(n, d)
+        logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), router_b)
+        logits = jnp.where(jnp.arange(e_pad) < e, logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_ids = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+        me = probs.mean(0)
+        ce = jax.nn.one_hot(top_ids[:, 0], e_pad).mean(0)
+        aux = e * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux, other) if other else aux
+        aux = jax.lax.pmean(aux, "model")  # identical on every model rank
+
+        e_loc = e_pad // tp
+        rank = jax.lax.axis_index("model")
+        lo = rank * e_loc
+        flat_ids = top_ids.reshape(n * k)
+        gate = top_p.reshape(n * k).astype(xb.dtype)
+        mine = (flat_ids >= lo) & (flat_ids < lo + e_loc)
+        le = jnp.where(mine, flat_ids - lo, 0)
+
+        # LOCAL position-in-expert: cumsum over this shard's tokens only
+        oh = jax.nn.one_hot(le, e_loc, dtype=jnp.int32) * mine[:, None]
+        pos = jnp.cumsum(oh, axis=0) - oh
+        flat_pos = jnp.take_along_axis(pos, le[:, None], 1)[:, 0]
+        keep = mine & (flat_pos < cap_loc)
+        flat_pos = jnp.where(keep, flat_pos, 0)
+
+        # index-only dispatch: scatter TOKEN IDS into slots (4-byte ints),
+        # then gather token vectors slot-wise — data movement is
+        # capacity-sized, never (N*k, d)-sized
+        le_oob = jnp.where(keep, le, e_loc)  # OOB rows drop
+        tok_of = jnp.full((e_loc, cap_loc), n, jnp.int32).at[
+            le_oob, flat_pos
+        ].set(jnp.arange(n * k, dtype=jnp.int32) // k, mode="drop")
+        gate_of = jnp.zeros((e_loc, cap_loc), xb.dtype).at[
+            le_oob, flat_pos
+        ].set(gate, mode="drop")
+        buf = jnp.take(xf, jnp.clip(tok_of, 0, n - 1).reshape(-1), axis=0)
+        buf = buf.reshape(e_loc, cap_loc, d)
+
+        h = jnp.einsum("ecd,edf->ecf", buf, w1b)
+        g = jnp.einsum("ecd,edf->ecf", buf, w3b)
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * g, w2b)
+
+        # combine: scatter-add slots back to their tokens (empty slots have
+        # gate 0 and an OOB token id -> dropped)
+        part = jnp.zeros((n + 1, d), xb.dtype).at[
+            tok_of.reshape(-1)
+        ].add((y * gate_of[..., None]).reshape(-1, d), mode="drop")[:n]
+        out = jax.lax.psum(part, "model")
+        return out.reshape(bl, sl, d), aux
+
+    out, aux = body(x, router, w1, w3, w2)
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        out = out + swiglu(x, sp["w1"], sp["w3"], sp["w2"])
+    return out, aux
+
+
+def _axsize(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _moe_apply_dense(p, cfg: ModelConfig, x):
+    """Reference dispatch (no mesh): global one-hot cumsum + dense buffer."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n = b * s
+    xf = x.reshape(n, d)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (N, E)
+    top_p, top_ids = jax.lax.top_k(probs, k)  # (N, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch-style): E * sum_e f_e * p_e
+    me = probs.mean(0)  # mean router prob per expert
+    ce = jax.nn.one_hot(top_ids[:, 0], e).mean(0)  # top-1 dispatch fraction
+    aux = e * jnp.sum(me * ce)
+
+    capacity = max(int(n * k / e * cfg.capacity_factor), 1)
+
+    flat_ids = top_ids.reshape(n * k)  # expert of each (token, slot)
+    flat_gate = top_p.reshape(n * k).astype(x.dtype)
+    oh = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)  # (N*k, E)
+    pos = jnp.cumsum(oh, axis=0) - oh  # position within expert
+    flat_pos = jnp.take_along_axis(pos, flat_ids[:, None], 1)[:, 0]
+    keep = flat_pos < capacity
+    flat_pos = jnp.where(keep, flat_pos, 0)
+
+    x_rep = jnp.repeat(xf, k, axis=0)  # (N*k, d) token per slot
+    contrib = jnp.where(keep[:, None], x_rep, 0)
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    buf = buf.at[flat_ids, flat_pos].add(contrib, mode="drop")
+    buf = ax(buf, "experts", None, None)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    h = jax.nn.silu(h) * g
+    y = jnp.einsum("ecf,efd->ecd", h, p["w2"])
+    y = ax(y, "experts", None, None)
+
+    gathered = y[flat_ids, flat_pos]  # (N*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0) * flat_gate[:, None]
+    out = gathered.reshape(n, k, d).sum(1).reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        out = out + swiglu(x, sp["w1"], sp["w3"], sp["w2"])
+    return out, aux

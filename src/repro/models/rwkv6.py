@@ -1,0 +1,230 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+data-dependent per-channel decay + squared-ReLU channel-mix.
+
+State is O(H * hd * hd) per layer regardless of context length — this arch
+(with hymba) carries the long_500k shape.  Training uses ``lax.scan`` over
+time (the Pallas ``rwkv6_scan`` kernel is the chunked TPU version; ref.py
+mirrors the math here).
+
+Simplifications vs the full Finch release (noted in DESIGN.md): single-lerp
+token shift (not ddlerp) and RMS head-norm instead of GroupNorm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import rms_norm
+
+_LORA = 64
+
+
+def init_rwkv6(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+
+    def lin(k, i, o, scale=None):
+        return (jax.random.normal(k, (i, o)) * (scale or i**-0.5)).astype(dtype)
+
+    h, hd = cfg.n_heads, cfg.head_dim_
+    return {
+        "mu": (jnp.ones((5, d)) * 0.5).astype(dtype),  # r,k,v,w,g shift mixes
+        "w_r": lin(ks[0], d, d),
+        "w_k": lin(ks[1], d, d),
+        "w_v": lin(ks[2], d, d),
+        "w_g": lin(ks[3], d, d),
+        "w_o": lin(ks[4], d, d),
+        "w0": (jnp.zeros((d,)) - 5.0).astype(dtype),  # base decay (slow)
+        "w_lora_a": lin(ks[5], d, _LORA, 0.01),
+        "w_lora_b": lin(ks[6], _LORA, d, 0.01),
+        "u": (jnp.zeros((h, hd))).astype(dtype),  # per-head bonus
+        "head_norm": jnp.ones((hd,), dtype),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": (jnp.ones((2, d)) * 0.5).astype(dtype),  # k, r shift mixes
+        "w_k": (jax.random.normal(k1, (d, f)) * d**-0.5).astype(dtype),
+        "w_v": (jax.random.normal(k2, (f, d)) * f**-0.5).astype(dtype),
+        "w_r": (jax.random.normal(k3, (d, d)) * d**-0.5).astype(dtype),
+    }
+
+
+def _token_shift(x, x_prev):
+    """x: (B,S,d). Returns x_{t-1} with x_prev filling t=0."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix_inputs(p, cfg: ModelConfig, x, x_prev):
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"]  # (5, d)
+    mix = lambda i: x + (xs - x) * mu[i]
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim_
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"]).reshape(b, s, h, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"]))
+    # data-dependent decay (Finch): w = exp(-exp(w0 + tanh(xw A) B))
+    dw = jnp.einsum(
+        "bsl,ld->bsd", jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["w_lora_a"])),
+        p["w_lora_b"],
+    )
+    logw = p["w0"].astype(jnp.float32) + dw.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw)).reshape(b, s, h, hd)  # in (0,1)
+    return r, k, v, g, w
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """The WKV6 recurrence (float32 state for stability).
+
+    r,k,v,w: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd).
+    Returns (out (B,S,H,hd), final state).
+      y_t = r_t . (S_{t-1} + (u*k_t) v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + uf[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = 16):
+    """Chunk-parallel WKV6 (jnp twin of kernels/rwkv6_scan; math identical
+    to wkv_scan).
+
+    The naive scan reads+writes the (B,H,hd,hd) fp32 state from HBM every
+    timestep — the dominant roofline term for rwkv6 training (measured
+    2527s memory term at train_4k).  The chunked form carries the state
+    once per ``chunk`` steps and turns the within-chunk work into MXU
+    matmuls via log-space decays:
+
+      y_t = (r_t * e^{L_{t-1}}) . S_0                    (inter-chunk)
+          + sum_{i<t} [(r_t e^{L_{t-1}}) . (k_i e^{-L_i})] v_i   (intra)
+          + (r_t . (u * k_t)) v_t                        (bonus diag)
+      S' = e^{L_C} * S_0 + sum_i (k_i e^{L_C - L_i}) v_i^T
+
+    with L the cumulative per-channel log-decay inside the chunk.  The
+    intra-chunk score exponent L_{t-1} - L_i (i < t) is a sum of
+    log-decays strictly AFTER i, hence <= 0 — computed as an explicit
+    (C,C) pairwise difference it can never overflow, for any decay rate
+    (the factored matmul form k_i e^{-L_i} can; see tests).  The
+    pairwise tensor is (B,C,C,H,hd) with C=16 — a few MB.
+    """
+    b, s, h, hd = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38))  # (B,S,H,hd) <= 0
+    uf = u.astype(jnp.float32)
+
+    resh = lambda a: a.reshape(b, n, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    rs, ks, vs, lws = resh(rf), resh(kf), resh(vf), resh(lw)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_), -1)  # strict i<t
+
+    def body(s0, inp):
+        rc, kc, vc, lwc = inp  # (B,C,H,hd)
+        L = jnp.cumsum(lwc, axis=1)  # inclusive
+        L_ex = L - lwc  # exclusive (L_{t-1})
+        rr = rc * jnp.exp(L_ex)  # <= |r|
+        y_inter = jnp.einsum("bchk,bhkj->bchj", rr, s0)
+        # stable pairwise decay: exponent <= 0 for every valid (t, i)
+        delta = L_ex[:, :, None] - L[:, None]  # (B,C,C,H,hd), [t,i]
+        delta = jnp.where(tri[None, :, :, None, None], delta, -jnp.inf)
+        scores = jnp.einsum("bthk,bihk,btihk->bhti", rc, kc,
+                            jnp.exp(delta))
+        y_intra = jnp.einsum("bhti,bihj->bthj", scores, vc)
+        diag = jnp.einsum("bchk,bchk->bch", rc, uf[None, None] * kc)
+        y = y_inter + y_intra + diag[..., None] * vc
+        k_tail = kc * jnp.exp(L[:, -1:] - L)  # <= |k|
+        s1 = jnp.exp(L[:, -1])[..., None] * s0 + jnp.einsum(
+            "bchk,bchj->bhkj", k_tail, vc
+        )
+        return s1, y
+
+    state, ys = jax.lax.scan(body, state.astype(jnp.float32),
+                             (rs, ks, vs, lws))
+    # (n, B, C, H, hd) -> (B, S, H, hd)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    return y, state
+
+
+# sequence length at which the chunked form takes over from the plain scan
+WKV_CHUNK_THRESHOLD = 64
+
+
+def rwkv6_train(p, cfg: ModelConfig, x, positions=None):
+    out, _ = rwkv6_prefill(p, cfg, x)
+    return out
+
+
+def rwkv6_prefill(p, cfg: ModelConfig, x):
+    """Full-sequence time-mix; also returns (final wkv state, last input) —
+    the O(1)-size decode cache pieces for this branch."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim_
+    x_prev = jnp.zeros((b, d), x.dtype)
+    r, k, v, g, w = _mix_inputs(p, cfg, x, x_prev)
+    state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    if s >= WKV_CHUNK_THRESHOLD and s % 16 == 0:
+        y, state = wkv_chunked(r, k, v, w, p["u"], state)
+    else:
+        y, state = wkv_scan(r, k, v, w, p["u"], state)
+    y = rms_norm(y, p["head_norm"], cfg.rms_eps).astype(x.dtype)
+    y = y.reshape(b, -1, d) * g.astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["w_o"])
+    return out, {"state": state, "x_prev_tm": x[:, -1, :]}
+
+
+def channel_mix_train(p, x, x_prev=None):
+    b, _, d = x.shape
+    xp = x_prev if x_prev is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, xp)
+    xk = x + (xs - x) * p["mu"][0]
+    xr = x + (xs - x) * p["mu"][1]
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"])
+    k = jnp.square(jax.nn.relu(k))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"]))
+    return r * jnp.einsum("bsf,fd->bsd", k, p["w_v"])
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) state per layer = (wkv state, x_prev_timemix, x_prev_chanmix)
+# ---------------------------------------------------------------------------
+def init_rwkv6_cache(cfg: ModelConfig, batch: int, dtype):
+    h, hd, d = cfg.n_heads, cfg.head_dim_, cfg.d_model
+    return {
+        "state": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "x_prev_tm": jnp.zeros((batch, d), dtype),
+        "x_prev_cm": jnp.zeros((batch, d), dtype),
+    }
+
+
+def rwkv6_decode(p_tm, cfg: ModelConfig, x, cache):
+    """x: (B,1,d). Returns (time-mix out, updated cache piece)."""
+    b, _, d = x.shape
+    r, k, v, g, w = _mix_inputs(p_tm, cfg, x, cache["x_prev_tm"])
+    y, state = wkv_scan(r, k, v, w, p_tm["u"], cache["state"])
+    y = rms_norm(y, p_tm["head_norm"], cfg.rms_eps).astype(x.dtype)
+    y = y.reshape(b, 1, d) * g.astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p_tm["w_o"])
+    return out, state, x[:, 0, :]
+
+
+def channel_mix_decode(p_cm, x, x_prev):
+    out = channel_mix_train(p_cm, x, x_prev)
+    return out, x[:, 0, :]

@@ -1,0 +1,140 @@
+"""Selective SSM (Mamba-style) branch used by Hymba's parallel heads.
+
+Diagonal selective state space: h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t,
+y_t = C_t h_t + D x_t, with data-dependent dt/B/C.  Depthwise causal conv of
+width 4 in front (implemented as explicit shifts — static shapes, no conv op
+needed).  State is (d_inner, ssm_state) per layer: O(1) in context length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+_CONV_W = 4
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d, di, st = cfg.d_model, cfg.d_inner_, cfg.ssm_state
+    ks = jax.random.split(key, 7)
+
+    def lin(k, i, o):
+        return (jax.random.normal(k, (i, o)) * i**-0.5).astype(dtype)
+
+    return {
+        "w_in": lin(ks[0], d, 2 * di),  # u and gate z
+        "conv_w": (jax.random.normal(ks[1], (_CONV_W, di)) * 0.5).astype(dtype),
+        "w_dt": lin(ks[2], di, di),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "w_b": lin(ks[3], di, st),
+        "w_c": lin(ks[4], di, st),
+        "a_log": jnp.zeros((di, st), dtype),  # A = -exp(a_log)
+        "d_skip": jnp.ones((di,), dtype),
+        "w_out": lin(ks[5], di, d),
+    }
+
+
+def _conv(u, conv_w, conv_cache=None):
+    """Depthwise causal width-4 conv via shifts. u: (B,S,di)."""
+    b, s, di = u.shape
+    if conv_cache is None:
+        pad = jnp.zeros((b, _CONV_W - 1, di), u.dtype)
+    else:
+        pad = conv_cache  # (B, 3, di) — last 3 inputs
+    full = jnp.concatenate([pad, u], axis=1)  # (B, S+3, di)
+    out = sum(
+        full[:, i : i + s, :] * conv_w[i] for i in range(_CONV_W)
+    )
+    new_cache = full[:, -(_CONV_W - 1) :, :]
+    return jax.nn.silu(out), new_cache
+
+
+def _ssm_params(p, u):
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,de->bse", u, p["w_dt"]) + p["dt_bias"]
+    ).astype(jnp.float32)
+    bmat = jnp.einsum("bsd,dn->bsn", u, p["w_b"]).astype(jnp.float32)
+    cmat = jnp.einsum("bsd,dn->bsn", u, p["w_c"]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, st)
+    return dt, bmat, cmat, a
+
+
+def selective_scan(u, dt, bmat, cmat, a, d_skip, h0, chunk: int = 16):
+    """u: (B,S,di); dt: (B,S,di); b/c: (B,S,st); a: (di,st); h0: (B,di,st).
+
+    Two-level scan: the outer lax.scan carries the (B,di,st) fp32 state
+    once per ``chunk`` steps; the inner steps are UNROLLED so XLA fuses
+    the whole chunk into one kernel and the state never round-trips HBM
+    between timesteps.  (Mamba-1's per-(di,st) data-dependent decay is
+    not matmul-separable like WKV6, so this is the chunking that exists;
+    measured 506.8 -> see EXPERIMENTS.md §Perf on the hymba train cell.)
+    The plain per-step scan is the chunk=1 special case.
+    """
+    b, s, di = u.shape
+    uf = u.astype(jnp.float32)
+
+    def step(h, ut, dtt, bt, ct):
+        da = jnp.exp(dtt[..., None] * a)  # (B,di,st)
+        h = da * h + (dtt * ut)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, ct)
+        return h, y
+
+    if chunk > 1 and s % chunk == 0 and s > chunk:
+        n = s // chunk
+        resh3 = lambda t: t.reshape(b, n, chunk, -1).transpose(1, 0, 2, 3)
+        xs = (resh3(uf), resh3(dt), resh3(bmat), resh3(cmat))
+
+        @jax.checkpoint  # rematted: backward recomputes the chunk instead
+        def chunk_body(h, inp):  # of stacking per-step (B,di,st) residuals
+            uc, dc, bc, cc = inp  # (B,C,*)
+            ys = []
+            for i in range(chunk):  # unrolled: fuses into one kernel
+                h, y = step(h, uc[:, i], dc[:, i], bc[:, i], cc[:, i])
+                ys.append(y)
+            return h, jnp.stack(ys, axis=1)  # (B,C,di)
+
+        h, ys = jax.lax.scan(chunk_body, h0, xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    else:
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (uf, dt, bmat, cmat))
+        h, ys = jax.lax.scan(lambda h, i: step(h, *i), h0, xs)
+        y = jnp.moveaxis(ys, 0, 1)
+    return y + uf * d_skip.astype(jnp.float32), h
+
+
+def ssm_train(p, cfg: ModelConfig, x):
+    out, _ = ssm_prefill(p, cfg, x)
+    return out
+
+
+def ssm_prefill(p, cfg: ModelConfig, x):
+    """x: (B,S,d) -> ((B,S,d), decode cache {h, conv})."""
+    uz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    u, z = jnp.split(uz, 2, axis=-1)
+    u, conv_cache = _conv(u, p["conv_w"])
+    dt, bmat, cmat, a = _ssm_params(p, u)
+    h0 = jnp.zeros((x.shape[0], cfg.d_inner_, cfg.ssm_state), jnp.float32)
+    y, h = selective_scan(u, dt, bmat, cmat, a, p["d_skip"], h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"h": h, "conv": conv_cache}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner_, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_W - 1, cfg.d_inner_), dtype),
+    }
+
+
+def ssm_decode(p, cfg: ModelConfig, x, cache):
+    """x: (B,1,d). Returns (out (B,1,d), new cache)."""
+    uz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    u, z = jnp.split(uz, 2, axis=-1)
+    u, conv_cache = _conv(u, p["conv_w"], cache["conv"])
+    dt, bmat, cmat, a = _ssm_params(p, u)
+    y, h = selective_scan(u, dt, bmat, cmat, a, p["d_skip"], cache["h"])
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"h": h, "conv": conv_cache}

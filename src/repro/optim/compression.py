@@ -1,0 +1,120 @@
+"""Gradient compression for the data-parallel all-reduce — the paper's §7
+quantizer applied to distributed training (beyond-paper extension, see
+DESIGN.md §3).
+
+b-bit uniform quantization with per-tensor (lo, step), optional dither, and
+ERROR FEEDBACK: the quantization residual is carried into the next step's
+gradient, so the scheme is unbiased in the long run and training converges
+at full-precision quality (tested in test_substrate.py).
+
+Wire format per tensor per step: int codes (b bits) + 2 fp32 scalars — an
+8x reduction at b=4 on the all-reduce payload vs fp32 gradients.  The paper
+supplies the distortion bound: uniform quantization error variance is
+step^2/12 = (2^r / 2^b)^2 / 12 (§7), which the error-feedback loop turns
+into a vanishing bias.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class GradCompressionConfig:
+    bits: int = 4
+    dither: bool = False
+    enabled: bool = True
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def _quantize_leaf(g, bits: int):
+    """Uniform b-bit quantization of one tensor; returns reconstruction.
+
+    This is the jnp twin of kernels/quantize (which is the TPU Pallas
+    path); the math must match §7: midpoint reconstruction, error <= step/2.
+    """
+    gf = g.astype(jnp.float32)
+    lo = gf.min()
+    hi = gf.max()
+    n_levels = 1 << bits
+    step = jnp.maximum((hi - lo) / n_levels, 1e-30)
+    q = jnp.clip(jnp.floor((gf - lo) / step), 0, n_levels - 1)
+    return lo + (q + 0.5) * step
+
+
+def compress_gradients(cfg: GradCompressionConfig, grads, error_feedback):
+    """Returns (decoded grads as the receiver would see them, new error
+    feedback state).  In the jit'd train step this models the exact math of
+    quantize -> all-reduce -> dequantize; the wire encoding itself is the
+    Pallas quantize kernel + entropy coder at the transport layer."""
+    if not cfg.enabled:
+        return grads, error_feedback
+
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        recon = _quantize_leaf(corrected, cfg.bits)
+        new_e = corrected - recon
+        return recon.astype(g.dtype), new_e
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_feedback)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(tree, [o[0] for o in out]),
+        jax.tree.unflatten(tree, [o[1] for o in out]),
+    )
+
+
+def wire_quantized_psum(
+    grads, axis: str, bits: int = 4, key=None, n_ranks: int | None = None
+):
+    """§7's dithered quantizer applied to the data-parallel gradient sum
+    AT THE WIRE LEVEL (used under shard_map manual over ``axis``).
+
+    Per tensor: shared scale = pmax of local max-|g|; each rank quantizes
+    its local gradient to ``bits``-bit signed codes with UNIFORM DITHER
+    (unbiased — §7's dithered quantization), the integer codes are
+    psum'd in the smallest carrier that cannot overflow (int8 for
+    <= 16 ranks at 4 bits), and the sum is dequantized.  Wire bytes drop
+    2x vs bf16 gradients (4x vs f32); the dither keeps E[decoded] equal
+    to the true mean gradient.
+    """
+    import numpy as np
+
+    n = n_ranks if n_ranks is not None else jax.lax.axis_size(axis)
+    qmax = (1 << (bits - 1)) - 1
+    carrier = jnp.int8 if n * qmax <= 127 else jnp.int16
+
+    leaves, tree = jax.tree.flatten(grads)
+    keys = (
+        jax.random.split(key, len(leaves)) if key is not None
+        else [None] * len(leaves)
+    )
+
+    out = []
+    for g, k in zip(leaves, keys):
+        gf = g.astype(jnp.float32)
+        scale = jax.lax.pmax(jnp.abs(gf).max(), axis)
+        scale = jnp.maximum(scale, 1e-30)
+        dither = (
+            jax.random.uniform(k, gf.shape, minval=-0.5, maxval=0.5)
+            if k is not None else 0.0
+        )
+        codes = jnp.clip(
+            jnp.round(gf / scale * qmax + dither), -qmax, qmax
+        ).astype(carrier)
+        total = jax.lax.psum(codes, axis)  # the only cross-rank traffic
+        out.append((total.astype(jnp.float32) * scale / qmax / n).astype(g.dtype))
+    return jax.tree.unflatten(tree, out)
+
+
+def payload_bytes(params, bits: int) -> int:
+    """All-reduce payload per step under compression (codes + scales)."""
+    n = sum(p.size for p in jax.tree.leaves(params))
+    n_tensors = len(jax.tree.leaves(params))
+    return n * bits // 8 + n_tensors * 8

@@ -1,0 +1,15 @@
+"""repro.runtime — fault tolerance: restart, preemption, stragglers."""
+
+from .fault_tolerance import (
+    Preemption,
+    PreemptionSchedule,
+    StragglerMonitor,
+    TrainLoop,
+)
+
+__all__ = [
+    "Preemption",
+    "PreemptionSchedule",
+    "StragglerMonitor",
+    "TrainLoop",
+]

@@ -1,0 +1,64 @@
+import numpy as np
+import pytest
+
+from repro.core.tree import Forest, ForestMeta, Tree
+
+
+def random_tree(rng, d=5, max_depth=8, n_fit_syms=2, p_split=0.7, n_bins=16):
+    feature, thresh, left, right, fit = [], [], [], [], []
+
+    def build(depth):
+        i = len(feature)
+        feature.append(0)
+        thresh.append(0)
+        left.append(-1)
+        right.append(-1)
+        fit.append(int(rng.integers(n_fit_syms)))
+        if depth < max_depth and rng.random() < p_split:
+            feature[i] = int(rng.integers(d))
+            thresh[i] = int(rng.integers(n_bins))
+            left[i] = build(depth + 1)
+            right[i] = build(depth + 1)
+        else:
+            feature[i] = -1
+            thresh[i] = -1
+        return i
+
+    build(0)
+    return Tree(
+        np.array(feature),
+        np.array(thresh),
+        np.array(left),
+        np.array(right),
+        np.array(fit, dtype=np.int64),
+    )
+
+
+def random_forest(
+    seed=0, n_trees=20, d=5, max_depth=8, task="classification",
+    n_classes=2, n_bins=16, n_fit_values=40,
+):
+    rng = np.random.default_rng(seed)
+    n_fit_syms = n_classes if task == "classification" else n_fit_values
+    meta = ForestMeta(
+        n_features=d,
+        task=task,
+        n_classes=n_classes,
+        n_bins_per_feature=np.full(d, n_bins, np.int32),
+        n_train_obs=1000,
+    )
+    trees = [
+        random_tree(rng, d, max_depth, n_fit_syms, n_bins=n_bins)
+        for _ in range(n_trees)
+    ]
+    fit_values = (
+        rng.normal(size=n_fit_values)
+        if task == "regression"
+        else np.zeros(0)
+    )
+    return Forest(trees=trees, meta=meta, fit_values=fit_values)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

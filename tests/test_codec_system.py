@@ -1,0 +1,179 @@
+"""System tests: Algorithm 1 end-to-end (lossless), prediction from the
+compressed format (§5), clustering behaviour (§3.2), lossy scheme (§7)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressedForest,
+    compress_forest,
+    decompress_forest,
+    entropy_bits,
+    iter_trees,
+    predict_compressed,
+    quantize_fits,
+    subsample_trees,
+)
+from repro.core.bregman import cluster_models, kl_kmeans
+
+from conftest import random_forest
+
+
+class TestLossless:
+    @pytest.mark.parametrize(
+        "task,n_classes", [("classification", 2), ("classification", 5),
+                           ("regression", 2)]
+    )
+    def test_roundtrip(self, task, n_classes):
+        forest = random_forest(seed=3, task=task, n_classes=n_classes)
+        comp = compress_forest(forest)
+        back = decompress_forest(CompressedForest.from_bytes(comp.to_bytes()))
+        assert forest.equals(back)
+
+    def test_roundtrip_deep_narrow(self):
+        forest = random_forest(seed=7, n_trees=5, d=2, max_depth=14, n_bins=4)
+        comp = compress_forest(forest)
+        assert decompress_forest(
+            CompressedForest.from_bytes(comp.to_bytes())
+        ).equals(forest)
+
+    def test_single_leaf_trees(self):
+        forest = random_forest(seed=1, n_trees=4, max_depth=0)
+        comp = compress_forest(forest)
+        assert decompress_forest(
+            CompressedForest.from_bytes(comp.to_bytes())
+        ).equals(forest)
+
+    def test_size_report_buckets_sum(self):
+        forest = random_forest(seed=5)
+        rep = compress_forest(forest).size_report()
+        assert rep["total"] == (
+            rep["structure"] + rep["var_names"] + rep["split_values"]
+            + rep["fits"] + rep["dictionaries"]
+        )
+        # serialization framing overhead should be small
+        assert rep["total_serialized"] < rep["total"] * 1.4 + 256
+
+
+class TestCompressedPrediction:
+    def test_identical_predictions(self, rng):
+        forest = random_forest(seed=11, n_trees=15)
+        comp = compress_forest(forest)
+        x = rng.integers(0, 16, size=(64, 5))
+        got = predict_compressed(comp, x)
+        votes = np.zeros((64, 2), np.int64)
+        for t in forest.trees:
+            for i in range(64):
+                votes[i, int(t.predict_one(x[i]))] += 1
+        assert np.array_equal(got, votes.argmax(1))
+
+    def test_streaming_trees_equal_original(self):
+        forest = random_forest(seed=13, n_trees=8)
+        comp = compress_forest(forest)
+        for orig, streamed in zip(forest.trees, iter_trees(comp)):
+            assert orig.equals(streamed)
+
+
+class TestClustering:
+    def test_identical_models_collapse_to_one_cluster(self):
+        base = np.array([50, 30, 15, 5], float)
+        counts = np.tile(base, (10, 1))
+        res = cluster_models(counts, alpha_bits=20.0, k_max=6)
+        assert res.k == 1
+        assert res.coding_loss_bits < 1e-6
+
+    def test_distinct_models_separate_when_alpha_small(self):
+        a = np.array([1000, 1, 1, 1], float)
+        b = np.array([1, 1, 1, 1000], float)
+        counts = np.stack([a, a, a, b, b, b])
+        res = cluster_models(counts, alpha_bits=1.0, k_max=4)
+        assert res.k >= 2
+        g1 = set(res.assignments[:3])
+        g2 = set(res.assignments[3:])
+        assert g1.isdisjoint(g2)
+
+    def test_large_alpha_forces_few_clusters(self):
+        """Paper §6: 64-bit dictionary lines (large alpha) => 2-3 clusters;
+        cheaper lines => more clusters."""
+        rng = np.random.default_rng(0)
+        counts = rng.integers(1, 60, size=(30, 8)).astype(float) * 10
+        k_cheap = cluster_models(counts, alpha_bits=2.0, k_max=12).k
+        k_costly = cluster_models(counts, alpha_bits=5000.0, k_max=12).k
+        assert k_costly <= k_cheap
+        assert k_costly <= 3
+
+    def test_centroid_is_weighted_mean(self):
+        counts = np.array([[80, 20], [20, 80]], float)
+        _, cent, _ = kl_kmeans(counts, k=1)
+        assert np.allclose(cent[0], [0.5, 0.5], atol=1e-6)
+
+    def test_objective_beats_no_clustering_and_single_model(self):
+        """Eq. (6) at the chosen K is <= both extremes (K=1, K=M)."""
+        rng = np.random.default_rng(1)
+        half1 = rng.multinomial(500, [0.7, 0.1, 0.1, 0.1], size=8).astype(float)
+        half2 = rng.multinomial(500, [0.1, 0.1, 0.1, 0.7], size=8).astype(float)
+        counts = np.vstack([half1, half2])
+        alpha = 30.0
+        res = cluster_models(counts, alpha_bits=alpha, k_max=16)
+        # K = M extreme
+        loss_m = 0.0
+        dict_m = alpha * sum((c > 0).sum() for c in counts)
+        # K = 1 extreme
+        _, _, loss_1 = kl_kmeans(counts, 1)
+        dict_1 = alpha * ((counts.sum(0) > 0).sum())
+        assert res.objective_bits <= loss_m + dict_m + 1e-6
+        assert res.objective_bits <= loss_1 + dict_1 + 1e-6
+
+
+class TestLossy:
+    def test_subsample(self):
+        forest = random_forest(seed=17, n_trees=30, task="regression")
+        sub = subsample_trees(forest, 10, seed=0)
+        assert sub.n_trees == 10
+
+        def stream_bytes(n):
+            # dictionaries are a fixed overhead shared by any |A0| (SS7
+            # assumes it away); linear scaling applies to the coded streams
+            rep = compress_forest(
+                subsample_trees(forest, n, seed=0)
+            ).size_report()
+            return rep["total"] - rep["dictionaries"]
+
+        # SS7 claims the coded size is linear in |A0| ("linear threads" of
+        # Figs 2-3).  Fixed per-stream costs offset the line, so check the
+        # affine interpolation: size(20) ~ midpoint of size(10), size(30).
+        s10, s20, s30 = stream_bytes(10), stream_bytes(20), stream_bytes(30)
+        assert s10 < s20 < s30
+        mid = 0.5 * (s10 + s30)
+        assert abs(s20 - mid) < 0.15 * mid
+        # and the marginal cost per tree is roughly constant
+        assert 0.5 < (s30 - s20) / (s20 - s10) < 2.0
+
+    def test_quantization_distortion_bound(self):
+        forest = random_forest(seed=19, n_trees=10, task="regression")
+        values = forest.fit_values
+        span = values.max() - values.min()
+        for bits in (4, 6, 8):
+            _, max_err = quantize_fits(forest, bits)
+            assert max_err <= span / (1 << bits) / 2 + 1e-12
+
+    def test_quantized_forest_compresses_smaller(self):
+        forest = random_forest(
+            seed=23, n_trees=20, task="regression", n_fit_values=500
+        )
+        full = compress_forest(forest).size_report()
+        q4, _ = quantize_fits(forest, 4)
+        small = compress_forest(q4).size_report()
+        assert (
+            small["fits"] + small["dictionaries"]
+            < full["fits"] + full["dictionaries"]
+        )
+
+    def test_quantized_still_lossless_roundtrip(self):
+        """Lossy = preprocess-then-lossless: the quantized forest itself
+        roundtrips exactly."""
+        forest = random_forest(seed=29, n_trees=8, task="regression")
+        q, _ = quantize_fits(forest, 5)
+        comp = compress_forest(q)
+        assert decompress_forest(
+            CompressedForest.from_bytes(comp.to_bytes())
+        ).equals(q)

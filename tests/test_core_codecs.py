@@ -1,0 +1,128 @@
+"""Unit tests for the entropy-coding primitives (paper §2.2, §3.1)."""
+import numpy as np
+import pytest
+
+from repro.core.arithmetic import ArithmeticCode
+from repro.core.bitio import BitReader, BitWriter
+from repro.core.huffman import HuffmanCode, entropy_bits
+from repro.core.lz import lzw_decode_bits, lzw_encode_bits
+from repro.core.zaks import zaks_decode, zaks_encode, zaks_is_valid
+
+from conftest import random_tree
+
+
+class TestBitIO:
+    def test_roundtrip(self, rng):
+        bits = rng.integers(0, 2, size=999)
+        w = BitWriter()
+        w.write_bitstring(bits)
+        r = BitReader(w.getvalue())
+        back = [r.read_bit() for _ in range(len(bits))]
+        assert np.array_equal(back, bits)
+
+    def test_write_bits_msb_first(self):
+        w = BitWriter()
+        w.write_bits(0b1011, 4)
+        w.write_bits(0b0010, 4)
+        assert w.getvalue() == bytes([0b10110010])
+
+
+class TestHuffman:
+    @pytest.mark.parametrize("b", [2, 3, 17, 64])
+    def test_roundtrip(self, rng, b):
+        freqs = rng.integers(1, 100, size=b)
+        code = HuffmanCode.from_freqs(freqs)
+        syms = rng.integers(0, b, size=500)
+        assert np.array_equal(code.decode(code.encode(syms), 500), syms)
+
+    def test_within_one_bit_of_entropy(self, rng):
+        freqs = np.array([900, 50, 30, 15, 5], dtype=float)
+        code = HuffmanCode.from_freqs(freqs)
+        avg = code.encoded_bits(freqs) / freqs.sum()
+        h = entropy_bits(freqs) / freqs.sum()
+        assert h <= avg < h + 1
+
+    def test_single_symbol_alphabet(self):
+        code = HuffmanCode.from_freqs(np.array([0, 10, 0]))
+        data = code.encode([1, 1, 1])
+        assert np.array_equal(code.decode(data, 3), [1, 1, 1])
+
+    def test_mismatched_distribution_still_lossless(self, rng):
+        """Paper §5: Huffman stays lossless under a mismatched code Q, as
+        long as Q covers the support."""
+        q = np.array([1, 1, 1, 97], dtype=float)  # badly mismatched
+        code = HuffmanCode.from_freqs(q)
+        syms = rng.integers(0, 4, size=300)  # ~uniform P
+        assert np.array_equal(code.decode(code.encode(syms), 300), syms)
+
+
+class TestArithmetic:
+    @pytest.mark.parametrize("b", [2, 5, 30])
+    def test_roundtrip(self, rng, b):
+        freqs = rng.integers(1, 50, size=b)
+        code = ArithmeticCode(freqs)
+        syms = rng.integers(0, b, size=400)
+        assert np.array_equal(code.decode(code.encode(syms), 400), syms)
+
+    def test_beats_huffman_on_skewed_binary(self, rng):
+        """§4: arithmetic coding outperforms Huffman for skewed binary
+        alphabets (Huffman is stuck at 1 bit/symbol)."""
+        p = np.array([0.97, 0.03])
+        syms = rng.choice(2, size=4000, p=p)
+        freqs = np.bincount(syms, minlength=2)
+        arith_bits = len(ArithmeticCode(freqs).encode(syms)) * 8
+        huff_bits = len(HuffmanCode.from_freqs(freqs).encode(syms)) * 8
+        assert arith_bits < 0.5 * huff_bits
+        # within ~2 bits + byte padding of empirical entropy
+        assert arith_bits <= entropy_bits(freqs) + 2 + 8
+
+
+class TestLZW:
+    def test_roundtrip(self, rng):
+        bits = rng.integers(0, 2, size=5000).astype(np.uint8)
+        assert np.array_equal(
+            lzw_decode_bits(lzw_encode_bits(bits), 5000), bits
+        )
+
+    def test_compresses_repetitive_input(self):
+        bits = np.tile(np.array([1, 1, 0, 1, 0, 0, 1, 0, 0, 0], np.uint8), 3000)
+        payload = lzw_encode_bits(bits)
+        # LZW rate approaches the (here: very low) entropy asymptotically
+        assert len(payload) * 8 < 0.35 * len(bits)
+
+    def test_empty(self):
+        assert len(lzw_decode_bits(lzw_encode_bits(np.zeros(0, np.uint8)), 0)) == 0
+
+    def test_kwkwk_case(self):
+        # classic LZW corner: pattern that references the just-added entry
+        bits = np.array([0, 0, 0, 0, 0, 0, 0], np.uint8)
+        assert np.array_equal(lzw_decode_bits(lzw_encode_bits(bits), 7), bits)
+
+
+class TestZaks:
+    def test_roundtrip(self, rng):
+        for _ in range(20):
+            t = random_tree(rng)
+            z = zaks_encode(t)
+            assert zaks_is_valid(z)
+            assert len(z) == t.n_nodes  # 2n+1 with n internal nodes
+            left, right, leaf = zaks_decode(z)
+            assert np.array_equal(left, t.children_left)
+            assert np.array_equal(right, t.children_right)
+            assert np.array_equal(leaf, t.is_leaf)
+
+    def test_paper_example(self):
+        """Fig. 1's sequence is a feasible Zaks sequence."""
+        s = np.array([int(c) for c in "1111001001001111001000"], np.uint8)
+        # paper prints the 22-bit prefix; a full sequence has 2n+1 bits, so
+        # append the final 0 of the right-most missing subtree
+        s = np.append(s, 0)
+        assert zaks_is_valid(s)
+        left, right, leaf = zaks_decode(s)
+        assert (~leaf).sum() == 11  # 11 internal nodes
+
+    def test_invalid_sequences_rejected(self):
+        assert not zaks_is_valid(np.array([0, 1, 0], np.uint8))  # starts with 0
+        assert not zaks_is_valid(np.array([1, 0, 0, 0], np.uint8))  # even len
+        assert not zaks_is_valid(np.array([1, 0, 0, 1, 0], np.uint8))  # prefix hits
+        assert zaks_is_valid(np.array([0], np.uint8))  # single leaf is a tree

@@ -1,0 +1,129 @@
+"""Tests for the JAX random-forest substrate + full pipeline integration."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressedForest,
+    compress_forest,
+    decompress_forest,
+    estimate_sigma2,
+    predict_compressed,
+)
+from repro.data.tabular import TabularSpec, make_dataset
+from repro.forest import (
+    fit_binner,
+    light_compress,
+    light_report,
+    per_tree_predictions,
+    predict_forest,
+    standard_compress,
+    to_compact_forest,
+    train_forest,
+)
+
+
+@pytest.fixture(scope="module")
+def cls_setup():
+    spec = TabularSpec("t", 800, 6, "classification", 2, 1)
+    x, y, cat = make_dataset(spec, seed=1)
+    binner = fit_binner(x, n_bins=16, categorical=cat)
+    model = train_forest(
+        x, y, binner, n_trees=12, max_depth=6, task="classification",
+        n_classes=2, seed=0, chunk=12,
+    )
+    return x, y, binner, model
+
+
+@pytest.fixture(scope="module")
+def reg_setup():
+    spec = TabularSpec("t", 600, 5, "regression")
+    x, y, cat = make_dataset(spec, seed=2)
+    binner = fit_binner(x, n_bins=16, categorical=cat)
+    model = train_forest(
+        x, y, binner, n_trees=10, max_depth=6, task="regression", seed=0,
+        chunk=10,
+    )
+    return x, y, binner, model
+
+
+class TestTraining:
+    def test_classification_learns(self, cls_setup):
+        x, y, _, model = cls_setup
+        acc = (predict_forest(model, x) == y).mean()
+        assert acc > 0.85  # in-sample fit of an unpruned forest
+
+    def test_regression_learns(self, reg_setup):
+        x, y, _, model = reg_setup
+        pred = predict_forest(model, x)
+        ss_res = ((pred - y) ** 2).sum()
+        ss_tot = ((y - y.mean()) ** 2).sum()
+        assert 1 - ss_res / ss_tot > 0.5
+
+    def test_trees_are_diverse(self, cls_setup):
+        """Bootstrap + mtry must decorrelate trees (the i.i.d. premise)."""
+        x, _, _, model = cls_setup
+        preds = per_tree_predictions(model, x[:100])
+        disagreement = (preds != preds[0:1]).mean()
+        assert disagreement > 0.01
+
+    def test_no_nans(self, cls_setup):
+        _, _, _, model = cls_setup
+        assert np.isfinite(model.node_fit).all()
+
+
+class TestCompactConversion:
+    def test_preorder_and_prediction_equivalence(self, cls_setup):
+        x, _, binner, model = cls_setup
+        forest = to_compact_forest(model)
+        xb = binner.transform(x[:128])
+        heap_pred = predict_forest(model, x[:128])
+        votes = np.zeros((128, 2), np.int64)
+        for t in forest.trees:
+            for i in range(128):
+                votes[i, int(t.predict_one(xb[i]))] += 1
+        assert np.array_equal(votes.argmax(1), heap_pred)
+
+    def test_regression_fit_dictionary(self, reg_setup):
+        _, _, _, model = reg_setup
+        forest = to_compact_forest(model)
+        assert len(forest.fit_values) > 0
+        for t in forest.trees:
+            assert t.node_fit.max() < len(forest.fit_values)
+
+
+class TestFullPipeline:
+    def test_trained_forest_roundtrip_and_prediction(self, cls_setup):
+        x, _, binner, model = cls_setup
+        forest = to_compact_forest(model)
+        comp = compress_forest(forest)
+        back = decompress_forest(CompressedForest.from_bytes(comp.to_bytes()))
+        assert forest.equals(back)
+        xb = binner.transform(x[:64])
+        assert np.array_equal(
+            predict_compressed(comp, xb), predict_forest(model, x[:64])
+        )
+
+    def test_beats_light_compression(self, cls_setup):
+        """Paper's headline: our scheme < light < standard, on a trained
+        classification forest."""
+        _, _, _, model = cls_setup
+        forest = to_compact_forest(model)
+        ours = compress_forest(forest).size_report()["total_serialized"]
+        light = len(light_compress(forest))
+        standard = len(standard_compress(forest))
+        assert ours < light < standard
+
+    def test_sigma2_estimator_positive(self, reg_setup):
+        x, _, _, model = reg_setup
+        preds = per_tree_predictions(model, x[:200])
+        assert estimate_sigma2(preds) > 0
+
+
+class TestBaselines:
+    def test_light_report_buckets(self, cls_setup):
+        _, _, _, model = cls_setup
+        forest = to_compact_forest(model)
+        rep = light_report(forest)
+        assert rep["total"] == sum(
+            rep[k] for k in ("structure", "var_names", "split_values", "fits")
+        )

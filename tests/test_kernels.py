@@ -1,0 +1,172 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose against the
+ref.py pure-jnp oracle (kernels execute with interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import (
+    flash_attention,
+    flash_attention_reference,
+)
+from repro.kernels.quantize.ops import dequantize_tensor, quantize_tensor
+from repro.kernels.quantize.ref import quantize_reference
+from repro.kernels.rwkv6_scan.ops import wkv6
+from repro.kernels.rwkv6_scan.ref import wkv6_reference
+from repro.kernels.tree_predict.ref import forest_predict_reference
+from repro.kernels.tree_predict.tree_predict import forest_predict
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize(
+        "b,s,h,kv,hd",
+        [(2, 256, 4, 2, 64), (1, 128, 8, 8, 128), (2, 100, 4, 1, 32),
+         (1, 384, 2, 2, 64)],
+    )
+    @pytest.mark.parametrize("window", [None, 64])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_reference(self, b, s, h, kv, hd, window, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, s, h, hd), dtype)
+        k = jax.random.normal(ks[1], (b, s, kv, hd), dtype)
+        v = jax.random.normal(ks[2], (b, s, kv, hd), dtype)
+        got = flash_attention(q, k, v, causal=True, window=window)
+        ref = flash_attention_reference(q, k, v, causal=True, window=window)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(ref, np.float32),
+            atol=tol, rtol=tol,
+        )
+
+    def test_first_row_attends_only_to_itself(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 64))
+        k = jax.random.normal(ks[1], (1, 128, 2, 64))
+        v = jax.random.normal(ks[2], (1, 128, 2, 64))
+        out = flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out[0, 0]), np.asarray(v[0, 0]), atol=1e-5
+        )
+
+
+class TestWKV6:
+    @pytest.mark.parametrize(
+        "b,s,h,hd,chunk",
+        [(2, 128, 2, 32, 32), (1, 96, 4, 64, 32), (1, 64, 1, 16, 16),
+         (2, 70, 2, 32, 32)],  # non-multiple of chunk -> padded path
+    )
+    def test_matches_reference(self, b, s, h, hd, chunk):
+        ks = jax.random.split(jax.random.PRNGKey(0), 6)
+        r = jax.random.normal(ks[0], (b, s, h, hd))
+        k = jax.random.normal(ks[1], (b, s, h, hd))
+        v = jax.random.normal(ks[2], (b, s, h, hd))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, hd)))
+        u = jax.random.normal(ks[4], (h, hd)) * 0.1
+        s0 = jax.random.normal(ks[5], (b, h, hd, hd)) * 0.1
+        y, sf = wkv6(r, k, v, w, u, s0, chunk=chunk)
+        fold = lambda a: a.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+        uf = jnp.broadcast_to(u[None], (b, h, hd)).reshape(b * h, hd)
+        yr, sr = wkv6_reference(
+            fold(r), fold(k), fold(v), fold(w), uf, s0.reshape(b * h, hd, hd)
+        )
+        np.testing.assert_allclose(
+            np.asarray(y),
+            np.asarray(yr.reshape(b, h, s, hd).transpose(0, 2, 1, 3)),
+            atol=1e-4, rtol=1e-4,
+        )
+        np.testing.assert_allclose(
+            np.asarray(sf.reshape(b * h, hd, hd)), np.asarray(sr),
+            atol=1e-4, rtol=1e-4,
+        )
+
+    def test_state_threading_across_chunks(self):
+        """Running one 128-seq call must equal two chained 64-seq calls."""
+        ks = jax.random.split(jax.random.PRNGKey(2), 5)
+        b, s, h, hd = 1, 128, 2, 32
+        r = jax.random.normal(ks[0], (b, s, h, hd))
+        k = jax.random.normal(ks[1], (b, s, h, hd))
+        v = jax.random.normal(ks[2], (b, s, h, hd))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, hd)))
+        u = jax.random.normal(ks[4], (h, hd)) * 0.1
+        s0 = jnp.zeros((b, h, hd, hd))
+        y_full, s_full = wkv6(r, k, v, w, u, s0, chunk=32)
+        y1, s1 = wkv6(r[:, :64], k[:, :64], v[:, :64], w[:, :64], u, s0, chunk=32)
+        y2, s2 = wkv6(r[:, 64:], k[:, 64:], v[:, 64:], w[:, 64:], u, s1, chunk=32)
+        np.testing.assert_allclose(
+            np.asarray(y_full), np.asarray(jnp.concatenate([y1, y2], 1)),
+            atol=1e-4, rtol=1e-4,
+        )
+        np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2), atol=1e-4)
+
+
+class TestTreePredict:
+    @pytest.mark.parametrize("t,n,d,depth", [(8, 300, 6, 5), (3, 64, 4, 3),
+                                             (16, 100, 10, 6)])
+    def test_matches_reference(self, t, n, d, depth, rng):
+        h = (1 << (depth + 1)) - 1
+        feature = rng.integers(0, d, (t, h)).astype(np.int32)
+        threshold = rng.integers(0, 16, (t, h)).astype(np.int32)
+        fit = rng.normal(size=(t, h)).astype(np.float32)
+        # random internal pattern, consistent heap (children exist in array)
+        is_internal = rng.random((t, h)) < 0.6
+        is_internal[:, (h - 1) // 2 :] = False  # last level = leaves
+        xb = rng.integers(0, 16, (n, d)).astype(np.int32)
+        got = forest_predict(
+            jnp.asarray(xb), jnp.asarray(feature), jnp.asarray(threshold),
+            jnp.asarray(fit), jnp.asarray(is_internal), max_depth=depth,
+        )
+        ref = forest_predict_reference(
+            jnp.asarray(xb), jnp.asarray(feature), jnp.asarray(threshold),
+            jnp.asarray(fit), jnp.asarray(is_internal), depth,
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    def test_end_to_end_vs_forest_predict(self):
+        from repro.data.tabular import TabularSpec, make_dataset
+        from repro.forest import fit_binner, predict_forest, train_forest
+        from repro.kernels.tree_predict.ops import predict_forest_kernel
+
+        spec = TabularSpec("t", 400, 5, "classification", 2, 1)
+        x, y, cat = make_dataset(spec, seed=1)
+        binner = fit_binner(x, n_bins=16, categorical=cat)
+        model = train_forest(
+            x, y, binner, n_trees=6, max_depth=5, task="classification",
+            n_classes=2, seed=0, chunk=6,
+        )
+        np.testing.assert_array_equal(
+            predict_forest_kernel(model, x[:200]),
+            predict_forest(model, x[:200]),
+        )
+
+
+class TestQuantize:
+    @pytest.mark.parametrize("shape", [(1000,), (64, 100), (3, 7, 11)])
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    def test_matches_reference(self, shape, bits):
+        x = jax.random.normal(jax.random.PRNGKey(0), shape) * 3
+        q, recon, (lo, step) = quantize_tensor(x, bits)
+        qr, _ = quantize_reference(x, lo, step, 1 << bits)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+        # §7 guarantee: |recon - x| <= step/2 (up to fp rounding)
+        assert float(jnp.abs(recon - x).max()) <= step / 2 + 1e-4
+        np.testing.assert_allclose(
+            np.asarray(dequantize_tensor(q, lo, step)), np.asarray(recon),
+            atol=1e-5,
+        )
+
+    def test_dither_changes_codes_but_bounded_error(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (512,))
+        q0, _, (lo, step) = quantize_tensor(x, 6, dither=False)
+        q1, recon1, _ = quantize_tensor(x, 6, dither=True, seed=7)
+        assert not np.array_equal(np.asarray(q0), np.asarray(q1))
+        assert float(jnp.abs(recon1 - x).max()) <= step + 1e-4
+
+    def test_distortion_scales_as_2_pow_minus_b(self):
+        """§7: quantization distortion variance ~ step^2/12 ~ 4^-b."""
+        x = jax.random.uniform(jax.random.PRNGKey(2), (20000,))
+        errs = []
+        for bits in (4, 6, 8):
+            _, recon, _ = quantize_tensor(x, bits)
+            errs.append(float(jnp.mean((recon - x) ** 2)))
+        assert errs[0] / errs[1] == pytest.approx(16, rel=0.2)
+        assert errs[1] / errs[2] == pytest.approx(16, rel=0.2)

@@ -1,0 +1,164 @@
+"""Per-architecture smoke tests (reduced same-family configs): one forward
++ one decode step + train-step gradient, asserting shapes, finiteness, and
+decode/forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES, get_config
+from repro.models import decode_step, forward, init_cache, init_params, loss_fn, mtp_loss
+
+ARCH_NAMES = sorted(ARCHITECTURES)
+
+
+@pytest.fixture(scope="module")
+def smoke_state():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_config(name).smoke()
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            cache[name] = (cfg, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(smoke_state, name):
+    cfg, params = smoke_state(name)
+    b, s = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    fe = (
+        jnp.ones((b, cfg.n_frontend_tokens, cfg.d_model))
+        if cfg.frontend
+        else None
+    )
+    logits, aux = forward(cfg, params, tokens, fe)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_grad_finite(smoke_state, name):
+    cfg, params = smoke_state(name)
+    b, s = 2, 8
+    key = jax.random.PRNGKey(2)
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    labels = jnp.roll(tokens, -1, axis=1)
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, labels)
+    )(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in leaves)
+    # at least the embedding and head must receive gradient
+    assert float(jnp.abs(grads["embed"]).sum()) > 0
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_matches_forward(smoke_state, name):
+    """Token-by-token decode must reproduce the teacher-forced forward
+    logits (the KV/state caches are exact, not approximations).
+
+    MoE archs run in dropless mode (capacity_factor = E/k) here: with the
+    default 1.25 factor, capacity-overflow dropping is order-dependent, so
+    step-wise and full-sequence routing legitimately differ — that is a
+    property of capacity-based MoE, not a cache bug."""
+    import dataclasses
+
+    cfg, params = smoke_state(name)
+    if cfg.mlp_type == "moe":
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=cfg.n_experts / cfg.top_k
+        )
+    b, s = 2, 10
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0, cfg.vocab_size)
+    full_logits, _ = forward(cfg, params, tokens)
+    cache = init_cache(cfg, b, max_len=s)
+    got = []
+    for t in range(s):
+        lg, cache = decode_step(cfg, params, tokens[:, t], cache)
+        got.append(lg)
+    got = jnp.stack(got, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(full_logits, np.float32),
+        rtol=2e-3,
+        atol=2e-3,
+    )
+
+
+@pytest.mark.parametrize(
+    "name", ["hymba-1.5b", "rwkv6-1.6b"]
+)
+def test_subquadratic_state_is_constant(smoke_state, name):
+    """long_500k eligibility: cache size must not grow with max_len."""
+    cfg, _ = smoke_state(name)
+    small = init_cache(cfg, 1, max_len=64)
+    big = init_cache(cfg, 1, max_len=4096)
+
+    def nbytes(c):
+        return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(c))
+
+    assert cfg.sub_quadratic
+    if name == "rwkv6-1.6b":
+        assert nbytes(small) == nbytes(big)
+    else:  # hymba: sliding-window KV is capped at window size
+        assert nbytes(big) <= nbytes(small) * (cfg.sliding_window / 64 + 1)
+
+
+def test_full_attention_archs_are_not_subquadratic():
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        if cfg.attn_type == "gqa" and not cfg.sliding_window:
+            assert not cfg.sub_quadratic
+
+
+def test_mtp_head_deepseek_v3():
+    cfg = get_config("deepseek-v3-671b").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (b, s), 0, cfg.vocab_size)
+    l1 = jnp.roll(tokens, -1, 1)
+    l2 = jnp.roll(tokens, -2, 1)
+    loss = mtp_loss(cfg, params, tokens, l1, l2)
+    assert np.isfinite(float(loss))
+
+
+def test_param_counts_match_published():
+    """Analytic parameter counts should be near the published sizes."""
+    expect = {
+        "deepseek-7b": 7.0e9,
+        "qwen3-4b": 4.0e9,
+        "starcoder2-3b": 3.0e9,
+        "qwen2.5-3b": 3.1e9,
+        "internvl2-76b": 76e9 * 0.9,  # backbone only (ViT frontend stubbed)
+        "deepseek-v3-671b": 671e9,
+        "rwkv6-1.6b": 1.6e9,
+        "hymba-1.5b": 1.5e9,
+        # musicgen-large's 3.3B is essentially all decoder backbone (48L,
+        # d=2048); the EnCodec frontend is tiny and stubbed out here
+        "musicgen-large": 3.3e9,
+    }
+    for name, target in expect.items():
+        got = get_config(name).n_params()
+        assert 0.5 * target < got < 1.7 * target, (name, got, target)
+
+
+def test_moe_active_params_much_smaller():
+    cfg = get_config("deepseek-v3-671b")
+    assert cfg.n_active_params() < 0.12 * cfg.n_params()
+
+
+def test_sliding_window_masks_old_tokens():
+    cfg = get_config("hymba-1.5b").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b = 1
+    s = cfg.sliding_window + 8  # beyond the window
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (b, s), 0, cfg.vocab_size)
+    logits, _ = forward(cfg, params, tokens)
+    assert np.isfinite(np.asarray(logits)).all()

@@ -1,0 +1,87 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ArithmeticCode,
+    CompressedForest,
+    HuffmanCode,
+    compress_forest,
+    decompress_forest,
+    entropy_bits,
+    zaks_decode,
+    zaks_encode,
+    zaks_is_valid,
+)
+
+from conftest import random_forest, random_tree
+
+
+@st.composite
+def freq_tables(draw):
+    b = draw(st.integers(2, 40))
+    freqs = draw(
+        st.lists(st.integers(0, 1000), min_size=b, max_size=b).filter(
+            lambda f: sum(1 for x in f if x > 0) >= 2
+        )
+    )
+    return np.array(freqs, dtype=np.int64)
+
+
+@given(freq_tables(), st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_huffman_roundtrip_and_prefix_free(freqs, seed):
+    code = HuffmanCode.from_freqs(freqs)
+    # prefix-freeness: Kraft sum == 1 for a complete Huffman code
+    lens = code.lengths[code.lengths > 0]
+    assert abs(sum(2.0 ** -l for l in lens) - 1.0) < 1e-9
+    # roundtrip with symbols drawn from the support
+    rng = np.random.default_rng(seed)
+    support = np.flatnonzero(freqs > 0)
+    syms = rng.choice(support, size=100)
+    assert np.array_equal(code.decode(code.encode(syms), 100), syms)
+    # optimality: average length within 1 bit of entropy
+    avg = code.encoded_bits(freqs) / freqs.sum()
+    h = entropy_bits(freqs) / freqs.sum()
+    assert h - 1e-9 <= avg < h + 1
+
+
+@given(freq_tables(), st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_arithmetic_roundtrip(freqs, seed):
+    rng = np.random.default_rng(seed)
+    support = np.flatnonzero(freqs > 0)
+    syms = rng.choice(support, size=64)
+    code = ArithmeticCode(freqs)
+    assert np.array_equal(code.decode(code.encode(syms), 64), syms)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 10))
+@settings(max_examples=30, deadline=None)
+def test_zaks_roundtrip_random_trees(seed, max_depth):
+    rng = np.random.default_rng(seed)
+    t = random_tree(rng, d=4, max_depth=max_depth)
+    z = zaks_encode(t)
+    assert zaks_is_valid(z)
+    # condition ii: #0 = #1 + 1
+    assert (z == 0).sum() == (z == 1).sum() + 1
+    left, right, leaf = zaks_decode(z)
+    assert np.array_equal(left, t.children_left)
+    assert np.array_equal(right, t.children_right)
+
+
+@given(
+    st.integers(0, 2**32 - 1),
+    st.integers(1, 12),
+    st.integers(2, 6),
+    st.sampled_from(["classification", "regression"]),
+)
+@settings(max_examples=15, deadline=None)
+def test_codec_lossless_invariant(seed, n_trees, max_depth, task):
+    """THE paper invariant: decompress(compress(F)) == F for any forest."""
+    forest = random_forest(
+        seed=seed, n_trees=n_trees, max_depth=max_depth, task=task
+    )
+    comp = compress_forest(forest)
+    back = decompress_forest(CompressedForest.from_bytes(comp.to_bytes()))
+    assert forest.equals(back)

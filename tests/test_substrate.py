@@ -1,0 +1,308 @@
+"""Tests for the distributed substrate: tensor codec, checkpointing,
+fault tolerance, gradient compression, data pipeline determinism."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointConfig, CheckpointManager, save_checkpoint, load_checkpoint, latest_step
+from repro.configs.registry import get_config
+from repro.core.tensor_codec import (
+    CompressedTensors,
+    compress_tensors,
+    decompress_tensors,
+    flatten_pytree,
+    unflatten_pytree,
+)
+from repro.core.vechuff import VectorHuffman
+from repro.core.huffman import code_lengths, entropy_bits
+from repro.data.tokens import TokenDataConfig, synth_batch
+from repro.launch.steps import make_train_step
+from repro.launch.train import build_state
+from repro.optim.adamw import AdamWConfig
+from repro.optim.compression import (
+    GradCompressionConfig,
+    compress_gradients,
+    init_error_feedback,
+)
+from repro.runtime import Preemption, PreemptionSchedule, StragglerMonitor, TrainLoop
+
+
+# ---------------------------------------------------------------------------
+# vectorized Huffman
+# ---------------------------------------------------------------------------
+class TestVectorHuffman:
+    def test_roundtrip_many_streams(self):
+        rng = np.random.default_rng(0)
+        freqs = np.bincount(rng.zipf(1.4, 20000) % 64, minlength=64)
+        vh = VectorHuffman(code_lengths(freqs))
+        p = freqs / freqs.sum()
+        chunks = [
+            rng.choice(64, size=rng.integers(1, 500), p=p) for _ in range(50)
+        ]
+        blobs, ns = [], []
+        for c in chunks:
+            b, _ = vh.encode(c)
+            blobs.append(b)
+            ns.append(len(c))
+        out = vh.decode_streams(blobs, np.array(ns))
+        for o, c in zip(out, chunks):
+            assert (o == c).all()
+
+    def test_rate_near_entropy(self):
+        rng = np.random.default_rng(1)
+        freqs = np.array([1000, 500, 250, 125, 60, 30, 20, 15])
+        vh = VectorHuffman(code_lengths(freqs))
+        syms = rng.choice(8, size=20000, p=freqs / freqs.sum())
+        _, bits = vh.encode(syms)
+        h = entropy_bits(np.bincount(syms, minlength=8))
+        assert h <= bits <= h + len(syms)  # within 1 bit/symbol
+
+    def test_single_symbol_alphabet(self):
+        vh = VectorHuffman(code_lengths(np.array([0, 7, 0])))
+        blob, _ = vh.encode(np.array([1, 1, 1, 1]))
+        assert (vh.decode(blob, 4) == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# tensor codec
+# ---------------------------------------------------------------------------
+class TestTensorCodec:
+    def _tree(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return {
+            "layers": {
+                "wq": rng.normal(scale=0.05, size=(4, 32, 32)).astype(np.float16),
+                "wk": rng.normal(scale=0.02, size=(4, 32, 32)).astype(np.float16),
+            },
+            "embed": rng.normal(scale=0.02, size=(128, 32)).astype(np.float16),
+            "step": np.array(9, np.int32),
+        }
+
+    def test_lossless_roundtrip_bit_exact(self):
+        flat = flatten_pytree(self._tree())
+        comp = compress_tensors(flat)
+        back = decompress_tensors(comp)
+        for k, v in flat.items():
+            assert back[k].dtype == v.dtype
+            assert (back[k] == v).all(), k
+
+    def test_lossless_beats_raw(self):
+        flat = flatten_pytree(self._tree())
+        comp = compress_tensors(flat)
+        raw = sum(v.nbytes for v in flat.values())
+        assert comp.nbytes < raw
+
+    def test_serialization(self):
+        flat = flatten_pytree(self._tree())
+        comp = CompressedTensors.from_bytes(
+            compress_tensors(flat).to_bytes()
+        )
+        back = decompress_tensors(comp)
+        assert all((back[k] == flat[k]).all() for k in flat)
+
+    def test_partial_decode(self):
+        flat = flatten_pytree(self._tree())
+        comp = compress_tensors(flat)
+        part = decompress_tensors(comp, names=["embed"])
+        assert set(part) == {"embed"}
+        assert (part["embed"] == flat["embed"]).all()
+
+    @pytest.mark.parametrize("bits", [4, 8, 12])
+    def test_quantized_distortion_bound(self, bits):
+        flat = flatten_pytree(self._tree())
+        comp = compress_tensors(flat, bits=bits)
+        back = decompress_tensors(comp)
+        for k, v in flat.items():
+            if v.dtype.itemsize != 2:
+                continue
+            a = v.astype(np.float64)
+            b = back[k].astype(np.float64)
+            step = (a.max() - a.min()) / (1 << bits)
+            ulp = float(np.spacing(np.float16(np.abs(b).max())))
+            assert np.abs(a - b).max() <= step / 2 + 2 * ulp + 1e-12
+
+    def test_flatten_unflatten(self):
+        tree = self._tree()
+        back = unflatten_pytree(flatten_pytree(tree))
+        assert (back["layers"]["wq"] == tree["layers"]["wq"]).all()
+        assert back["step"] == tree["step"]
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+class TestCheckpoint:
+    def _state(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return {
+            "params": {"w": rng.normal(size=(16, 8)).astype(np.float32)},
+            "opt": {"m": rng.normal(size=(16, 8)).astype(np.float32),
+                    "step": np.int32(3)},
+        }
+
+    def test_save_load_roundtrip(self, tmp_path):
+        st = self._state()
+        save_checkpoint(tmp_path, 5, st)
+        back, step = load_checkpoint(tmp_path)
+        assert step == 5
+        assert (back["params"]["w"] == st["params"]["w"]).all()
+
+    def test_uncommitted_is_invisible(self, tmp_path):
+        save_checkpoint(tmp_path, 1, self._state())
+        # fake a crashed save: step dir without COMMIT
+        d = tmp_path / "step_00000009"
+        d.mkdir()
+        (d / "manifest.json").write_text("{}")
+        assert latest_step(tmp_path) == 1
+
+    def test_rolling_gc(self, tmp_path):
+        mgr = CheckpointManager(CheckpointConfig(str(tmp_path), keep=2))
+        for s in (1, 2, 3, 4):
+            mgr.save(s, self._state(s))
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in tmp_path.iterdir()
+            if p.name.startswith("step_")
+        )
+        assert steps == [3, 4]
+
+    def test_entropy_coded_checkpoint_bit_exact(self, tmp_path):
+        rng = np.random.default_rng(0)
+        st = {"w": rng.normal(scale=0.03, size=(64, 64)).astype(np.float16)}
+        save_checkpoint(tmp_path, 2, st, codec="lossless")
+        back, _ = load_checkpoint(tmp_path)
+        assert back["w"].dtype == np.float16
+        assert (back["w"] == st["w"]).all()
+
+    def test_elastic_reshard(self, tmp_path):
+        """Load with explicit shardings onto the (1-device) mesh — the
+        device_put path used for elastic re-scale."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        st = self._state()
+        save_checkpoint(tmp_path, 1, st)
+        mesh = jax.make_mesh((1,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        sh = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), st
+        )
+        back, _ = load_checkpoint(tmp_path, shardings=sh)
+        assert (np.asarray(back["params"]["w"]) == st["params"]["w"]).all()
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+class TestFaultTolerance:
+    def _loop(self, tmp_path, fail_at=(), save_every=4):
+        def step_fn(state, step):
+            # deterministic pure-numpy "training"
+            rng = np.random.default_rng(step)
+            g = rng.normal(size=state["w"].shape)
+            return {"w": state["w"] - 0.1 * g}, {"gnorm": float(np.abs(g).sum())}
+
+        mgr = CheckpointManager(CheckpointConfig(str(tmp_path)))
+        return TrainLoop(
+            step_fn, mgr, save_every=save_every,
+            preemption=PreemptionSchedule(fail_at=tuple(fail_at)),
+        )
+
+    def test_preemption_recovery_is_bit_exact(self, tmp_path):
+        init = {"w": np.zeros((8, 8))}
+        ref = self._loop(tmp_path / "a").run(dict(init), 20)
+        out = self._loop(tmp_path / "b", fail_at=(3, 11, 17)).run(dict(init), 20)
+        assert (ref["w"] == out["w"]).all()
+
+    def test_restart_counter(self, tmp_path):
+        loop = self._loop(tmp_path, fail_at=(5,))
+        loop.run({"w": np.zeros((4,))}, 10)
+        assert loop.restarts == 1
+
+    def test_too_many_preemptions_raises(self, tmp_path):
+        loop = self._loop(tmp_path, fail_at=(1,), save_every=100)
+        loop.max_restarts = 0
+        # failing before any post-init commit and with no restart budget
+        with pytest.raises(Preemption):
+            loop.run({"w": np.zeros(2)}, 5)
+
+    def test_straggler_monitor(self):
+        mon = StragglerMonitor(window=16, threshold=3.0)
+        for i in range(16):
+            mon.observe(0, 1.0)
+        assert not mon.should_skip(16, 0, 1.2)
+        assert mon.should_skip(17, 1, 10.0)
+        assert mon.skipped == [(17, 1)]
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (§7 quantizer + error feedback)
+# ---------------------------------------------------------------------------
+class TestGradCompression:
+    def test_error_feedback_preserves_signal(self):
+        """With EF, the long-run sum of decoded gradients tracks the true
+        sum (quantizer is contractive + bias correction)."""
+        cfg = GradCompressionConfig(bits=4)
+        rng = np.random.default_rng(0)
+        g_true = [
+            {"w": jnp.asarray(rng.normal(size=(32,)), jnp.float32)}
+            for _ in range(50)
+        ]
+        ef = init_error_feedback(g_true[0])
+        total_dec = jnp.zeros(32)
+        total_true = jnp.zeros(32)
+        for g in g_true:
+            dec, ef = compress_gradients(cfg, g, ef)
+            total_dec += dec["w"]
+            total_true += g["w"]
+        # residual bounded by one quantization step, not growing with T
+        resid = jnp.abs(total_dec - total_true).max()
+        step_bound = jnp.abs(jnp.stack([g["w"] for g in g_true])).max() / 4
+        assert resid < step_bound
+
+    def test_training_with_compression_converges(self):
+        cfg = get_config("qwen2.5-3b").smoke()
+        cfg = dataclasses.replace(cfg, n_layers=1, dtype="float32")
+        opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=30)
+        comp = GradCompressionConfig(bits=8)
+        data = TokenDataConfig(cfg.vocab_size, 32, 4, seed=0)
+        step = jax.jit(
+            make_train_step(cfg, opt_cfg, remat=None, grad_comp=comp),
+            donate_argnums=(0, 1),
+        )
+        state = build_state(cfg, opt_cfg, 0, comp)
+        losses = []
+        for i in range(30):
+            batch = {k: jnp.asarray(v) for k, v in synth_batch(data, i).items()}
+            p, o, m = step(state["params"], state["opt"], batch)
+            state = {"params": p, "opt": o}
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.5
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+class TestData:
+    def test_deterministic_in_seed_step(self):
+        cfg = TokenDataConfig(1024, 64, 8, seed=3)
+        a = synth_batch(cfg, 7)
+        b = synth_batch(cfg, 7)
+        assert (a["tokens"] == b["tokens"]).all()
+
+    def test_host_slicing_partitions_global_batch(self):
+        full = TokenDataConfig(1024, 16, 8, seed=1, n_hosts=1, host_id=0)
+        parts = [
+            TokenDataConfig(1024, 16, 8, seed=1, n_hosts=2, host_id=h)
+            for h in (0, 1)
+        ]
+        got = [synth_batch(p, 5)["tokens"] for p in parts]
+        assert got[0].shape == (4, 16)
+        # distinct slices (host streams differ)
+        assert not (got[0] == got[1]).all()
+
+    def test_labels_shift(self):
+        cfg = TokenDataConfig(512, 32, 2, seed=0)
+        b = synth_batch(cfg, 0)
+        assert (b["tokens"][:, 1:] == b["labels"][:, :-1]).all()
