@@ -1,0 +1,187 @@
+"""Fused decode->predict serving benchmark (ISSUE 1 tentpole measurement).
+
+Measures, for a quickstart-sized trained forest (>=100 trees, >=5k rows by
+default), on both tasks:
+
+* decode: seed bit-at-a-time baseline vs the table-driven vectorized decoder
+  (MB/s over the compressed payload);
+* predict_compressed: the seed implementation replica (``engine="bitwise"``:
+  per-bit dict-lookup Huffman + reference LZW/Zaks/arithmetic decoders) vs
+  the rebuilt path, cold (decode + traverse) and warm (decode-once serving
+  steady state — the paper's subscriber device holds ONE compressed forest
+  and answers many requests);
+* the Pallas serving kernel: fused-aggregation parity vs the (T, N) kernel's
+  reduced result, and streamed decode->predict throughput at several batch
+  sizes.
+
+Writes machine-readable results to BENCH_serve_forest.json (repo root).
+
+    PYTHONPATH=src python benchmarks/serve_forest.py [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+
+from common import train_compact  # noqa: E402
+
+from repro.core import CompressedForest, compress_forest, predict_compressed  # noqa: E402
+from repro.core.compressed_predict import iter_trees  # noqa: E402
+from repro.data.tabular import TabularSpec, make_dataset  # noqa: E402
+
+
+def best_of(fn, repeats: int) -> float:
+    ts = []
+    for _ in range(repeats):
+        t0 = time.time()
+        fn()
+        ts.append(time.time() - t0)
+    return min(ts)
+
+
+def bench_task(task: str, n_trees: int, rows: int, depth: int,
+               repeats: int) -> dict:
+    import jax
+
+    from repro.kernels.tree_predict.ref import forest_predict_reference
+    from repro.kernels.tree_predict.tree_predict import (
+        forest_predict,
+        forest_predict_agg,
+    )
+    from repro.launch.serve_forest import iter_heap_tiles, serve_compressed_forest
+
+    spec = TabularSpec(f"serve-{task}", rows, 8, task, 2, 2)
+    forest, model, _ = train_compact(
+        spec, n_trees=n_trees, max_depth=depth, seed=0
+    )
+    blob = compress_forest(forest).to_bytes()
+    comp = CompressedForest.from_bytes(blob)
+    xb = model.binner.transform(make_dataset(spec, seed=0)[0])[:rows]
+    n_nodes = sum(t.n_nodes for t in forest.trees)
+
+    # ---- decode sweep ----------------------------------------------------
+    t_dec_seed = best_of(
+        lambda: list(iter_trees(comp, engine="bitwise")), min(2, repeats)
+    )
+    t_dec = best_of(lambda: list(iter_trees(comp)), repeats)
+    comp_mb = len(blob) / 1e6
+
+    # ---- predict_compressed: seed replica vs cold vs warm -----------------
+    p_seed = predict_compressed(comp, xb, engine="bitwise")
+    t_seed = best_of(
+        lambda: predict_compressed(comp, xb, engine="bitwise"),
+        min(2, repeats),
+    )
+    predict_compressed(CompressedForest.from_bytes(blob), xb)  # jit warm-up
+    t_cold = best_of(
+        lambda: predict_compressed(CompressedForest.from_bytes(blob), xb),
+        repeats,
+    )
+    warm = CompressedForest.from_bytes(blob)
+    p_new = predict_compressed(warm, xb)
+    t_warm = best_of(lambda: predict_compressed(warm, xb), repeats)
+    bit_exact = bool(np.array_equal(p_seed, p_new))
+
+    # ---- Pallas kernels: agg parity + streamed serving throughput ---------
+    import jax.numpy as jnp
+
+    feature, threshold, fit, is_internal = next(
+        iter_heap_tiles(comp, block_trees=min(n_trees, 32))
+    )
+    args = (
+        jnp.asarray(xb[:512], jnp.int32), jnp.asarray(feature),
+        jnp.asarray(threshold), jnp.asarray(fit), jnp.asarray(is_internal),
+    )
+    per_tree = np.asarray(forest_predict(*args, max_depth=comp.max_depth))
+    agg = np.asarray(forest_predict_agg(*args, max_depth=comp.max_depth))
+    reduced = per_tree.sum(0)
+    agg_err = float(np.max(np.abs(agg - reduced)))
+    agg_rel_err = float(
+        np.max(np.abs(agg - reduced) / (np.abs(reduced) + 1e-9))
+    )
+    ref = np.asarray(
+        forest_predict_reference(*args, comp.max_depth)
+    )
+    kernel_err = float(np.max(np.abs(per_tree - ref)))
+
+    serve = {}
+    for batch in sorted({min(512, rows), min(2048, rows), rows}):
+        serve_compressed_forest(comp, xb[:batch])  # compile + warm
+        t = best_of(
+            lambda b=batch: serve_compressed_forest(comp, xb[:b]), repeats
+        )
+        serve[str(batch)] = {
+            "ms": round(t * 1e3, 2),
+            "rows_per_s": round(batch / t, 1),
+        }
+
+    return {
+        "task": task,
+        "n_trees": n_trees,
+        "max_depth": comp.max_depth,
+        "rows": rows,
+        "total_nodes": n_nodes,
+        "compressed_bytes": len(blob),
+        "decode": {
+            "seed_ms": round(t_dec_seed * 1e3, 2),
+            "table_ms": round(t_dec * 1e3, 2),
+            "speedup": round(t_dec_seed / t_dec, 2),
+            "table_MB_per_s": round(comp_mb / t_dec, 3),
+            "nodes_per_s": round(n_nodes / t_dec, 1),
+        },
+        "predict_compressed": {
+            "seed_ms": round(t_seed * 1e3, 2),
+            "cold_ms": round(t_cold * 1e3, 2),
+            "warm_ms": round(t_warm * 1e3, 2),
+            "speedup_cold": round(t_seed / t_cold, 2),
+            "speedup_warm": round(t_seed / t_warm, 2),
+            "bit_exact": bit_exact,
+        },
+        "kernel": {
+            "backend": jax.default_backend(),
+            "agg_vs_per_tree_reduced_max_abs_err": agg_err,
+            "agg_vs_per_tree_reduced_max_rel_err": agg_rel_err,
+            "per_tree_vs_reference_max_abs_err": kernel_err,
+            "streamed_serve": serve,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small forest for CI smoke runs")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.quick:
+        n_trees, rows, depth, repeats = 24, 1200, 6, 1
+    else:
+        n_trees, rows, depth, repeats = 100, 5000, 8, 7
+    out_path = pathlib.Path(
+        args.out
+        or pathlib.Path(__file__).resolve().parent.parent
+        / "BENCH_serve_forest.json"
+    )
+    results = {
+        "benchmark": "serve_forest",
+        "quick": bool(args.quick),
+        "config": {"n_trees": n_trees, "rows": rows, "max_depth": depth},
+        "tasks": [
+            bench_task("classification", n_trees, rows, depth, repeats),
+            bench_task("regression", n_trees, rows, depth, repeats),
+        ],
+    }
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(json.dumps(results, indent=2))
+    print(f"\nwrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

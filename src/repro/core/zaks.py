@@ -27,11 +27,41 @@ def zaks_is_valid(bits: np.ndarray) -> bool:
 
 
 def zaks_decode(bits: np.ndarray):
-    """Rebuild preorder structure arrays from a Zaks sequence.
+    """Rebuild preorder structure arrays from a Zaks sequence (vectorized).
 
     Returns ``(children_left, children_right, is_leaf)`` with -1 for absent
     children; node ids are preorder positions (matching :func:`zaks_encode`).
+
+    In preorder, an internal node ``i``'s left child is ``i + 1`` and its
+    right child follows the left subtree.  With the running excess
+    ``c = cumsum(+1 for leaf, -1 for internal)``, the subtree rooted at ``j``
+    ends at the first ``k >= j`` with ``c[k] == c[j-1] + 1`` (the excess walks
+    in +-1 steps, so the first time it reaches that level is the subtree
+    boundary).  All boundaries are found at once with one lexicographic
+    searchsorted over ``(c, position)`` keys — no per-node Python loop.
     """
+    bits = np.asarray(bits, dtype=np.uint8)
+    n = len(bits)
+    if not zaks_is_valid(bits):
+        raise ValueError("invalid Zaks sequence")
+    left = np.full(n, -1, dtype=np.int32)
+    right = np.full(n, -1, dtype=np.int32)
+    internal = np.flatnonzero(bits)
+    if internal.size:
+        c = np.cumsum(1 - 2 * bits.astype(np.int64))
+        left[internal] = internal + 1
+        shift = n + 2  # make every key component positive
+        keys = np.sort((c + shift) * (n + 1) + np.arange(n))
+        want = (c[internal] + 1 + shift) * (n + 1) + (internal + 1)
+        p = np.searchsorted(keys, want, side="left")
+        ends = keys[p] % (n + 1)  # end of each left subtree
+        right[internal] = ends + 1
+    return left, right, bits == 0
+
+
+def zaks_decode_reference(bits: np.ndarray):
+    """Original stack-based parse (differential oracle for the vectorized
+    :func:`zaks_decode`; also the seed-faithful benchmark baseline)."""
     bits = np.asarray(bits, dtype=np.uint8)
     n = len(bits)
     left = np.full(n, -1, dtype=np.int32)

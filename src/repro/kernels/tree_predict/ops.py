@@ -1,23 +1,34 @@
-"""jit'd wrapper: ForestModel-level prediction via the Pallas kernel."""
+"""jit'd wrapper: ForestModel-level prediction via the Pallas kernels."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from .tree_predict import forest_predict
+from .tree_predict import forest_predict, forest_predict_agg
 
 
 def predict_forest_kernel(model, x_raw: np.ndarray, interpret: bool | None = None):
     """Ensemble prediction matching repro.forest.predict_forest, but through
-    the Pallas traversal kernel. Returns (n,) predictions."""
+    the fused-aggregation Pallas kernel (votes / fit sums are reduced
+    in-kernel across the tree-tile grid axis). Returns (n,) predictions."""
     xb = jnp.asarray(model.binner.transform(x_raw), jnp.int32)
     cfg = model.cfg
     if cfg.task == "classification":
         # per-tree argmax class encoded as scalar fit
         fit = jnp.asarray(model.node_fit.argmax(-1), jnp.float32)
-    else:
-        fit = jnp.asarray(model.node_fit[..., 0], jnp.float32)
-    per_tree = forest_predict(
+        votes = forest_predict_agg(
+            xb,
+            jnp.asarray(model.feature),
+            jnp.asarray(model.threshold),
+            fit,
+            jnp.asarray(model.is_internal),
+            max_depth=cfg.max_depth,
+            n_classes=cfg.n_classes,
+            interpret=interpret,
+        )  # (N, C)
+        return np.asarray(votes.argmax(-1))
+    fit = jnp.asarray(model.node_fit[..., 0], jnp.float32)
+    sums = forest_predict_agg(
         xb,
         jnp.asarray(model.feature),
         jnp.asarray(model.threshold),
@@ -25,10 +36,27 @@ def predict_forest_kernel(model, x_raw: np.ndarray, interpret: bool | None = Non
         jnp.asarray(model.is_internal),
         max_depth=cfg.max_depth,
         interpret=interpret,
-    )  # (T, N)
+    )  # (N,)
+    return np.asarray(sums / model.n_trees)
+
+
+def predict_forest_kernel_per_tree(
+    model, x_raw: np.ndarray, interpret: bool | None = None
+):
+    """(T, N) per-tree leaf fits through the unaggregated kernel (kept for
+    sigma^2-style per-tree diagnostics and as a parity reference)."""
+    xb = jnp.asarray(model.binner.transform(x_raw), jnp.int32)
+    cfg = model.cfg
     if cfg.task == "classification":
-        votes = jnp.stack(
-            [(per_tree == c).sum(0) for c in range(cfg.n_classes)], -1
-        )
-        return np.asarray(votes.argmax(-1))
-    return np.asarray(per_tree.mean(0))
+        fit = jnp.asarray(model.node_fit.argmax(-1), jnp.float32)
+    else:
+        fit = jnp.asarray(model.node_fit[..., 0], jnp.float32)
+    return forest_predict(
+        xb,
+        jnp.asarray(model.feature),
+        jnp.asarray(model.threshold),
+        fit,
+        jnp.asarray(model.is_internal),
+        max_depth=cfg.max_depth,
+        interpret=interpret,
+    )

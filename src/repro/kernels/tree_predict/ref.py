@@ -26,3 +26,23 @@ def forest_predict_reference(
         return nf[idx]
 
     return jax.vmap(one_tree)(feature, threshold, fit, is_internal)
+
+
+def forest_predict_agg_reference(
+    xb: jnp.ndarray,
+    feature: jnp.ndarray,
+    threshold: jnp.ndarray,
+    fit: jnp.ndarray,
+    is_internal: jnp.ndarray,
+    max_depth: int,
+    n_classes: int = 0,
+) -> jnp.ndarray:
+    """Ensemble-aggregated oracle: (N,) leaf-fit sums (n_classes == 0) or
+    (N, C) vote counts — the reduction the fused kernel performs in-kernel."""
+    per_tree = forest_predict_reference(
+        xb, feature, threshold, fit, is_internal, max_depth
+    )  # (T, N)
+    if n_classes > 0:
+        votes = jax.nn.one_hot(per_tree.astype(jnp.int32), n_classes)
+        return votes.sum(0)
+    return per_tree.sum(0)

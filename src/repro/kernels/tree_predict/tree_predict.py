@@ -1,20 +1,33 @@
-"""Batched random-forest inference Pallas TPU kernel — the paper's serving
+"""Batched random-forest inference Pallas TPU kernels — the paper's serving
 hot spot (predict-from-compressed decodes trees, then this evaluates them).
 
 Layout: trees in heap form (node i -> children 2i+1 / 2i+2), so traversal is
-pure arithmetic + gathers, no pointers.  Tiling: grid = (obs_tiles, tree_tiles);
-each program holds a (BT, H) tile of tree arrays and a (BN, d) tile of
-binned observations in VMEM and walks ``max_depth`` levels for all
-(tree, obs) pairs at once — VPU select/gather ops, no MXU.  Trees are tiny
-(H = 2^(depth+1)-1 nodes) and reused across the whole observation tile, so
-the kernel is gather-throughput-bound in VMEM rather than HBM-bound: per
-HBM byte of tree data we do BN gathers, which is the TPU-native answer to
-the pointer-chasing CPU traversal (DESIGN.md hardware-adaptation).
+pure arithmetic + gathers, no pointers.  Tiling: each program holds a
+(BT, Hp) tile of tree arrays and a (BN, d) tile of binned observations in
+VMEM and walks ``max_depth`` levels for all (tree, obs) pairs at once — VPU
+select ops + MXU one-hot contractions.  Trees are tiny and reused across the
+whole observation tile, so the kernel is gather-throughput-bound in VMEM
+rather than HBM-bound: per HBM byte of tree data we do BN gathers.
 
-Within the kernel the (tree, obs) traversal is expressed with a fori_loop
-over depth; gathers use one-hot matmuls (take-along-axis lowers poorly on
-TPU vector memory for small tables, one-hot contractions hit the MXU
-instead — this is the standard trick for small-table gathers on TPU).
+Gathers use TWO-LEVEL one-hot contractions: a heap index over ``Hp`` nodes is
+split into (hi, lo) = (idx >> lo_bits, idx & (Hlo - 1)) and gathered as
+``sum_l one_hot(hi) @ tab[:, hi, :] * one_hot(lo)``.  The one-hot operands
+are (BT, BN, Hhi) + (BT, BN, Hlo) ~ O(sqrt(H)) per element instead of the
+(BT, BN, H) materialization of a flat one-hot — the VMEM working set stays
+flat as depth grows (depth 14 => 180x smaller level scratch).
+
+Two kernels share the traversal:
+
+* ``forest_predict``       -> (T, N) per-(tree, obs) leaf fits;
+* ``forest_predict_agg``   -> in-kernel ensemble aggregation over the
+  tree-tile grid axis: (N,) fit sums (regression) or (N, C) vote counts
+  (classification).  Output HBM traffic shrinks by ~T/block_trees x, and the
+  host-side ensemble reduction disappears.
+
+Precision guard: node attributes round-trip through float32 one-hot einsums,
+which is exact only below 2**24 — ``forest_predict*`` validate static shapes
+and (when inputs are concrete) data ranges and raise instead of silently
+corrupting (see tests/test_serve_path.py boundary test).
 """
 from __future__ import annotations
 
@@ -22,44 +35,179 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+_F32_EXACT_INT = 1 << 24  # float32 has a 24-bit significand
+
+
+def _validate_f32_exact(max_depth: int, d: int, **arrays) -> None:
+    """Raise if a value routed through the float32 one-hot path could exceed
+    the exactly-representable integer range.
+
+    Host numpy arrays are checked with numpy (free); concrete device arrays
+    are checked too, which costs a device sync — hot loops (the streamed
+    serve driver) pass numpy tiles so the check never blocks dispatch.
+    Tracers can't be value-checked and are skipped."""
+    h = (1 << (max_depth + 1)) - 1
+    if h >= _F32_EXACT_INT:
+        raise ValueError(
+            f"max_depth={max_depth} gives {h} heap nodes >= 2**24; node ids "
+            "would corrupt in the float32 one-hot gathers"
+        )
+    if d >= _F32_EXACT_INT:
+        raise ValueError(f"n_features={d} >= 2**24 overflows float32 gathers")
+    for name, arr in arrays.items():
+        if isinstance(arr, jax.core.Tracer):
+            continue  # under jit/vmap tracing: shapes checked, values can't be
+        if not arr.size:
+            continue
+        if isinstance(arr, np.ndarray):
+            big = int(np.max(np.abs(arr))) >= _F32_EXACT_INT
+        else:
+            big = int(jnp.max(jnp.abs(arr))) >= _F32_EXACT_INT
+        if big:
+            raise ValueError(
+                f"{name} contains values >= 2**24, not exactly representable "
+                "in the float32 one-hot gathers"
+            )
+
+
+def _heap_split(h_pad: int) -> tuple[int, int, int]:
+    """(lo_bits, n_lo, n_hi) for the two-level gather over h_pad heap slots."""
+    lo_bits = max(1, h_pad.bit_length() // 2)
+    n_lo = 1 << lo_bits
+    n_hi = pl.cdiv(h_pad, n_lo)
+    return lo_bits, n_lo, n_hi
+
+
+def _pad_heap(a: jnp.ndarray, h_pad: int) -> jnp.ndarray:
+    t, h = a.shape
+    if h == h_pad:
+        return a
+    return jnp.pad(a, ((0, 0), (0, h_pad - h)))
+
+
+def _two_level_gather(tab3, oh_hi, oh_lo):
+    """tab3 (BT, Hhi, Hlo) f32, oh_hi (BT, BN, Hhi), oh_lo (BT, BN, Hlo)
+    -> (BT, BN) gathered values."""
+    rows = jnp.einsum(
+        "tnh,thl->tnl", oh_hi, tab3, preferred_element_type=jnp.float32
+    )
+    return (rows * oh_lo).sum(-1)
+
+
+def _traverse(xb, feat, thr, inter, *, max_depth, lo_bits, n_lo, n_hi, d):
+    """Shared (BT, BN) heap traversal; returns final node indices."""
+    bt = feat.shape[0]
+    bn = xb.shape[0]
+    feat3 = feat.astype(jnp.float32).reshape(bt, n_hi, n_lo)
+    thr3 = thr.astype(jnp.float32).reshape(bt, n_hi, n_lo)
+    inter3 = inter.astype(jnp.float32).reshape(bt, n_hi, n_lo)
+    xbf = xb.astype(jnp.float32)
+    idx = jnp.zeros((bt, bn), jnp.int32)
+
+    def level(_, idx):
+        oh_hi = jax.nn.one_hot(idx >> lo_bits, n_hi, dtype=jnp.float32)
+        oh_lo = jax.nn.one_hot(idx & (n_lo - 1), n_lo, dtype=jnp.float32)
+        fe = _two_level_gather(feat3, oh_hi, oh_lo).astype(jnp.int32)
+        th = _two_level_gather(thr3, oh_hi, oh_lo).astype(jnp.int32)
+        it = _two_level_gather(inter3, oh_hi, oh_lo) > 0.5
+        ohf = jax.nn.one_hot(jnp.clip(fe, 0, d - 1), d, dtype=jnp.float32)
+        xv = jnp.einsum(
+            "tnd,nd->tn", ohf, xbf, preferred_element_type=jnp.float32
+        ).astype(jnp.int32)
+        child = jnp.where(xv <= th, 2 * idx + 1, 2 * idx + 2)
+        return jnp.where(it, child, idx)
+
+    return jax.lax.fori_loop(0, max_depth, level, idx)
 
 
 def _tree_predict_kernel(
     xb_ref, feat_ref, thr_ref, fit_ref, inter_ref, out_ref,
-    *, max_depth: int, n_heap: int, d: int,
+    *, max_depth: int, lo_bits: int, n_lo: int, n_hi: int, d: int,
 ):
-    xb = xb_ref[...]  # (BN, d) int32
-    feat = feat_ref[...]  # (BT, H) int32
-    thr = thr_ref[...]  # (BT, H) int32
-    fit = fit_ref[...]  # (BT, H) f32
-    inter = inter_ref[...]  # (BT, H) int32 (0/1)
+    idx = _traverse(
+        xb_ref[...], feat_ref[...], thr_ref[...], inter_ref[...],
+        max_depth=max_depth, lo_bits=lo_bits, n_lo=n_lo, n_hi=n_hi, d=d,
+    )
+    bt = fit_ref.shape[0]
+    fit3 = fit_ref[...].reshape(bt, n_hi, n_lo)
+    oh_hi = jax.nn.one_hot(idx >> lo_bits, n_hi, dtype=jnp.float32)
+    oh_lo = jax.nn.one_hot(idx & (n_lo - 1), n_lo, dtype=jnp.float32)
+    out_ref[...] = _two_level_gather(fit3, oh_hi, oh_lo)
 
-    bt = feat.shape[0]
-    bn = xb.shape[0]
-    idx = jnp.zeros((bt, bn), jnp.int32)
 
-    def level(_, idx):
-        # gather per-(tree,obs) node attributes via one-hot contraction
-        oh = jax.nn.one_hot(idx, n_heap, dtype=jnp.float32)  # (BT,BN,H)
-        fe = jnp.einsum("tnh,th->tn", oh, feat.astype(jnp.float32)).astype(jnp.int32)
-        th = jnp.einsum("tnh,th->tn", oh, thr.astype(jnp.float32)).astype(jnp.int32)
-        it = jnp.einsum("tnh,th->tn", oh, inter.astype(jnp.float32)) > 0.5
-        # gather observation feature values: one-hot over d
-        ohf = jax.nn.one_hot(jnp.clip(fe, 0, d - 1), d, dtype=jnp.float32)
-        xv = jnp.einsum("tnd,nd->tn", ohf, xb.astype(jnp.float32)).astype(jnp.int32)
-        child = jnp.where(xv <= th, 2 * idx + 1, 2 * idx + 2)
-        return jnp.where(it, child, idx)
+def _tree_predict_agg_kernel(
+    xb_ref, feat_ref, thr_ref, fit_ref, inter_ref, out_ref,
+    *, max_depth: int, lo_bits: int, n_lo: int, n_hi: int, d: int,
+    n_classes: int, block_trees: int, n_trees: int,
+):
+    idx = _traverse(
+        xb_ref[...], feat_ref[...], thr_ref[...], inter_ref[...],
+        max_depth=max_depth, lo_bits=lo_bits, n_lo=n_lo, n_hi=n_hi, d=d,
+    )
+    bt, bn = idx.shape
+    fit3 = fit_ref[...].reshape(bt, n_hi, n_lo)
+    oh_hi = jax.nn.one_hot(idx >> lo_bits, n_hi, dtype=jnp.float32)
+    oh_lo = jax.nn.one_hot(idx & (n_lo - 1), n_lo, dtype=jnp.float32)
+    leaf = _two_level_gather(fit3, oh_hi, oh_lo)  # (BT, BN)
+    # mask trees past T (grid padding): their tile rows hold garbage
+    j = pl.program_id(1)
+    tree_ids = jax.lax.broadcasted_iota(jnp.int32, (bt, bn), 0)
+    valid = (tree_ids + j * block_trees < n_trees).astype(jnp.float32)
+    if n_classes > 0:
+        oh_c = jax.nn.one_hot(
+            leaf.astype(jnp.int32), n_classes, dtype=jnp.float32
+        )
+        contrib = (oh_c * valid[..., None]).sum(0)  # (BN, C) vote counts
+    else:
+        contrib = (leaf * valid).sum(0)[:, None]  # (BN, 1) fit sum
 
-    idx = jax.lax.fori_loop(0, max_depth, level, idx)
-    oh = jax.nn.one_hot(idx, n_heap, dtype=jnp.float32)
-    out_ref[...] = jnp.einsum("tnh,th->tn", oh, fit)
+    @pl.when(j == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += contrib
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("max_depth", "block_trees", "block_obs", "interpret"),
 )
+def _forest_predict_impl(
+    xb, feature, threshold, fit, is_internal,
+    max_depth, block_trees, block_obs, interpret,
+):
+    t, h = feature.shape
+    n, d = xb.shape
+    lo_bits, n_lo, n_hi = _heap_split(h)
+    h_pad = n_lo * n_hi
+    feature, threshold, fit, inter = (
+        _pad_heap(a, h_pad)
+        for a in (feature, threshold, fit, is_internal.astype(jnp.int32))
+    )
+    grid = (pl.cdiv(t, block_trees), pl.cdiv(n, block_obs))
+    kernel = functools.partial(
+        _tree_predict_kernel,
+        max_depth=max_depth, lo_bits=lo_bits, n_lo=n_lo, n_hi=n_hi, d=d,
+    )
+    tree_spec = lambda: pl.BlockSpec((block_trees, h_pad), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_obs, d), lambda i, j: (j, 0)),
+            tree_spec(), tree_spec(), tree_spec(), tree_spec(),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_trees, block_obs), lambda i, j: (i, j)
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=interpret,
+    )(xb, feature, threshold, fit, inter)
+
+
 def forest_predict(
     xb: jnp.ndarray,  # (N, d) int32
     feature: jnp.ndarray,  # (T, H) int32
@@ -74,26 +222,89 @@ def forest_predict(
     """Returns (T, N) per-(tree, obs) leaf fits."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    t, _ = feature.shape
+    n, d = xb.shape
+    _validate_f32_exact(
+        max_depth, d, feature=feature, threshold=threshold, xb=xb
+    )
+    return _forest_predict_impl(
+        xb, feature, threshold, fit, is_internal,
+        max_depth, min(block_trees, t), min(block_obs, n), interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "max_depth", "n_classes", "block_trees", "block_obs", "interpret"
+    ),
+)
+def _forest_predict_agg_impl(
+    xb, feature, threshold, fit, is_internal,
+    max_depth, n_classes, block_trees, block_obs, interpret,
+):
     t, h = feature.shape
     n, d = xb.shape
-    block_trees = min(block_trees, t)
-    block_obs = min(block_obs, n)
-    grid = (pl.cdiv(t, block_trees), pl.cdiv(n, block_obs))
-
-    kernel = functools.partial(
-        _tree_predict_kernel, max_depth=max_depth, n_heap=h, d=d
+    lo_bits, n_lo, n_hi = _heap_split(h)
+    h_pad = n_lo * n_hi
+    feature, threshold, fit, inter = (
+        _pad_heap(a, h_pad)
+        for a in (feature, threshold, fit, is_internal.astype(jnp.int32))
     )
-    tree_spec = lambda: pl.BlockSpec((block_trees, h), lambda i, j: (i, 0))
-    return pl.pallas_call(
+    c_out = n_classes if n_classes > 0 else 1
+    # tree tiles on the LAST grid axis: consecutive steps revisit the same
+    # output block, which is what makes the += accumulation well-defined
+    grid = (pl.cdiv(n, block_obs), pl.cdiv(t, block_trees))
+    kernel = functools.partial(
+        _tree_predict_agg_kernel,
+        max_depth=max_depth, lo_bits=lo_bits, n_lo=n_lo, n_hi=n_hi, d=d,
+        n_classes=n_classes, block_trees=block_trees, n_trees=t,
+    )
+    tree_spec = lambda: pl.BlockSpec((block_trees, h_pad), lambda i, j: (j, 0))
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_obs, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_obs, d), lambda i, j: (i, 0)),
             tree_spec(), tree_spec(), tree_spec(), tree_spec(),
         ],
-        out_specs=pl.BlockSpec(
-            (block_trees, block_obs), lambda i, j: (i, j)
-        ),
-        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        out_specs=pl.BlockSpec((block_obs, c_out), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c_out), jnp.float32),
         interpret=interpret,
-    )(xb, feature, threshold, fit, is_internal.astype(jnp.int32))
+    )(xb, feature, threshold, fit, inter)
+    return out[:, 0] if n_classes == 0 else out
+
+
+def forest_predict_agg(
+    xb: jnp.ndarray,  # (N, d) int32
+    feature: jnp.ndarray,  # (T, H) int32
+    threshold: jnp.ndarray,  # (T, H) int32
+    fit: jnp.ndarray,  # (T, H) float32 (class ids for classification)
+    is_internal: jnp.ndarray,  # (T, H) bool
+    max_depth: int,
+    n_classes: int = 0,
+    block_trees: int = 8,
+    block_obs: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused decode->predict serving kernel with IN-KERNEL ensemble
+    aggregation across the tree-tile grid axis.
+
+    Returns (N,) summed leaf fits when ``n_classes == 0`` (regression; divide
+    by T for the ensemble mean) or (N, C) per-class vote counts otherwise —
+    HBM output traffic is O(N) instead of O(T * N).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    t, _ = feature.shape
+    n, d = xb.shape
+    _validate_f32_exact(
+        max_depth, d, feature=feature, threshold=threshold, xb=xb
+    )
+    if n_classes > 0 and n_classes >= _F32_EXACT_INT:
+        raise ValueError("n_classes >= 2**24 overflows float32 vote counts")
+    return _forest_predict_agg_impl(
+        xb, feature, threshold, fit, is_internal,
+        max_depth, n_classes, min(block_trees, t), min(block_obs, n),
+        interpret,
+    )

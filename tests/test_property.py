@@ -1,5 +1,10 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
@@ -44,6 +49,27 @@ def test_huffman_roundtrip_and_prefix_free(freqs, seed):
     avg = code.encoded_bits(freqs) / freqs.sum()
     h = entropy_bits(freqs) / freqs.sum()
     assert h - 1e-9 <= avg < h + 1
+
+
+@given(freq_tables(), st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_table_decoder_matches_bitwise(freqs, seed):
+    """The table-driven decoder (LUT + canonical fallback + vectorized
+    whole-stream path) is symbol- and position-exact vs the bit-at-a-time
+    oracle on arbitrary codebooks."""
+    from repro.core.bitio import BitReader
+
+    code = HuffmanCode.from_freqs(freqs)
+    rng = np.random.default_rng(seed)
+    support = np.flatnonzero(freqs > 0)
+    syms = rng.choice(support, size=80)
+    blob = code.encode(syms)
+    assert np.array_equal(code.decode(blob, 80), syms)
+    assert np.array_equal(code.decode_bitwise(blob, 80), syms)
+    r1, r2 = BitReader(blob), BitReader(blob)
+    for _ in range(80):
+        assert code.decode_symbol(r1) == code.decode_symbol_bitwise(r2)
+        assert r1.pos == r2.pos
 
 
 @given(freq_tables(), st.integers(0, 2**32 - 1))

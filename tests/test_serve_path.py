@@ -1,0 +1,355 @@
+"""Tests for the fused decode->predict serving path (ISSUE 1):
+
+* table-driven canonical Huffman decoder (LUT + per-length first_code /
+  rank_base tables, vectorized whole-stream decode) vs the bit-at-a-time
+  oracle, including degenerate and max-length alphabets;
+* vectorized LZW / Zaks / arithmetic decoders vs their reference twins;
+* predict_compressed: bit-exact across engines and vs the uncompressed
+  forest, on both tasks;
+* the fused-aggregation Pallas kernel vs the (T, N) kernel's reduced result;
+* the float32 one-hot precision guard at the 2**24 boundary;
+* the streamed serve driver vs predict_compressed.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CompressedForest, compress_forest, predict_compressed
+from repro.core.arithmetic import ArithmeticCode
+from repro.core.bitio import BitReader
+from repro.core.compressed_predict import iter_trees
+from repro.core.huffman import HuffmanCode, build_decode_tables
+from repro.core.lz import (
+    lzw_decode_bits,
+    lzw_decode_bits_reference,
+    lzw_encode_bits,
+)
+from repro.core.vechuff import VectorHuffman
+from repro.core.zaks import zaks_decode, zaks_decode_reference, zaks_encode
+
+from conftest import random_forest, random_tree
+
+
+def random_codebook(rng, max_alphabet=80, skewed=False):
+    b = int(rng.integers(2, max_alphabet))
+    freqs = rng.integers(0, 1000, b)
+    if skewed:  # exponential freqs force long codes
+        freqs = (2.0 ** rng.integers(0, 30, b)).astype(np.int64) * (freqs > 0)
+    if (freqs > 0).sum() == 0:
+        freqs[0] = 1
+    return freqs
+
+
+class TestTableDrivenHuffman:
+    @pytest.mark.parametrize("skewed", [False, True])
+    def test_roundtrip_vs_bitwise(self, rng, skewed):
+        for trial in range(40):
+            freqs = random_codebook(rng, skewed=skewed)
+            code = HuffmanCode.from_freqs(freqs)
+            support = np.flatnonzero(freqs > 0)
+            n = int(rng.integers(1, 300))
+            p = freqs[support] / freqs[support].sum()
+            syms = rng.choice(support, size=n, p=p)
+            blob = code.encode(syms)
+            # whole-stream vectorized decode
+            assert np.array_equal(code.decode(blob, n), syms)
+            # symbol-at-a-time LUT decode tracks the bitwise oracle exactly
+            r1, r2 = BitReader(blob), BitReader(blob)
+            for want in syms:
+                assert code.decode_symbol(r1) == want
+                assert code.decode_symbol_bitwise(r2) == want
+                assert r1.pos == r2.pos
+
+    def test_degenerate_single_symbol_alphabet(self):
+        freqs = np.zeros(7, np.int64)
+        freqs[4] = 3
+        code = HuffmanCode.from_freqs(freqs)
+        syms = np.full(25, 4)
+        blob = code.encode(syms)
+        assert np.array_equal(code.decode(blob, 25), syms)
+        r = BitReader(blob)
+        assert all(code.decode_symbol(r) == 4 for _ in range(25))
+
+    def test_max_length_alphabet(self, rng):
+        """Fibonacci frequencies give code lengths ~ alphabet size, well past
+        the 12-bit LUT — exercises the per-length canonical fallback."""
+        b = 44
+        freqs = np.array([1, 1] + [0] * (b - 2), np.int64)
+        for i in range(2, b):
+            freqs[i] = freqs[i - 1] + freqs[i - 2]
+        code = HuffmanCode.from_freqs(freqs)
+        assert int(code.lengths.max()) > 30
+        syms = rng.choice(b, 2000, p=freqs / freqs.sum())
+        blob = code.encode(syms)
+        assert np.array_equal(code.decode(blob, 2000), syms)
+        assert np.array_equal(code.decode_bitwise(blob, 2000), syms)
+
+    def test_truncated_stream_raises(self, rng):
+        freqs = rng.integers(1, 50, 20)
+        code = HuffmanCode.from_freqs(freqs)
+        syms = rng.integers(0, 20, 500)
+        blob = code.encode(syms)
+        with pytest.raises(ValueError):
+            code.decode(blob[: len(blob) // 8], 500)
+
+    def test_decode_symbol_truncated_raises(self, rng):
+        """decode_symbol must refuse to consume a code that runs past the
+        payload instead of resolving zero padding into a phantom symbol."""
+        freqs = rng.integers(1, 50, 30)
+        code = HuffmanCode.from_freqs(freqs)
+        syms = rng.integers(0, 30, 100)
+        blob = code.encode(syms)[:2]
+        r = BitReader(blob)
+        with pytest.raises(ValueError):
+            for _ in range(100):
+                code.decode_symbol(r)
+
+    def test_sparse_and_dense_strategies_agree(self, rng):
+        """decode_stream picks a python LUT-chase for sparse streams and the
+        all-bit-positions pass for dense ones; both must agree."""
+        from repro.core.vechuff import decode_stream
+
+        freqs = rng.integers(1, 30, 3000)  # big alphabet -> long codes
+        code = HuffmanCode.from_freqs(freqs)
+        syms = rng.integers(0, 3000, 400)
+        blob = code.encode(syms)
+        t = code.tables()
+        assert np.array_equal(decode_stream(t, blob, 400), syms)
+        # dense: tiny alphabet, short codes
+        freqs = np.array([900, 80, 15, 5])
+        code = HuffmanCode.from_freqs(freqs)
+        syms = rng.choice(4, 5000, p=freqs / freqs.sum())
+        blob = code.encode(syms)
+        assert np.array_equal(code.decode(blob, 5000), syms)
+
+    def test_vector_huffman_encode_decode_consistent(self, rng):
+        freqs = random_codebook(rng)
+        code = HuffmanCode.from_freqs(freqs)
+        vh = VectorHuffman(code.lengths)
+        support = np.flatnonzero(freqs > 0)
+        syms = rng.choice(support, 200)
+        blob, nbits = vh.encode(syms)
+        assert blob == code.encode(syms)  # same canonical codes
+        assert np.array_equal(vh.decode(blob, 200), syms)
+        assert np.array_equal(vh.decode_streams([blob], [200])[0], syms)
+
+    def test_tables_match_canonical_codes(self, rng):
+        from repro.core.huffman import canonical_codes
+
+        freqs = random_codebook(rng)
+        code = HuffmanCode.from_freqs(freqs)
+        t = build_decode_tables(code.lengths)
+        codes = canonical_codes(code.lengths)
+        for rank, sym in enumerate(t.sym_by_rank):
+            c, l = codes[int(sym)]
+            assert int(t.rank_base[l]) <= rank
+            assert c == int(t.first_code[l]) + rank - int(t.rank_base[l])
+
+
+class TestReferenceParity:
+    def test_lzw_vectorized_matches_reference(self, rng):
+        for _ in range(20):
+            bits = (rng.random(int(rng.integers(1, 4000))) < 0.4).astype(
+                np.uint8
+            )
+            payload = lzw_encode_bits(bits)
+            got = lzw_decode_bits(payload, len(bits))
+            ref = lzw_decode_bits_reference(payload, len(bits))
+            assert np.array_equal(got, bits)
+            assert np.array_equal(ref, bits)
+
+    def test_zaks_vectorized_matches_reference(self, rng):
+        for _ in range(50):
+            t = random_tree(rng, d=4, max_depth=int(rng.integers(1, 12)))
+            z = zaks_encode(t)
+            l1, r1, leaf1 = zaks_decode(z)
+            l2, r2, leaf2 = zaks_decode_reference(z)
+            assert np.array_equal(l1, l2)
+            assert np.array_equal(r1, r2)
+            assert np.array_equal(leaf1, leaf2)
+
+    def test_zaks_invalid_raises(self):
+        with pytest.raises(ValueError):
+            zaks_decode(np.array([1, 0], np.uint8))
+        with pytest.raises(ValueError):
+            zaks_decode(np.array([0, 0, 0], np.uint8))
+
+    def test_arithmetic_fast_matches_reference(self, rng):
+        for b in (2, 2, 5, 17):  # binary twice: the specialized branch
+            freqs = rng.integers(1, 500, b)
+            code = ArithmeticCode(freqs)
+            syms = rng.integers(0, b, 400)
+            blob = code.encode(syms)
+            got = code.decode(blob, 400)
+            ref = code.decode_reference(blob, 400)
+            assert np.array_equal(got, syms)
+            assert np.array_equal(ref, syms)
+
+
+class TestPredictCompressedEngines:
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    def test_engines_bit_exact_and_match_forest(self, rng, task):
+        forest = random_forest(seed=5, n_trees=25, max_depth=9, task=task)
+        comp = CompressedForest.from_bytes(
+            compress_forest(forest).to_bytes()
+        )
+        x = rng.integers(0, 16, size=(300, 5))
+        fast = predict_compressed(comp, x)
+        slow = predict_compressed(comp, x, engine="bitwise")
+        assert np.array_equal(fast, slow)  # bit-exact across engines
+        # and both equal the uncompressed forest's prediction
+        if task == "classification":
+            votes = np.zeros((300, 2), np.int64)
+            for t in forest.trees:
+                for i in range(300):
+                    votes[i, int(t.predict_one(x[i]))] += 1
+            assert np.array_equal(fast, votes.argmax(1))
+        else:
+            acc = np.zeros(300)
+            for t in forest.trees:
+                acc += np.array(
+                    [forest.fit_values[int(t.predict_one(x[i]))]
+                     for i in range(300)]
+                )
+            np.testing.assert_allclose(fast, acc / forest.n_trees, rtol=1e-12)
+
+    def test_streamed_trees_equal_across_engines(self):
+        forest = random_forest(seed=9, n_trees=10, max_depth=7)
+        comp = compress_forest(forest)
+        for a, b, orig in zip(
+            iter_trees(comp), iter_trees(comp, engine="bitwise"), forest.trees
+        ):
+            assert a.equals(b)
+            assert a.equals(orig)
+
+    def test_unknown_engine_raises(self):
+        forest = random_forest(seed=1, n_trees=2, max_depth=3)
+        comp = compress_forest(forest)
+        with pytest.raises(ValueError):
+            list(iter_trees(comp, engine="nope"))
+
+
+class TestFusedAggregationKernel:
+    def _heap_forest(self, rng, t=9, n=150, d=6, depth=5):
+        import jax.numpy as jnp
+
+        h = (1 << (depth + 1)) - 1
+        feature = rng.integers(0, d, (t, h)).astype(np.int32)
+        threshold = rng.integers(0, 16, (t, h)).astype(np.int32)
+        is_internal = rng.random((t, h)) < 0.6
+        is_internal[:, (h - 1) // 2 :] = False
+        xb = rng.integers(0, 16, (n, d)).astype(np.int32)
+        return (
+            jnp.asarray(xb), jnp.asarray(feature), jnp.asarray(threshold),
+            jnp.asarray(is_internal), depth, t, h,
+        )
+
+    def test_agg_matches_per_tree_kernel_reduced(self, rng):
+        import jax.numpy as jnp
+
+        from repro.kernels.tree_predict.tree_predict import (
+            forest_predict,
+            forest_predict_agg,
+        )
+
+        xb, feat, thr, inter, depth, t, h = self._heap_forest(rng)
+        fit = jnp.asarray(rng.normal(size=(t, h)).astype(np.float32))
+        per_tree = forest_predict(xb, feat, thr, fit, inter, max_depth=depth)
+        agg = forest_predict_agg(xb, feat, thr, fit, inter, max_depth=depth)
+        np.testing.assert_allclose(
+            np.asarray(agg), np.asarray(per_tree).sum(0),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_agg_votes_exact(self, rng):
+        import jax.numpy as jnp
+
+        from repro.kernels.tree_predict.ref import (
+            forest_predict_agg_reference,
+        )
+        from repro.kernels.tree_predict.tree_predict import forest_predict_agg
+
+        xb, feat, thr, inter, depth, t, h = self._heap_forest(rng)
+        fit = jnp.asarray(rng.integers(0, 3, (t, h)).astype(np.float32))
+        votes = forest_predict_agg(
+            xb, feat, thr, fit, inter, max_depth=depth, n_classes=3
+        )
+        ref = forest_predict_agg_reference(
+            xb, feat, thr, fit, inter, depth, n_classes=3
+        )
+        np.testing.assert_array_equal(np.asarray(votes), np.asarray(ref))
+
+    def test_f32_precision_guard_at_boundary(self, rng):
+        import jax.numpy as jnp
+
+        from repro.kernels.tree_predict.tree_predict import forest_predict
+
+        xb, feat, thr, inter, depth, t, h = self._heap_forest(rng, t=2, n=8)
+        fit = jnp.asarray(rng.normal(size=(t, h)).astype(np.float32))
+        ok = np.asarray(thr).copy()
+        ok[0, 0] = 2**24 - 1  # largest exactly-representable int32 in f32
+        forest_predict(
+            xb, feat, jnp.asarray(ok), fit, inter, max_depth=depth
+        )
+        bad = np.asarray(thr).copy()
+        bad[0, 0] = 2**24
+        with pytest.raises(ValueError, match="2\\*\\*24"):
+            forest_predict(
+                xb, feat, jnp.asarray(bad), fit, inter, max_depth=depth
+            )
+        with pytest.raises(ValueError, match="heap nodes"):
+            forest_predict(xb, feat, thr, fit, inter, max_depth=30)
+
+
+class TestServeDriver:
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    def test_streamed_serve_matches_predict_compressed(self, rng, task):
+        from repro.launch.serve_forest import serve_compressed_forest
+
+        forest = random_forest(seed=13, n_trees=13, max_depth=6, task=task)
+        comp = compress_forest(forest)
+        x = rng.integers(0, 16, size=(120, 5))
+        ref = predict_compressed(comp, x)
+        got = serve_compressed_forest(comp, x, block_trees=5)
+        if task == "classification":
+            assert np.array_equal(got, ref)  # integer votes: exact
+        else:
+            # kernel accumulates leaf fits in float32
+            np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+    def test_heap_tiles_roundtrip(self, rng):
+        """Heap packing preserves every root-to-leaf decision."""
+        from repro.launch.serve_forest import iter_heap_tiles
+
+        forest = random_forest(seed=17, n_trees=6, max_depth=5,
+                               task="classification")
+        comp = compress_forest(forest)
+        tiles = list(iter_heap_tiles(comp, block_trees=4))
+        assert sum(f.shape[0] for f, *_ in tiles) == forest.n_trees
+        x = rng.integers(0, 16, size=(50, 5))
+        k = 0
+        for feature, threshold, fit, is_internal in tiles:
+            for row in range(feature.shape[0]):
+                tree = forest.trees[k]
+                for i in range(20):
+                    slot = 0
+                    while is_internal[row, slot]:
+                        if x[i, feature[row, slot]] <= threshold[row, slot]:
+                            slot = 2 * slot + 1
+                        else:
+                            slot = 2 * slot + 2
+                    assert fit[row, slot] == float(
+                        tree.node_fit[
+                            int(_leaf_of(tree, x[i]))
+                        ]
+                    )
+                k += 1
+
+
+def _leaf_of(tree, x_row) -> int:
+    i = 0
+    while tree.feature[i] >= 0:
+        if x_row[tree.feature[i]] <= tree.threshold[i]:
+            i = int(tree.children_left[i])
+        else:
+            i = int(tree.children_right[i])
+    return i

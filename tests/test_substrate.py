@@ -176,6 +176,10 @@ class TestCheckpoint:
         assert back["w"].dtype == np.float16
         assert (back["w"] == st["w"]).all()
 
+    @pytest.mark.skipif(
+        not hasattr(jax.sharding, "AxisType"),
+        reason="jax.sharding.AxisType needs a newer jax than this environment",
+    )
     def test_elastic_reshard(self, tmp_path):
         """Load with explicit shardings onto the (1-device) mesh — the
         device_put path used for elastic re-scale."""
