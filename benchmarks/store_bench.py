@@ -1,0 +1,175 @@
+"""Multi-tenant store benchmark (ISSUE 2 tentpole measurement).
+
+For synthetic subscriber fleets at several sizes, on both tasks:
+
+* fleet compression: shared-codebook store bytes (shared codebook + all
+  per-user deltas) vs. the sum of independent per-forest
+  ``CompressedForest.to_bytes()`` sizes;
+* losslessness: every user's forest reconstructs bit-exactly from the
+  store (``Forest.equals`` against the original, including regression
+  fit-value tables);
+* ragged multi-tenant serving: a mixed batch of many users' requests
+  through the segment-aware Pallas kernel, rows/s against sequential
+  per-user serving of the same batch, plus tile-cache hit behaviour on a
+  repeat batch;
+* parity: classification predictions match per-user
+  ``predict_compressed`` exactly (integer votes); regression reports the
+  float32-accumulation max error.
+
+Writes machine-readable results to BENCH_store.json (repo root).
+
+    PYTHONPATH=src python benchmarks/store_bench.py [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import compress_forest
+from repro.launch.serve_forest import serve_compressed_forest
+from repro.launch.serve_store import serve_store_batch
+from repro.store import build_store, make_synthetic_fleet
+
+
+def bench_fleet(
+    task: str,
+    n_users: int,
+    n_requests: int,
+    rows_per_request: int,
+    seed: int = 0,
+) -> dict:
+    fleet = make_synthetic_fleet(n_users, task=task, seed=seed)
+
+    # ---- compression: shared codebook vs independent ----------------------
+    independent_bytes = sum(
+        len(compress_forest(f).to_bytes()) for f in fleet.values()
+    )
+    t0 = time.time()
+    store = build_store(fleet)
+    t_build = time.time() - t0
+    rep = store.size_report()
+
+    # ---- losslessness ----------------------------------------------------
+    bit_exact = all(
+        store.reconstruct(u).equals(fleet[u]) for u in store.user_ids
+    )
+
+    # ---- ragged multi-tenant serving -------------------------------------
+    rng = np.random.default_rng(seed + 1)
+    d = store.shared.n_features
+    n_bins = int(store.shared.n_bins_per_feature[0])
+    user_ids = store.user_ids
+    requests = [
+        (
+            user_ids[int(rng.integers(len(user_ids)))],
+            rng.integers(0, n_bins, (rows_per_request, d)).astype(np.int32),
+        )
+        for _ in range(n_requests)
+    ]
+    n_rows = n_requests * rows_per_request
+
+    serve_store_batch(store, requests[:2])  # jit warm-up
+    t0 = time.time()
+    preds = serve_store_batch(store, requests)
+    t_cold = time.time() - t0  # includes first-touch tile decode
+    stats_cold = store.cache.stats()
+    t0 = time.time()
+    preds_warm = serve_store_batch(store, requests)
+    t_warm = time.time() - t0  # tiles served from the LRU
+    stats_warm = store.cache.stats()
+
+    # sequential baseline: one fused per-user launch per request
+    hyd = {u: store.hydrate(u) for u in set(u for u, _ in requests)}
+    for u, x in requests[:2]:
+        serve_compressed_forest(hyd[u], x)  # warm
+    t0 = time.time()
+    seq = [serve_compressed_forest(hyd[u], x) for u, x in requests]
+    t_seq = time.time() - t0
+
+    exact = 0
+    max_err = 0.0
+    for (u, x), p, q in zip(requests, preds, seq):
+        ref = store.predict(u, x)
+        if task == "classification":
+            exact += int(np.array_equal(p, ref) and np.array_equal(q, ref))
+        else:
+            max_err = max(max_err, float(np.max(np.abs(p - ref))))
+            exact += int(np.allclose(p, ref, rtol=1e-4, atol=1e-4))
+    warm_same = all(
+        np.array_equal(a, b) for a, b in zip(preds, preds_warm)
+    )
+
+    return {
+        "task": task,
+        "n_users": n_users,
+        "total_trees": sum(f.n_trees for f in fleet.values()),
+        "build_s": round(t_build, 2),
+        "compression": {
+            "independent_bytes": independent_bytes,
+            "store_total_bytes": rep["total_bytes"],
+            "shared_codebook_bytes": rep["shared_codebook_bytes"],
+            "user_delta_bytes_total": rep["user_delta_bytes_total"],
+            "store_vs_independent": round(
+                rep["total_bytes"] / independent_bytes, 4
+            ),
+            "bytes_per_user_independent": round(
+                independent_bytes / n_users, 1
+            ),
+            "bytes_per_user_store": round(
+                rep["user_delta_bytes_total"] / n_users, 1
+            ),
+        },
+        "bit_exact_reconstruction": bit_exact,
+        "serving": {
+            "n_requests": n_requests,
+            "rows_per_request": rows_per_request,
+            "distinct_users": len(set(u for u, _ in requests)),
+            "ragged_cold_ms": round(t_cold * 1e3, 1),
+            "ragged_warm_ms": round(t_warm * 1e3, 1),
+            "sequential_ms": round(t_seq * 1e3, 1),
+            "ragged_warm_rows_per_s": round(n_rows / t_warm, 1),
+            "sequential_rows_per_s": round(n_rows / t_seq, 1),
+            "speedup_vs_sequential": round(t_seq / t_warm, 2),
+            "tile_cache_cold": stats_cold,
+            "tile_cache_warm": stats_warm,
+            "parity_exact_requests": exact,
+            "regression_max_abs_err": max_err,
+            "warm_equals_cold": warm_same,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny fleet for CI smoke runs")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.quick:
+        fleet_sizes, n_requests, rows = [8], 6, 32
+    else:
+        fleet_sizes, n_requests, rows = [25, 100], 24, 128
+    out_path = pathlib.Path(
+        args.out
+        or pathlib.Path(__file__).resolve().parent.parent / "BENCH_store.json"
+    )
+    results = {
+        "benchmark": "store",
+        "quick": bool(args.quick),
+        "fleets": [
+            bench_fleet(task, n, n_requests, rows)
+            for n in fleet_sizes
+            for task in ("classification", "regression")
+        ],
+    }
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(json.dumps(results, indent=2))
+    print(f"\nwrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

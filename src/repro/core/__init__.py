@@ -3,7 +3,7 @@ of random forests via probabilistic modeling + Bregman model clustering +
 entropy coding, with prediction from the compressed format."""
 
 from .arithmetic import ArithmeticCode
-from .bregman import ClusteringResult, cluster_models, kl_kmeans
+from .bregman import ClusteringResult, cluster_models, kl_assign, kl_kmeans
 from .compressed_predict import iter_trees, predict_compressed
 from .forest_codec import CompressedForest, compress_forest, decompress_forest
 from .huffman import HuffmanCode, entropy_bits
@@ -34,6 +34,7 @@ __all__ = [
     "estimate_sigma2",
     "estimate_sigma2_per_obs",
     "iter_trees",
+    "kl_assign",
     "kl_kmeans",
     "lzw_decode_bits",
     "lzw_encode_bits",

@@ -21,6 +21,14 @@ same codebook and enables streaming prediction — see compressed_predict.)
 Everything here is byte-honest: ``CompressedForest.to_bytes()`` is a real
 serialization, and the size report in ``size_report()`` is measured from
 those bytes, bucketed as in the paper's Table 1.
+
+Codebook ownership is pluggable: the preorder stream emission
+(``emit_streams``) is driven by ``ComponentCodec`` objects — a kid→cluster
+map plus one symbol coder per cluster — and does not care where the
+codebooks live.  ``compress_forest`` builds them inline per forest (the
+paper's single-subscriber format); the multi-tenant store
+(``repro.store``) builds them against fleet-level shared codebooks and
+stores only per-user residual streams.
 """
 from __future__ import annotations
 
@@ -33,6 +41,7 @@ import numpy as np
 from .arithmetic import ArithmeticCode
 from .bitio import BitReader, BitWriter
 from .bregman import ClusteringResult, cluster_models
+from .framing import read_arr, read_bytes, write_arr, write_bytes
 from .huffman import HuffmanCode
 from .lz import lzw_decode_bits, lzw_encode_bits
 from .stats import (
@@ -67,6 +76,82 @@ class ClusteredComponent:
         if self.coder == "huffman":
             return [HuffmanCode(l) for l in self.codebook_lengths]
         return [ArithmeticCode(f) for f in self.centroid_freqs]
+
+
+@dataclass
+class ComponentCodec:
+    """A component's resolved coding state with pluggable codebook ownership:
+    the kid→cluster map plus one symbol coder per cluster id.  ``coders``
+    entries may be None for clusters the map never references (external
+    store codebooks the forest at hand does not use)."""
+
+    kid_to_cluster: np.ndarray
+    coders: list
+
+    @classmethod
+    def of_component(cls, c: ClusteredComponent) -> "ComponentCodec":
+        return cls(c.kid_to_cluster, c.decoders())
+
+    @property
+    def n_clusters(self) -> int:
+        return len(self.coders)
+
+
+def emit_streams(
+    rec,
+    d: int,
+    vars_codec: ComponentCodec,
+    split_codecs: dict[int, ComponentCodec],
+    fits_codec: ComponentCodec,
+    fit_syms_global: np.ndarray,
+):
+    """Encode every per-node symbol in GLOBAL PREORDER into per-cluster
+    streams, against whatever codebooks the ``ComponentCodec``s resolve to
+    (inline per-forest, or fleet-shared plus user-local).
+
+    Vars/splits are Huffman symbol-at-a-time; fits are gathered per cluster
+    and whole-sequence coded (required by the arithmetic coder, harmless for
+    Huffman).  Returns ``(vars_streams, vars_n, split_streams, split_n,
+    fits_streams, fits_n)`` where the split entries are per-variable dicts.
+    """
+    kid_all = key_id(rec.depth, rec.father_var, d)
+
+    vars_writers = [BitWriter() for _ in vars_codec.coders]
+    vars_n = [0] * vars_codec.n_clusters
+    split_writers = {
+        v: [BitWriter() for _ in c.coders] for v, c in split_codecs.items()
+    }
+    split_n = {v: [0] * c.n_clusters for v, c in split_codecs.items()}
+    fits_seq_per_cluster: list[list[int]] = [
+        [] for _ in range(fits_codec.n_clusters)
+    ]
+
+    internal = ~rec.is_leaf
+    for i in range(len(rec.depth)):
+        kid = int(kid_all[i])
+        if internal[i]:
+            c = int(vars_codec.kid_to_cluster[kid])
+            vars_codec.coders[c].encode_symbol(vars_writers[c], int(rec.var[i]))
+            vars_n[c] += 1
+            v = int(rec.var[i])
+            sc = int(split_codecs[v].kid_to_cluster[kid])
+            split_codecs[v].coders[sc].encode_symbol(
+                split_writers[v][sc], int(rec.split[i])
+            )
+            split_n[v][sc] += 1
+        fc = int(fits_codec.kid_to_cluster[kid])
+        fits_seq_per_cluster[fc].append(int(fit_syms_global[i]))
+
+    vars_streams = [w.getvalue() for w in vars_writers]
+    split_streams = {
+        v: [w.getvalue() for w in ws] for v, ws in split_writers.items()
+    }
+    fits_streams = [
+        fits_codec.coders[c].encode(seq) if len(seq) else b""
+        for c, seq in enumerate(fits_seq_per_cluster)
+    ]
+    fits_n = [len(s) for s in fits_seq_per_cluster]
+    return vars_streams, vars_n, split_streams, split_n, fits_streams, fits_n
 
 
 @dataclass
@@ -121,18 +206,10 @@ class CompressedForest:
         out = io.BytesIO()
 
         def w_arr(a: np.ndarray) -> None:
-            a = np.ascontiguousarray(a)
-            dt = a.dtype.str.encode()
-            out.write(struct.pack("<B", len(dt)))
-            out.write(dt)
-            out.write(struct.pack("<BI", a.ndim, a.size))
-            for s in a.shape:
-                out.write(struct.pack("<I", s))
-            out.write(a.tobytes())
+            write_arr(out, a)
 
         def w_bytes(b: bytes) -> None:
-            out.write(struct.pack("<I", len(b)))
-            out.write(b)
+            write_bytes(out, b)
 
         def w_comp(c: ClusteredComponent) -> None:
             out.write(struct.pack("<B", 1 if c.coder == "arithmetic" else 0))
@@ -173,19 +250,10 @@ class CompressedForest:
         inp = io.BytesIO(data)
 
         def r_arr() -> np.ndarray:
-            (dl,) = struct.unpack("<B", inp.read(1))
-            dt = np.dtype(inp.read(dl).decode())
-            ndim, size = struct.unpack("<BI", inp.read(5))
-            shape = tuple(
-                struct.unpack("<I", inp.read(4))[0] for _ in range(ndim)
-            )
-            return np.frombuffer(
-                inp.read(size * dt.itemsize), dtype=dt
-            ).reshape(shape)
+            return read_arr(inp)
 
         def r_bytes() -> bytes:
-            (n,) = struct.unpack("<I", inp.read(4))
-            return inp.read(n)
+            return read_bytes(inp)
 
         def r_comp() -> ClusteredComponent:
             (is_arith,) = struct.unpack("<B", inp.read(1))
@@ -327,54 +395,20 @@ def compress_forest(
     )
 
     # ---- 5. emit streams in global preorder --------------------------------
-    kid_all = key_id(rec.depth, rec.father_var, d)
-
-    vars_dec = vars_comp.decoders()
-    vars_writers = [BitWriter() for _ in vars_dec]
-    vars_counts_out = [0] * len(vars_dec)
-
-    split_writers = {
-        v: [BitWriter() for _ in c.codebook_lengths]
-        for v, c in splits_comp.items()
-    }
-    split_dec = {v: c.decoders() for v, c in splits_comp.items()}
-    split_counts_out = {
-        v: [0] * len(c.codebook_lengths) for v, c in splits_comp.items()
-    }
-
-    # arithmetic fits need whole-sequence coding per cluster: gather first
-    fits_seq_per_cluster: list[list[int]] = [
-        [] for _ in range(len(fits_comp.codebook_lengths) or len(fits_comp.centroid_freqs))
-    ]
-
-    internal = ~rec.is_leaf
-    for i in range(len(rec.depth)):
-        kid = int(kid_all[i])
-        if internal[i]:
-            c = int(vars_comp.kid_to_cluster[kid])
-            vars_dec[c].encode_symbol(vars_writers[c], int(rec.var[i]))
-            vars_counts_out[c] += 1
-            v = int(rec.var[i])
-            sc = int(splits_comp[v].kid_to_cluster[kid])
-            split_dec[v][sc].encode_symbol(
-                split_writers[v][sc], int(rec.split[i])
-            )
-            split_counts_out[v][sc] += 1
-        fc = int(fits_comp.kid_to_cluster[kid])
-        fits_seq_per_cluster[fc].append(int(fit_syms_global[i]))
-
-    vars_comp.streams = [w.getvalue() for w in vars_writers]
-    vars_comp.n_symbols = vars_counts_out
+    vs, vn, ss, sn, fs, fn = emit_streams(
+        rec, d,
+        ComponentCodec.of_component(vars_comp),
+        {v: ComponentCodec.of_component(c) for v, c in splits_comp.items()},
+        ComponentCodec.of_component(fits_comp),
+        fit_syms_global,
+    )
+    vars_comp.streams = vs
+    vars_comp.n_symbols = vn
     for v, c in splits_comp.items():
-        c.streams = [w.getvalue() for w in split_writers[v]]
-        c.n_symbols = split_counts_out[v]
-
-    fits_decoders = fits_comp.decoders()
-    fits_comp.streams = [
-        fits_decoders[c].encode(seq) if len(seq) else b""
-        for c, seq in enumerate(fits_seq_per_cluster)
-    ]
-    fits_comp.n_symbols = [len(s) for s in fits_seq_per_cluster]
+        c.streams = ss[v]
+        c.n_symbols = sn[v]
+    fits_comp.streams = fs
+    fits_comp.n_symbols = fn
 
     return CompressedForest(
         meta=meta,

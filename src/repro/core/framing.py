@@ -1,0 +1,41 @@
+"""Byte-honest framing primitives shared by every serializer in the repo.
+
+One length-prefixed array/bytes wire format shared by every serializer
+(dtype-tag + shape + raw bytes): the inline ``CompressedForest`` (RFC1) and
+the store formats (RFS1/RFD1/RFT1) must never diverge, so both call here.
+"""
+from __future__ import annotations
+
+import io
+import struct
+
+import numpy as np
+
+
+def write_arr(out: io.BytesIO, a: np.ndarray) -> None:
+    a = np.ascontiguousarray(a)
+    dt = a.dtype.str.encode()
+    out.write(struct.pack("<B", len(dt)))
+    out.write(dt)
+    out.write(struct.pack("<BI", a.ndim, a.size))
+    for s in a.shape:
+        out.write(struct.pack("<I", s))
+    out.write(a.tobytes())
+
+
+def read_arr(inp: io.BytesIO) -> np.ndarray:
+    (dl,) = struct.unpack("<B", inp.read(1))
+    dt = np.dtype(inp.read(dl).decode())
+    ndim, size = struct.unpack("<BI", inp.read(5))
+    shape = tuple(struct.unpack("<I", inp.read(4))[0] for _ in range(ndim))
+    return np.frombuffer(inp.read(size * dt.itemsize), dtype=dt).reshape(shape)
+
+
+def write_bytes(out: io.BytesIO, b: bytes) -> None:
+    out.write(struct.pack("<I", len(b)))
+    out.write(b)
+
+
+def read_bytes(inp: io.BytesIO) -> bytes:
+    (n,) = struct.unpack("<I", inp.read(4))
+    return inp.read(n)

@@ -46,3 +46,28 @@ def forest_predict_agg_reference(
         votes = jax.nn.one_hot(per_tree.astype(jnp.int32), n_classes)
         return votes.sum(0)
     return per_tree.sum(0)
+
+
+def forest_predict_agg_segmented_reference(
+    xb: jnp.ndarray,
+    obs_seg: jnp.ndarray,  # (N,) int32 segment id per observation
+    tree_seg: jnp.ndarray,  # (T,) int32 segment id per tree
+    feature: jnp.ndarray,
+    threshold: jnp.ndarray,
+    fit: jnp.ndarray,
+    is_internal: jnp.ndarray,
+    max_depth: int,
+    n_classes: int = 0,
+) -> jnp.ndarray:
+    """Ragged multi-tenant oracle: aggregate each observation over the trees
+    whose segment (user) id matches its own."""
+    per_tree = forest_predict_reference(
+        xb, feature, threshold, fit, is_internal, max_depth
+    )  # (T, N)
+    mask = (
+        tree_seg.reshape(-1, 1) == obs_seg.reshape(1, -1)
+    ).astype(per_tree.dtype)
+    if n_classes > 0:
+        votes = jax.nn.one_hot(per_tree.astype(jnp.int32), n_classes)
+        return (votes * mask[..., None]).sum(0)
+    return (per_tree * mask).sum(0)

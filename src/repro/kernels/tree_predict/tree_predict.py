@@ -16,13 +16,19 @@ are (BT, BN, Hhi) + (BT, BN, Hlo) ~ O(sqrt(H)) per element instead of the
 (BT, BN, H) materialization of a flat one-hot — the VMEM working set stays
 flat as depth grows (depth 14 => 180x smaller level scratch).
 
-Two kernels share the traversal:
+Three kernels share the traversal:
 
 * ``forest_predict``       -> (T, N) per-(tree, obs) leaf fits;
 * ``forest_predict_agg``   -> in-kernel ensemble aggregation over the
   tree-tile grid axis: (N,) fit sums (regression) or (N, C) vote counts
   (classification).  Output HBM traffic shrinks by ~T/block_trees x, and the
   host-side ensemble reduction disappears.
+* ``forest_predict_agg_segmented`` -> ragged multi-tenant aggregation: trees
+  and observations carry int32 segment (user) ids, and a (tree, obs) pair
+  contributes only when the ids match.  Many users' forests pack into ONE
+  tree axis (no per-user padding) and one kernel launch serves the whole
+  mixed batch — the multi-tenant store's serving front-end
+  (``repro.launch.serve_store``).
 
 Precision guard: node attributes round-trip through float32 one-hot einsums,
 which is exact only below 2**24 — ``forest_predict*`` validate static shapes
@@ -230,6 +236,129 @@ def forest_predict(
     return _forest_predict_impl(
         xb, feature, threshold, fit, is_internal,
         max_depth, min(block_trees, t), min(block_obs, n), interpret,
+    )
+
+
+def _tree_predict_agg_seg_kernel(
+    xb_ref, oseg_ref, tseg_ref, feat_ref, thr_ref, fit_ref, inter_ref,
+    out_ref,
+    *, max_depth: int, lo_bits: int, n_lo: int, n_hi: int, d: int,
+    n_classes: int, block_trees: int, n_trees: int,
+):
+    idx = _traverse(
+        xb_ref[...], feat_ref[...], thr_ref[...], inter_ref[...],
+        max_depth=max_depth, lo_bits=lo_bits, n_lo=n_lo, n_hi=n_hi, d=d,
+    )
+    bt, bn = idx.shape
+    fit3 = fit_ref[...].reshape(bt, n_hi, n_lo)
+    oh_hi = jax.nn.one_hot(idx >> lo_bits, n_hi, dtype=jnp.float32)
+    oh_lo = jax.nn.one_hot(idx & (n_lo - 1), n_lo, dtype=jnp.float32)
+    leaf = _two_level_gather(fit3, oh_hi, oh_lo)  # (BT, BN)
+    # a (tree, obs) pair contributes iff the tree is real (grid padding) AND
+    # its segment (user) id matches the observation's segment id
+    j = pl.program_id(1)
+    tree_ids = jax.lax.broadcasted_iota(jnp.int32, (bt, bn), 0)
+    in_range = tree_ids + j * block_trees < n_trees
+    same_seg = tseg_ref[...] == oseg_ref[...]  # (BT,1) vs (1,BN) -> (BT,BN)
+    valid = (in_range & same_seg).astype(jnp.float32)
+    if n_classes > 0:
+        oh_c = jax.nn.one_hot(
+            leaf.astype(jnp.int32), n_classes, dtype=jnp.float32
+        )
+        contrib = (oh_c * valid[..., None]).sum(0)  # (BN, C) vote counts
+    else:
+        contrib = (leaf * valid).sum(0)[:, None]  # (BN, 1) fit sum
+
+    @pl.when(j == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += contrib
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "max_depth", "n_classes", "block_trees", "block_obs", "interpret"
+    ),
+)
+def _forest_predict_agg_seg_impl(
+    xb, obs_seg, tree_seg, feature, threshold, fit, is_internal,
+    max_depth, n_classes, block_trees, block_obs, interpret,
+):
+    t, h = feature.shape
+    n, d = xb.shape
+    lo_bits, n_lo, n_hi = _heap_split(h)
+    h_pad = n_lo * n_hi
+    feature, threshold, fit, inter = (
+        _pad_heap(a, h_pad)
+        for a in (feature, threshold, fit, is_internal.astype(jnp.int32))
+    )
+    c_out = n_classes if n_classes > 0 else 1
+    # tree tiles on the LAST grid axis (same reason as the unsegmented agg
+    # kernel: consecutive steps revisit the same output block for +=)
+    grid = (pl.cdiv(n, block_obs), pl.cdiv(t, block_trees))
+    kernel = functools.partial(
+        _tree_predict_agg_seg_kernel,
+        max_depth=max_depth, lo_bits=lo_bits, n_lo=n_lo, n_hi=n_hi, d=d,
+        n_classes=n_classes, block_trees=block_trees, n_trees=t,
+    )
+    tree_spec = lambda: pl.BlockSpec((block_trees, h_pad), lambda i, j: (j, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_obs, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_obs), lambda i, j: (0, i)),
+            pl.BlockSpec((block_trees, 1), lambda i, j: (j, 0)),
+            tree_spec(), tree_spec(), tree_spec(), tree_spec(),
+        ],
+        out_specs=pl.BlockSpec((block_obs, c_out), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c_out), jnp.float32),
+        interpret=interpret,
+    )(xb, obs_seg, tree_seg, feature, threshold, fit, inter)
+    return out[:, 0] if n_classes == 0 else out
+
+
+def forest_predict_agg_segmented(
+    xb: jnp.ndarray,  # (N, d) int32
+    obs_seg: jnp.ndarray,  # (N,) or (N, 1) int32 segment (user) id per row
+    tree_seg: jnp.ndarray,  # (T,) or (T, 1) int32 segment (user) id per tree
+    feature: jnp.ndarray,  # (T, H) int32
+    threshold: jnp.ndarray,  # (T, H) int32
+    fit: jnp.ndarray,  # (T, H) float32 (class ids for classification)
+    is_internal: jnp.ndarray,  # (T, H) bool
+    max_depth: int,
+    n_classes: int = 0,
+    block_trees: int = 8,
+    block_obs: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Ragged multi-tenant serving kernel: per-row ensemble aggregation
+    restricted to the trees whose segment id matches the row's.
+
+    Trees from MANY users' forests concatenate along the T axis (ragged —
+    users need not have equal tree counts) and a mixed batch of many users'
+    observations concatenates along N; one launch returns, per row, the
+    (N,) fit sum / (N, C) vote counts over that row's own forest only.
+    Segment ids are compared as int32 inside the kernel (they never route
+    through the float32 one-hot gathers), so any int32 id is safe.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    t, _ = feature.shape
+    n, d = xb.shape
+    _validate_f32_exact(
+        max_depth, d, feature=feature, threshold=threshold, xb=xb
+    )
+    if n_classes > 0 and n_classes >= _F32_EXACT_INT:
+        raise ValueError("n_classes >= 2**24 overflows float32 vote counts")
+    obs_seg = jnp.asarray(obs_seg, jnp.int32).reshape(1, n)
+    tree_seg = jnp.asarray(tree_seg, jnp.int32).reshape(t, 1)
+    return _forest_predict_agg_seg_impl(
+        xb, obs_seg, tree_seg, feature, threshold, fit, is_internal,
+        max_depth, n_classes, min(block_trees, t), min(block_obs, n),
+        interpret,
     )
 
 

@@ -1,0 +1,28 @@
+"""repro.store — multi-tenant compressed forest store.
+
+The paper's subscriber scenario at fleet scale: one fleet-level shared
+codebook (Bregman clustering over the UNION of all users' empirical
+models), per-user delta encoding that references shared clusters and ships
+only residual streams, an LRU-cached decode runtime, and ragged
+multi-tenant batched serving through the segment-aware Pallas kernel
+(``repro.launch.serve_store``).
+"""
+
+from .codebook import SharedCodebook, SharedComponent, build_shared_codebook
+from .delta import UserDelta, encode_user_delta, hydrate, reconstruct_user
+from .fleet import make_synthetic_fleet
+from .runtime import ForestStore, TileCache, build_store
+
+__all__ = [
+    "ForestStore",
+    "SharedCodebook",
+    "SharedComponent",
+    "TileCache",
+    "UserDelta",
+    "build_shared_codebook",
+    "build_store",
+    "encode_user_delta",
+    "hydrate",
+    "make_synthetic_fleet",
+    "reconstruct_user",
+]

@@ -1,0 +1,236 @@
+"""Multi-tenant forest store runtime (store piece 3).
+
+``ForestStore`` is the registry: one fleet ``SharedCodebook`` plus one
+``UserDelta`` per user, all byte-honest.  Decoded artifacts are cached at
+two levels:
+
+* hydrated ``CompressedForest`` objects (cheap: codebook resolution only,
+  no entropy decode) — a plain dict, they are small;
+* decoded HEAP TILES, keyed ``(user, block_trees, tile_index)`` in a
+  tree-count-bounded LRU (``TileCache``) — these are the expensive
+  artifacts (full Huffman/LZW/arithmetic decode of the user's streams), so
+  hot users skip entropy decode entirely on repeat requests while cold
+  users cost at most one decode each before eviction.
+
+Serving goes through ``repro.launch.serve_store``, which packs many users'
+cached tiles into one ragged segment-aware Pallas kernel launch.
+"""
+from __future__ import annotations
+
+import io
+import struct
+from collections import OrderedDict
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from ..core.forest_codec import CompressedForest
+from ..core.framing import read_bytes, write_bytes
+from ..core.tree import Forest
+from .codebook import SharedCodebook, build_shared_codebook
+from .delta import UserDelta, encode_user_delta, hydrate, reconstruct_user
+
+_MAGIC = b"RFT1"
+
+Tile = tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+
+class TileCache:
+    """LRU over decoded heap tiles, bounded by total resident TREES (a tile
+    of t trees at heap width h costs ~t * h * 13 bytes; trees are the
+    stable unit across users of different depths)."""
+
+    def __init__(self, capacity_trees: int = 4096) -> None:
+        self.capacity_trees = capacity_trees
+        self._tiles: OrderedDict[tuple, Tile] = OrderedDict()
+        self._resident_trees = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._tiles)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._tiles
+
+    def get(self, key: tuple) -> Tile | None:
+        tile = self._tiles.get(key)
+        if tile is None:
+            self.misses += 1
+            return None
+        self._tiles.move_to_end(key)
+        self.hits += 1
+        return tile
+
+    def put(self, key: tuple, tile: Tile) -> None:
+        if key in self._tiles:
+            self._tiles.move_to_end(key)
+            return
+        self._tiles[key] = tile
+        self._resident_trees += tile[0].shape[0]
+        while (
+            self._resident_trees > self.capacity_trees
+            and len(self._tiles) > 1
+        ):
+            _, old = self._tiles.popitem(last=False)
+            self._resident_trees -= old[0].shape[0]
+            self.evictions += 1
+
+    def invalidate_user(self, user_id: str) -> None:
+        stale = [k for k in self._tiles if k[0] == user_id]
+        for k in stale:
+            self._resident_trees -= self._tiles.pop(k)[0].shape[0]
+
+    def stats(self) -> dict:
+        return {
+            "tiles": len(self._tiles),
+            "resident_trees": self._resident_trees,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }
+
+
+class ForestStore:
+    """Registry of per-user delta-encoded forests over one shared codebook."""
+
+    def __init__(
+        self, shared: SharedCodebook, tile_cache_trees: int = 4096
+    ) -> None:
+        self.shared = shared
+        self._deltas: dict[str, UserDelta] = {}
+        self._hydrated: dict[str, CompressedForest] = {}
+        self._tile_counts: dict[tuple, int] = {}
+        self.cache = TileCache(tile_cache_trees)
+
+    # ---------------- registry --------------------------------------------
+    @property
+    def user_ids(self) -> list[str]:
+        return list(self._deltas)
+
+    def __contains__(self, user_id: str) -> bool:
+        return user_id in self._deltas
+
+    def add_user(self, user_id: str, forest: Forest, seed: int = 0) -> UserDelta:
+        """Delta-encode ``forest`` against the (frozen) shared codebook and
+        register it.  Works for fleet members and late-onboarded users alike
+        (the latter may carry user-local clusters)."""
+        delta = encode_user_delta(forest, self.shared, seed=seed)
+        self.add_delta(user_id, delta)
+        return delta
+
+    def add_delta(self, user_id: str, delta: UserDelta) -> None:
+        self._deltas[user_id] = delta
+        self._hydrated.pop(user_id, None)
+        self._tile_counts = {
+            k: v for k, v in self._tile_counts.items() if k[0] != user_id
+        }
+        self.cache.invalidate_user(user_id)
+
+    def delta(self, user_id: str) -> UserDelta:
+        return self._deltas[user_id]
+
+    def n_trees(self, user_id: str) -> int:
+        return self._deltas[user_id].n_trees
+
+    def max_depth(self, user_id: str) -> int:
+        return self._deltas[user_id].max_depth
+
+    # ---------------- decode paths ----------------------------------------
+    def hydrate(self, user_id: str) -> CompressedForest:
+        comp = self._hydrated.get(user_id)
+        if comp is None:
+            comp = hydrate(self._deltas[user_id], self.shared)
+            self._hydrated[user_id] = comp
+        return comp
+
+    def reconstruct(self, user_id: str) -> Forest:
+        """Bit-exact original forest for this user."""
+        return reconstruct_user(self._deltas[user_id], self.shared)
+
+    def predict(self, user_id: str, x_binned: np.ndarray) -> np.ndarray:
+        from ..core.compressed_predict import predict_compressed
+
+        return predict_compressed(self.hydrate(user_id), x_binned)
+
+    def tiles(self, user_id: str, block_trees: int = 32) -> list[Tile]:
+        """Decoded heap tiles for one user, LRU-cached by (user, tile) so a
+        hot user's repeat requests skip entropy decode entirely."""
+        run_key = (user_id, block_trees)
+        n = self._tile_counts.get(run_key)
+        if n is not None:
+            keys = [(user_id, block_trees, i) for i in range(n)]
+            # count hits only when the WHOLE run is resident — a partially
+            # evicted run falls through to a full re-decode, so probing it
+            # must not inflate the hit stats
+            if all(k in self.cache for k in keys):
+                return [self.cache.get(k) for k in keys]  # type: ignore[misc]
+        from ..launch.serve_forest import iter_heap_tiles
+
+        tiles = list(iter_heap_tiles(self.hydrate(user_id), block_trees))
+        self.cache.misses += len(tiles)  # one miss per tile decoded
+        self._tile_counts[run_key] = len(tiles)
+        for i, t in enumerate(tiles):
+            self.cache.put((user_id, block_trees, i), t)
+        return tiles
+
+    # ---------------- sizes + serialization -------------------------------
+    def size_report(self) -> dict:
+        shared_bytes = len(self.shared.to_bytes())
+        per_user = {u: len(d.to_bytes()) for u, d in self._deltas.items()}
+        return {
+            "n_users": len(self._deltas),
+            "shared_codebook_bytes": shared_bytes,
+            "user_delta_bytes_total": sum(per_user.values()),
+            "total_bytes": shared_bytes + sum(per_user.values()),
+            "per_user_bytes": per_user,
+        }
+
+    def to_bytes(self) -> bytes:
+        out = io.BytesIO()
+        out.write(_MAGIC)
+        write_bytes(out, self.shared.to_bytes())
+        out.write(struct.pack("<I", len(self._deltas)))
+        for user_id, delta in sorted(self._deltas.items()):
+            write_bytes(out, user_id.encode("utf-8"))
+            write_bytes(out, delta.to_bytes())
+        return out.getvalue()
+
+    @classmethod
+    def from_bytes(
+        cls, data: bytes, tile_cache_trees: int = 4096
+    ) -> "ForestStore":
+        inp = io.BytesIO(data)
+        assert inp.read(4) == _MAGIC, "bad store magic"
+        shared = SharedCodebook.from_bytes(read_bytes(inp))
+        store = cls(shared, tile_cache_trees=tile_cache_trees)
+        (n,) = struct.unpack("<I", inp.read(4))
+        for _ in range(n):
+            user_id = read_bytes(inp).decode("utf-8")
+            store.add_delta(user_id, UserDelta.from_bytes(read_bytes(inp)))
+        return store
+
+
+def build_store(
+    forests: dict[str, Forest] | Sequence[tuple[str, Forest]],
+    k_max: int = 16,
+    seed: int = 0,
+    engine: str = "chunked",
+    chunk_size: int = 65536,
+    tile_cache_trees: int = 4096,
+) -> ForestStore:
+    """Build a multi-tenant store from a fleet: fleet-scale Bregman
+    clustering for the shared codebooks, then one delta per user."""
+    items: Iterable[tuple[str, Forest]] = (
+        forests.items() if isinstance(forests, dict) else forests
+    )
+    items = list(items)
+    shared = build_shared_codebook(
+        [f for _, f in items], k_max=k_max, seed=seed,
+        engine=engine, chunk_size=chunk_size,
+    )
+    store = ForestStore(shared, tile_cache_trees=tile_cache_trees)
+    for user_id, forest in items:
+        store.add_user(user_id, forest, seed=seed)
+    return store

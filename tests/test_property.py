@@ -111,3 +111,35 @@ def test_codec_lossless_invariant(seed, n_trees, max_depth, task):
     comp = compress_forest(forest)
     back = decompress_forest(CompressedForest.from_bytes(comp.to_bytes()))
     assert forest.equals(back)
+
+
+@given(
+    st.integers(0, 2**32 - 1),
+    st.integers(2, 5),
+    st.integers(2, 5),
+    st.sampled_from(["classification", "regression"]),
+)
+@settings(max_examples=10, deadline=None)
+def test_store_delta_roundtrip_bit_exact(seed, n_users, max_depth, task):
+    """THE store invariant (ISSUE 2): for a random fleet, every user's
+    delta-encoded forest — serialized and deserialized — reconstructs
+    bit-exactly against the shared codebook, fit-value tables included."""
+    from repro.store import (
+        UserDelta,
+        build_shared_codebook,
+        encode_user_delta,
+        reconstruct_user,
+    )
+
+    fleet = [
+        random_forest(
+            seed=seed + u, n_trees=3 + (seed + u) % 4, max_depth=max_depth,
+            task=task, n_fit_values=12,
+        )
+        for u in range(n_users)
+    ]
+    shared = build_shared_codebook(fleet, seed=seed % 7)
+    for forest in fleet:
+        delta = encode_user_delta(forest, shared, seed=seed % 5)
+        rt = UserDelta.from_bytes(delta.to_bytes())
+        assert reconstruct_user(rt, shared).equals(forest)

@@ -1,0 +1,361 @@
+"""Tier-1 tests for the multi-tenant forest store (ISSUE 2):
+
+* fleet-scale Bregman clustering edge cases (K=1, K >= M, empty-cluster
+  re-seeding, chunked-vs-dense assignment parity);
+* shared codebook build + byte roundtrip;
+* per-user delta encode -> decode bit-exactness (both tasks), hydration
+  parity with the inline codec's predictions, and storage-size wins over
+  independent per-forest compression;
+* late onboarding against a frozen codebook (user-local clusters);
+* the tile LRU cache (hits, eviction, invalidation);
+* the segment-aware aggregation kernel vs its oracle;
+* ragged multi-tenant serving vs per-user predict_compressed.
+
+No importorskip: everything here runs on the baked-in numpy + jax stack.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CompressedForest, compress_forest, predict_compressed
+from repro.core.bregman import cluster_models, kl_assign, kl_kmeans
+from repro.core.tree import Forest, ForestMeta, Tree
+from repro.store import (
+    ForestStore,
+    SharedCodebook,
+    TileCache,
+    UserDelta,
+    build_shared_codebook,
+    build_store,
+    encode_user_delta,
+    hydrate,
+    make_synthetic_fleet,
+    reconstruct_user,
+)
+
+from conftest import random_forest
+
+
+def small_fleet(task="classification", n_users=8, seed=0):
+    return make_synthetic_fleet(
+        n_users, task=task, n_trees=(5, 9), d=5, n_bins=12, max_depth=5,
+        seed=seed,
+    )
+
+
+class TestBregmanEdgeCases:
+    def test_k_equals_one(self, rng):
+        counts = rng.integers(0, 40, (30, 6)).astype(float)
+        for engine in ("dense", "chunked"):
+            assign, cent, obj = kl_kmeans(counts, 1, engine=engine)
+            assert np.all(assign == 0)
+            assert cent.shape == (1, 6)
+            assert obj >= 0
+
+    def test_k_at_least_m(self, rng):
+        counts = rng.integers(1, 40, (4, 6)).astype(float)
+        for engine in ("dense", "chunked"):
+            assign, cent, obj = kl_kmeans(counts, 10, engine=engine)
+            assert cent.shape[0] == 4  # k clamped to M
+            # every model gets (numerically) its own centroid: loss ~ 0
+            # (the dense engine accumulates in float32 under jit)
+            assert obj < 1e-3
+
+    def test_empty_cluster_reseeding(self):
+        # 3 well-separated groups but MANY duplicate rows: naive Lloyd with
+        # k=4 empties a cluster; the chunked engine must re-seed it
+        # deterministically and still converge to <= 3 used clusters that
+        # cover the data.
+        a = np.tile([100, 1, 1], (10, 1))
+        b = np.tile([1, 100, 1], (10, 1))
+        c = np.tile([1, 1, 100], (10, 1))
+        counts = np.concatenate([a, b, c]).astype(float)
+        assign1, cent1, obj1 = kl_kmeans(counts, 4, engine="chunked", seed=0)
+        assign2, cent2, obj2 = kl_kmeans(counts, 4, engine="chunked", seed=0)
+        assert np.array_equal(assign1, assign2)  # deterministic
+        assert obj1 == obj2
+        # the three groups must land in three distinct clusters
+        groups = [np.unique(assign1[i * 10 : (i + 1) * 10]) for i in range(3)]
+        assert all(len(g) == 1 for g in groups)
+        assert len({int(g[0]) for g in groups}) == 3
+
+    def test_chunked_vs_dense_assignment_parity(self, rng):
+        counts = rng.integers(0, 100, (257, 9)).astype(float)
+        centroids = rng.dirichlet(np.ones(9), size=7)
+        a_dense, d_dense = kl_assign(counts, centroids, chunk_size=None)
+        for chunk in (1, 13, 64, 10_000):
+            a_chunk, d_chunk = kl_assign(counts, centroids, chunk_size=chunk)
+            assert np.array_equal(a_dense, a_chunk)
+            # BLAS reduction order varies with chunk shape: ~ulp agreement
+            np.testing.assert_allclose(d_dense, d_chunk, rtol=1e-12)
+
+    def test_chunked_kmeans_chunk_size_invariant(self, rng):
+        counts = rng.integers(0, 50, (120, 5)).astype(float)
+        a1, c1, o1 = kl_kmeans(counts, 6, engine="chunked", chunk_size=7)
+        a2, c2, o2 = kl_kmeans(counts, 6, engine="chunked", chunk_size=10_000)
+        assert np.array_equal(a1, a2)
+        assert np.array_equal(c1, c2)
+        assert o1 == o2
+
+    def test_cluster_models_engines_agree_on_quality(self, rng):
+        counts = rng.integers(0, 60, (64, 8)).astype(float)
+        r_dense = cluster_models(counts, 16.0, k_max=6, engine="dense")
+        r_chunk = cluster_models(counts, 16.0, k_max=6, engine="chunked")
+        # different Lloyd variants, same objective neighbourhood
+        assert r_chunk.objective_bits <= r_dense.objective_bits * 1.05
+
+    def test_unknown_engine_raises(self, rng):
+        counts = rng.integers(0, 10, (5, 3)).astype(float)
+        with pytest.raises(ValueError):
+            kl_kmeans(counts, 2, engine="nope")
+
+
+class TestSharedCodebook:
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    def test_build_and_roundtrip(self, task):
+        fleet = small_fleet(task)
+        shared = build_shared_codebook(list(fleet.values()))
+        blob = shared.to_bytes()
+        shared2 = SharedCodebook.from_bytes(blob)
+        assert shared2.to_bytes() == blob
+        assert shared2.task == task
+        assert shared2.vars_comp.n_clusters >= 1
+        if task == "regression":
+            assert len(shared2.fleet_fit_values) >= 1
+            assert np.array_equal(
+                np.sort(shared2.fleet_fit_values), shared2.fleet_fit_values
+            )
+
+    def test_schema_mismatch_rejected(self):
+        f1 = random_forest(seed=0, n_trees=3, d=5)
+        f2 = random_forest(seed=1, n_trees=3, d=7)
+        with pytest.raises(ValueError, match="schema"):
+            build_shared_codebook([f1, f2])
+
+    def test_cost_table_marks_uncodable(self):
+        fleet = small_fleet()
+        shared = build_shared_codebook(list(fleet.values()))
+        cost = shared.vars_comp.cost_table()
+        assert cost.shape[0] == shared.vars_comp.n_clusters
+        assert np.isfinite(cost).any()
+        for k, lengths in enumerate(shared.vars_comp.codebook_lengths):
+            assert np.all(np.isinf(cost[k, np.asarray(lengths) == 0]))
+
+
+class TestUserDelta:
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    def test_bit_exact_reconstruction_and_smaller_fleet(self, task):
+        fleet = small_fleet(task, n_users=10)
+        forests = list(fleet.values())
+        shared = build_shared_codebook(forests)
+        independent = sum(
+            len(compress_forest(f).to_bytes()) for f in forests
+        )
+        store_total = len(shared.to_bytes())
+        for f in forests:
+            delta = encode_user_delta(f, shared)
+            blob = delta.to_bytes()
+            store_total += len(blob)
+            rt = UserDelta.from_bytes(blob)
+            assert rt.to_bytes() == blob
+            rec = reconstruct_user(rt, shared)
+            assert rec.equals(f)  # bit-exact, fit tables included
+        assert store_total < independent
+
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    def test_hydrated_predictions_match_inline_codec(self, rng, task):
+        fleet = small_fleet(task, n_users=6)
+        shared = build_shared_codebook(list(fleet.values()))
+        x = rng.integers(0, 12, (80, 5))
+        for f in fleet.values():
+            comp = hydrate(encode_user_delta(f, shared), shared)
+            inline = CompressedForest.from_bytes(
+                compress_forest(f).to_bytes()
+            )
+            assert np.array_equal(
+                predict_compressed(comp, x), predict_compressed(inline, x)
+            )
+
+    def test_late_onboarding_uses_local_clusters(self):
+        # freeze a codebook on a 4-bin fleet, then onboard a user whose
+        # forest uses bin symbols the fleet never produced: shared clusters
+        # cannot code them, so the delta must carry user-local codebooks and
+        # still reconstruct bit-exactly.
+        d, n_bins = 3, 8
+        meta = ForestMeta(
+            n_features=d, task="classification", n_classes=2,
+            n_bins_per_feature=np.full(d, n_bins, np.int32),
+            n_train_obs=100,
+        )
+
+        def two_level_tree(thresh_sym):
+            return Tree(
+                np.array([0, -1, -1]),
+                np.array([thresh_sym, -1, -1]),
+                np.array([1, -1, -1]),
+                np.array([2, -1, -1]),
+                np.array([0, 0, 1], dtype=np.int64),
+            )
+
+        fleet = [
+            Forest([two_level_tree(s % 4)] * 3, meta) for s in range(6)
+        ]
+        shared = build_shared_codebook(fleet)
+        newcomer = Forest([two_level_tree(7)] * 3, meta)  # unseen symbol 7
+        delta = encode_user_delta(newcomer, shared)
+        assert sum(dc.n_local for dc in delta.splits_dc.values()) >= 1
+        rt = UserDelta.from_bytes(delta.to_bytes())
+        assert reconstruct_user(rt, shared).equals(newcomer)
+
+    def test_regression_extra_fit_values_roundtrip(self):
+        fleet = small_fleet("regression", n_users=5)
+        shared = build_shared_codebook(list(fleet.values()))
+        # newcomer with fit values outside the fleet table
+        f = random_forest(
+            seed=99, n_trees=4, d=5, max_depth=4, task="regression",
+            n_bins=12, n_fit_values=11,
+        )
+        delta = encode_user_delta(f, shared)
+        assert len(delta.extra_fit_values) == 11  # none in the fleet union
+        rec = reconstruct_user(UserDelta.from_bytes(delta.to_bytes()), shared)
+        assert rec.equals(f)
+
+
+class TestForestStore:
+    def test_store_roundtrip_and_registry(self):
+        fleet = small_fleet(n_users=6)
+        store = build_store(fleet)
+        blob = store.to_bytes()
+        store2 = ForestStore.from_bytes(blob)
+        assert store2.to_bytes() == blob
+        assert sorted(store2.user_ids) == sorted(fleet)
+        for u, f in fleet.items():
+            assert store2.reconstruct(u).equals(f)
+            assert store2.n_trees(u) == f.n_trees
+
+    def test_predict_matches_inline(self, rng):
+        fleet = small_fleet(n_users=4)
+        store = build_store(fleet)
+        x = rng.integers(0, 12, (50, 5))
+        for u, f in fleet.items():
+            assert np.array_equal(
+                store.predict(u, x),
+                predict_compressed(compress_forest(f), x),
+            )
+
+    def test_tiles_cached_and_invalidated(self):
+        fleet = small_fleet(n_users=3)
+        store = build_store(fleet)
+        u = store.user_ids[0]
+        t1 = store.tiles(u, block_trees=4)
+        misses = store.cache.misses
+        t2 = store.tiles(u, block_trees=4)
+        assert store.cache.misses == misses  # pure hits
+        assert store.cache.hits >= len(t1)
+        assert all(np.array_equal(a[0], b[0]) for a, b in zip(t1, t2))
+        store.add_user(u, fleet[u])  # re-register -> caches invalidated
+        assert all(k[0] != u for k in store.cache._tiles)
+
+    def test_tile_cache_lru_eviction(self):
+        cache = TileCache(capacity_trees=4)
+        mk = lambda t: (np.zeros((t, 3)),) * 4
+        cache.put(("a", 4, 0), mk(2))
+        cache.put(("b", 4, 0), mk(2))
+        assert cache.get(("a", 4, 0)) is not None  # refresh a
+        cache.put(("c", 4, 0), mk(2))  # evicts b (LRU)
+        assert cache.get(("b", 4, 0)) is None
+        assert cache.get(("a", 4, 0)) is not None
+        assert cache.evictions == 1
+
+
+class TestSegmentedServing:
+    def test_segmented_kernel_matches_reference(self, rng):
+        import jax.numpy as jnp
+
+        from repro.kernels.tree_predict.ref import (
+            forest_predict_agg_segmented_reference,
+        )
+        from repro.kernels.tree_predict.tree_predict import (
+            forest_predict_agg_segmented,
+        )
+
+        t, n, d, depth = 11, 90, 6, 5
+        h = (1 << (depth + 1)) - 1
+        feature = rng.integers(0, d, (t, h)).astype(np.int32)
+        threshold = rng.integers(0, 16, (t, h)).astype(np.int32)
+        inter = rng.random((t, h)) < 0.6
+        inter[:, (h - 1) // 2 :] = False
+        xb = rng.integers(0, 16, (n, d)).astype(np.int32)
+        tseg = rng.integers(0, 4, t).astype(np.int32)
+        oseg = rng.integers(0, 4, n).astype(np.int32)
+        cases = [
+            (0, rng.normal(size=(t, h)).astype(np.float32)),
+            (3, rng.integers(0, 3, (t, h)).astype(np.float32)),
+        ]
+        for n_classes, fit in cases:
+            got = forest_predict_agg_segmented(
+                jnp.asarray(xb), oseg, tseg, jnp.asarray(feature),
+                jnp.asarray(threshold), jnp.asarray(fit),
+                jnp.asarray(inter), max_depth=depth, n_classes=n_classes,
+                block_trees=4, block_obs=32,
+            )
+            ref = forest_predict_agg_segmented_reference(
+                jnp.asarray(xb), jnp.asarray(oseg), jnp.asarray(tseg),
+                jnp.asarray(feature), jnp.asarray(threshold),
+                jnp.asarray(fit), jnp.asarray(inter), depth,
+                n_classes=n_classes,
+            )
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(ref), rtol=1e-5, atol=1e-5
+            )
+
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    def test_ragged_batch_matches_per_user_predict(self, rng, task):
+        from repro.launch.serve_store import serve_store_batch
+
+        fleet = small_fleet(task, n_users=5)
+        store = build_store(fleet)
+        users = store.user_ids
+        requests = [
+            (users[i % len(users)], rng.integers(0, 12, (30 + 7 * i, 5)))
+            for i in range(7)
+        ]
+        preds = serve_store_batch(store, requests, block_trees=6)
+        assert len(preds) == len(requests)
+        for (u, x), p in zip(requests, preds):
+            ref = store.predict(u, x)
+            if task == "classification":
+                assert np.array_equal(p, ref)  # integer votes: exact
+            else:
+                np.testing.assert_allclose(p, ref, rtol=1e-5, atol=1e-5)
+
+    def test_empty_batch(self):
+        fleet = small_fleet(n_users=2)
+        store = build_store(fleet)
+        from repro.launch.serve_store import serve_store_batch
+
+        assert serve_store_batch(store, []) == []
+
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    def test_zero_row_requests(self, rng, task):
+        """Zero-row requests (mid-batch AND batch-final) must come back as
+        empty predictions without disturbing their neighbours."""
+        from repro.launch.serve_store import serve_store_batch
+
+        fleet = small_fleet(task, n_users=3)
+        store = build_store(fleet)
+        u = store.user_ids
+        x = rng.integers(0, 12, (20, 5)).astype(np.int32)
+        empty = np.zeros((0, 5), np.int32)
+        preds = serve_store_batch(
+            store,
+            [(u[0], x), (u[1], empty), (u[2], x), (u[0], empty)],
+            block_trees=4,
+        )
+        assert preds[1].shape == (0,) and preds[3].shape == (0,)
+        for idx, user in ((0, u[0]), (2, u[2])):
+            ref = store.predict(user, x)
+            if task == "classification":
+                assert np.array_equal(preds[idx], ref)
+            else:
+                np.testing.assert_allclose(preds[idx], ref, rtol=1e-5,
+                                           atol=1e-5)
