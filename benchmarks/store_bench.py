@@ -11,7 +11,9 @@ For synthetic subscriber fleets at several sizes, on both tasks:
 * ragged multi-tenant serving: a mixed batch of many users' requests
   through the segment-aware Pallas kernel, rows/s against sequential
   per-user serving of the same batch, plus tile-cache hit behaviour on a
-  repeat batch;
+  repeat batch; the pipelined arena engine (ISSUE 3) runs the same warm
+  batch so the rows/s trajectory across PRs lives in one artifact
+  (deeper engine/scaling analysis: benchmarks/serve_pipeline.py);
 * parity: classification predictions match per-user
   ``predict_compressed`` exactly (integer votes); regression reports the
   float32-accumulation max error.
@@ -32,7 +34,7 @@ import numpy as np
 from repro.core import compress_forest
 from repro.launch.serve_forest import serve_compressed_forest
 from repro.launch.serve_store import serve_store_batch
-from repro.store import build_store, make_synthetic_fleet
+from repro.store import build_store, make_request_batch, make_synthetic_fleet
 
 
 def bench_fleet(
@@ -59,28 +61,42 @@ def bench_fleet(
     )
 
     # ---- ragged multi-tenant serving -------------------------------------
-    rng = np.random.default_rng(seed + 1)
-    d = store.shared.n_features
-    n_bins = int(store.shared.n_bins_per_feature[0])
-    user_ids = store.user_ids
-    requests = [
-        (
-            user_ids[int(rng.integers(len(user_ids)))],
-            rng.integers(0, n_bins, (rows_per_request, d)).astype(np.int32),
-        )
-        for _ in range(n_requests)
-    ]
+    requests = make_request_batch(
+        store, n_requests, rows_per_request, seed + 1
+    )
     n_rows = n_requests * rows_per_request
 
-    serve_store_batch(store, requests[:2])  # jit warm-up
+    def compact(stats: dict) -> dict:
+        per_user = stats.pop("per_user", {})
+        rates = [v["hit_rate"] for v in per_user.values()]
+        stats["mean_user_hit_rate"] = (
+            round(float(np.mean(rates)), 4) if rates else 0.0
+        )
+        return stats
+
+    # the PR 2 baseline path, measured at its shipped block sizes
+    serve_store_batch(store, requests[:2], engine="simple")  # jit warm-up
     t0 = time.time()
-    preds = serve_store_batch(store, requests)
+    preds = serve_store_batch(store, requests, engine="simple")
     t_cold = time.time() - t0  # includes first-touch tile decode
-    stats_cold = store.cache.stats()
+    stats_cold = compact(store.cache.stats())
     t0 = time.time()
-    preds_warm = serve_store_batch(store, requests)
+    preds_warm = serve_store_batch(store, requests, engine="simple")
     t_warm = time.time() - t0  # tiles served from the LRU
-    stats_warm = store.cache.stats()
+    stats_warm = compact(store.cache.stats())
+
+    # the pipelined arena engine (ISSUE 3) on the same batch: the serving
+    # rows/s trajectory BENCH_store.json tracks across PRs
+    serve_store_batch(store, requests[:2], engine="pipelined")
+    serve_store_batch(store, requests, engine="pipelined")  # arena warm
+    t0 = time.time()
+    preds_pipe = serve_store_batch(store, requests, engine="pipelined")
+    t_pipe = time.time() - t0
+    pipe_same = all(
+        np.array_equal(a, b) if task == "classification"
+        else np.allclose(a, b, rtol=1e-5, atol=1e-5)
+        for a, b in zip(preds_warm, preds_pipe)
+    )
 
     # sequential baseline: one fused per-user launch per request
     hyd = {u: store.hydrate(u) for u in set(u for u, _ in requests)}
@@ -130,10 +146,14 @@ def bench_fleet(
             "distinct_users": len(set(u for u, _ in requests)),
             "ragged_cold_ms": round(t_cold * 1e3, 1),
             "ragged_warm_ms": round(t_warm * 1e3, 1),
+            "pipelined_warm_ms": round(t_pipe * 1e3, 1),
             "sequential_ms": round(t_seq * 1e3, 1),
             "ragged_warm_rows_per_s": round(n_rows / t_warm, 1),
+            "pipelined_rows_per_s": round(n_rows / t_pipe, 1),
             "sequential_rows_per_s": round(n_rows / t_seq, 1),
             "speedup_vs_sequential": round(t_seq / t_warm, 2),
+            "pipelined_speedup_vs_simple": round(t_warm / t_pipe, 2),
+            "pipelined_matches_simple": pipe_same,
             "tile_cache_cold": stats_cold,
             "tile_cache_warm": stats_warm,
             "parity_exact_requests": exact,

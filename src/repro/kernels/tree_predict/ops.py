@@ -1,6 +1,10 @@
-"""jit'd wrapper: ForestModel-level prediction via the Pallas kernels."""
+"""jit'd wrappers: ForestModel-level prediction via the Pallas kernels,
+plus the multi-device sharded entry for the segmented serving kernel."""
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -60,3 +64,114 @@ def predict_forest_kernel_per_tree(
         max_depth=cfg.max_depth,
         interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Sharded ragged tree axis (ISSUE 3 tentpole piece 3)
+# ---------------------------------------------------------------------------
+
+def partition_segments_by_load(
+    seg_trees: np.ndarray, n_shards: int
+) -> list[list[int]]:
+    """Greedy bin-pack of segment (user) ids onto ``n_shards`` devices by
+    per-segment tree count: heaviest segment first onto the least-loaded
+    shard.  Returns one list of segment ids per shard (possibly empty)."""
+    seg_trees = np.asarray(seg_trees, np.int64)
+    shards: list[list[int]] = [[] for _ in range(n_shards)]
+    loads = np.zeros(n_shards, np.int64)
+    for s in np.argsort(-seg_trees, kind="stable"):
+        k = int(np.argmin(loads))
+        shards[k].append(int(s))
+        loads[k] += int(seg_trees[s])
+    return shards
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_callable(
+    n_devices: int, max_depth: int, n_classes: int, block_trees: int,
+    block_obs: int, tb2: int, interpret: bool,
+):
+    """Build (once per static config) the jitted shard_map program: each
+    device runs the pipelined segmented kernel on ITS tree shard against
+    the full replicated batch, then the (N, C) partials all-reduce."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from .tree_predict import _forest_predict_agg_seg_pipelined_impl
+
+    mesh = Mesh(np.array(jax.devices()[:n_devices]), ("shard",))
+
+    def per_device(xb, oseg, code, fit, tseg, chunk_lo, chunk_hi):
+        part = _forest_predict_agg_seg_pipelined_impl(
+            xb, oseg, code[0], fit[0], tseg[0], chunk_lo[0], chunk_hi[0],
+            max_depth, n_classes, block_trees, block_obs, tb2, interpret,
+        )
+        if n_classes == 0:
+            part = part[:, None]
+        return jax.lax.psum(part, "shard")
+
+    fn = shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=(
+            P(), P(), P("shard"), P("shard"), P("shard"), P("shard"),
+            P("shard"),
+        ),
+        out_specs=P(),
+        check_rep=False,  # pallas_call has no replication rule
+    )
+    return jax.jit(fn)
+
+
+def forest_predict_agg_segmented_sharded(
+    xb,  # (N, d) int32, replicated
+    obs_seg,  # (N,) int32, replicated
+    code,  # (S, T_pad, H) float32 fused tiles, one tree shard per device
+    fit,  # (S, T_pad, H) float32
+    tree_seg,  # (S, T_pad) int32, -1 marks padding trees
+    chunk_lo,  # (S, ceil(N / block_obs)) int32 per-shard fori_loop bounds
+    chunk_hi,  # (S, ceil(N / block_obs)) int32
+    max_depth: int,
+    tb2: int,
+    n_classes: int = 0,
+    block_trees: int = 8,
+    block_obs: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Multi-device ragged serving: the tree axis is SHARDED across devices
+    (one stacked shard per device, load-balanced by
+    ``partition_segments_by_load``), observations are replicated, each
+    device accumulates partial votes/sums over its own trees through the
+    pipelined DMA kernel, and the (N, C) aggregate all-reduces with one
+    ``psum`` — fleets whose hot tree set exceeds one core's VMEM/HBM scale
+    out instead of thrashing.
+
+    Vote counts stay integer-exact under the reduction (float32 holds
+    integers exactly below 2**24), so classification results are bit-exact
+    against the single-device engines."""
+    from .tree_predict import _F32_EXACT_INT, _validate_f32_exact
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    s = code.shape[0]
+    n_dev = len(jax.devices())
+    if s > n_dev:
+        raise ValueError(f"{s} tree shards but only {n_dev} devices")
+    n, d = xb.shape
+    # same guards as the single-device packed entry: out-of-range values
+    # must raise, not silently round through the float32 one-hot gathers
+    if n_classes > 0 and n_classes >= _F32_EXACT_INT:
+        raise ValueError("n_classes >= 2**24 overflows float32 vote counts")
+    arrays = {"xb": xb} if isinstance(xb, np.ndarray) else {}
+    _validate_f32_exact(max_depth, d, **arrays)
+    fn = _sharded_callable(
+        s, max_depth, n_classes, block_trees, min(block_obs, n), int(tb2),
+        interpret,
+    )
+    out = fn(
+        jnp.asarray(xb, jnp.int32), jnp.asarray(obs_seg, jnp.int32),
+        jnp.asarray(code), jnp.asarray(fit),
+        jnp.asarray(tree_seg, jnp.int32), jnp.asarray(chunk_lo, jnp.int32),
+        jnp.asarray(chunk_hi, jnp.int32),
+    )
+    return out[:, 0] if n_classes == 0 else out

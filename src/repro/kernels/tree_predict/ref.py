@@ -71,3 +71,28 @@ def forest_predict_agg_segmented_reference(
         votes = jax.nn.one_hot(per_tree.astype(jnp.int32), n_classes)
         return (votes * mask[..., None]).sum(0)
     return (per_tree * mask).sum(0)
+
+
+def forest_predict_agg_segmented_packed_reference(
+    xb: jnp.ndarray,
+    obs_seg: jnp.ndarray,
+    code: jnp.ndarray,  # (T_pad, H) fused node attrs (see fuse_node_attrs)
+    fit: jnp.ndarray,  # (T_pad, H)
+    tree_seg: jnp.ndarray,  # (T_pad,), -1 marks padding trees
+    max_depth: int,
+    tb2: int,  # 2 * threshold field width (a power of two)
+    n_classes: int = 0,
+) -> jnp.ndarray:
+    """Oracle for the PACKED pipelined layout: un-fuse the float32 code
+    table back into (feature, threshold, is_internal) with exact integer
+    arithmetic and defer to the plain segmented reference — validates the
+    fused encode/decode independently of the DMA kernel."""
+    code_i = code.astype(jnp.int32)  # exact: fused codes are < 2**24
+    feature = code_i // tb2
+    rem = code_i - feature * tb2
+    threshold = rem // 2
+    is_internal = (rem % 2) == 1
+    return forest_predict_agg_segmented_reference(
+        xb, obs_seg, tree_seg, feature, threshold, fit, is_internal,
+        max_depth, n_classes=n_classes,
+    )

@@ -30,6 +30,31 @@ Three kernels share the traversal:
   mixed batch — the multi-tenant store's serving front-end
   (``repro.launch.serve_store``).
 
+The segmented kernel comes in TWO engines (``engine=`` on the wrapper):
+
+* ``"simple"``  — the original grid-per-tree-tile kernel, kept verbatim as
+  the differential oracle and the PR 2 serving baseline;
+* ``"pipelined"`` (default when inputs allow) — one launch per batch with a
+  MANUAL double-buffered DMA pipeline: tree tiles live in HBM
+  (``memory_space=ANY``) and the kernel streams them into two VMEM slots
+  with ``pltpu.make_async_copy`` so the NEXT tile's upload overlaps the
+  CURRENT tile's traversal.  Two further wins ride on the rework:
+
+  - **fused node attributes**: (feature, threshold, is_internal) pack into
+    one power-of-two-scaled float32 code word
+    ``feat * 2 * TB + thr * 2 + inter`` (``TB`` = threshold field width
+    rounded up to a power of two), so each traversal level performs ONE
+    two-level heap gather instead of three.  All field scales are powers
+    of two, so the f32 divide/floor decode is exact below 2**24 — the
+    wrapper verifies the packed range and falls back to ``"simple"``
+    otherwise.
+  - **block-diagonal chunk skipping**: per observation block the wrapper
+    precomputes (host side) the [lo, hi) range of tree chunks whose
+    segment set intersects the block's, shipped via SMEM; with rows and
+    trees sorted by segment the kernel touches ~sum_u T_u * N_u work, not
+    T_total * N_total, in ONE launch with no host round-trips between
+    chunks.
+
 Precision guard: node attributes round-trip through float32 one-hot einsums,
 which is exact only below 2**24 — ``forest_predict*`` validate static shapes
 and (when inputs are concrete) data ranges and raise instead of silently
@@ -43,6 +68,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _F32_EXACT_INT = 1 << 24  # float32 has a 24-bit significand
 
@@ -320,32 +346,13 @@ def _forest_predict_agg_seg_impl(
     return out[:, 0] if n_classes == 0 else out
 
 
-def forest_predict_agg_segmented(
-    xb: jnp.ndarray,  # (N, d) int32
-    obs_seg: jnp.ndarray,  # (N,) or (N, 1) int32 segment (user) id per row
-    tree_seg: jnp.ndarray,  # (T,) or (T, 1) int32 segment (user) id per tree
-    feature: jnp.ndarray,  # (T, H) int32
-    threshold: jnp.ndarray,  # (T, H) int32
-    fit: jnp.ndarray,  # (T, H) float32 (class ids for classification)
-    is_internal: jnp.ndarray,  # (T, H) bool
-    max_depth: int,
-    n_classes: int = 0,
-    block_trees: int = 8,
-    block_obs: int = 256,
-    interpret: bool | None = None,
-) -> jnp.ndarray:
-    """Ragged multi-tenant serving kernel: per-row ensemble aggregation
-    restricted to the trees whose segment id matches the row's.
-
-    Trees from MANY users' forests concatenate along the T axis (ragged —
-    users need not have equal tree counts) and a mixed batch of many users'
-    observations concatenates along N; one launch returns, per row, the
-    (N,) fit sum / (N, C) vote counts over that row's own forest only.
-    Segment ids are compared as int32 inside the kernel (they never route
-    through the float32 one-hot gathers), so any int32 id is safe.
-    """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+def _forest_predict_agg_segmented_simple(
+    xb, obs_seg, tree_seg, feature, threshold, fit, is_internal,
+    max_depth, n_classes, block_trees, block_obs, interpret,
+):
+    """The original segmented kernel (PR 2) — grid over (obs, tree) tiles
+    with += accumulation.  Kept verbatim as the ``engine="simple"`` oracle
+    and serving baseline."""
     t, _ = feature.shape
     n, d = xb.shape
     _validate_f32_exact(
@@ -359,6 +366,361 @@ def forest_predict_agg_segmented(
         xb, obs_seg, tree_seg, feature, threshold, fit, is_internal,
         max_depth, n_classes, min(block_trees, t), min(block_obs, n),
         interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pipelined engine: fused node attributes + double-buffered DMA over chunks
+# ---------------------------------------------------------------------------
+
+def fused_threshold_base(max_threshold: int) -> int:
+    """``TB``: threshold field width of the fused code word, rounded up to a
+    power of two so every decode divide/floor is exact in float32."""
+    return 1 << max(int(max_threshold), 1).bit_length()
+
+
+def fuse_node_attrs(
+    feature: np.ndarray, threshold: np.ndarray, is_internal: np.ndarray,
+    tb: int,
+) -> np.ndarray:
+    """Pack (feature, threshold, is_internal) into one float32 code table:
+    ``code = (feature * TB + threshold) * 2 + is_internal``.  Requires
+    non-negative fields, ``threshold < TB``, and the packed range below
+    2**24 (caller-checked via ``fused_code_limit``)."""
+    code = (
+        np.asarray(feature, np.int64) * (2 * tb)
+        + np.asarray(threshold, np.int64) * 2
+        + np.asarray(is_internal, np.int64)
+    )
+    return code.astype(np.float32)
+
+
+def fused_code_limit(d: int, tb: int) -> int:
+    """Largest code word the fused packing can produce: feature d-1,
+    threshold TB-1, internal 1."""
+    return (d - 1) * 2 * tb + (tb - 1) * 2 + 1
+
+
+def segment_chunk_ranges(
+    obs_seg: np.ndarray,  # (N,) int32, any order (sorted => tight ranges)
+    tree_seg: np.ndarray,  # (T_pad,) int32, -1 = padding
+    block_trees: int,
+    block_obs: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per observation block, the [lo, hi) range of tree chunks whose
+    segment set intersects the block's — the kernel's fori_loop bounds.
+
+    Always CORRECT for any ordering (the in-kernel segment mask filters
+    non-matching pairs); TIGHT when rows and trees are sorted by segment,
+    where it recovers the block-diagonal work bound ~sum_u T_u * N_u."""
+    obs_seg = np.asarray(obs_seg, np.int64)
+    tree_seg = np.asarray(tree_seg, np.int64)
+    n, t_pad = len(obs_seg), len(tree_seg)
+    n_chunks = t_pad // block_trees
+    g = max(-(-n // block_obs), 1)
+    n_segs = int(max(obs_seg.max(initial=0), tree_seg.max(initial=0))) + 1
+    # membership matrices via one flat scatter each; segment -1 (padding)
+    # lands in the dropped 0th column
+    chunk_of = np.repeat(np.arange(n_chunks), block_trees)
+    seg_in_chunk = np.zeros((n_chunks, n_segs + 1), bool)
+    seg_in_chunk[chunk_of, np.clip(tree_seg, -1, n_segs - 1) + 1] = True
+    block_of = np.repeat(np.arange(g), block_obs)[:n]
+    seg_in_block = np.zeros((g, n_segs + 1), bool)
+    seg_in_block[block_of, np.clip(obs_seg, -1, n_segs - 1) + 1] = True
+    need = seg_in_block[:, 1:] @ seg_in_chunk[:, 1:].T  # (g, n_chunks)
+    any_ = need.any(1)
+    lo = np.where(any_, need.argmax(1), 0).astype(np.int32)
+    hi = np.where(
+        any_, n_chunks - need[:, ::-1].argmax(1), 0
+    ).astype(np.int32)
+    return lo, hi
+
+
+def _tree_predict_agg_seg_pipelined_kernel(
+    chunk_lo_ref, chunk_hi_ref,  # SMEM (G,) int32 fori_loop bounds
+    xb_ref, oseg_ref,  # VMEM blocks
+    code_hbm, fit_hbm, tseg_hbm,  # ANY/HBM, DMA'd per chunk
+    out_ref,
+    *, max_depth: int, lo_bits: int, n_lo: int, n_hi: int, d: int,
+    n_classes: int, block_trees: int, tb2: float,
+):
+    i = pl.program_id(0)
+    lo = chunk_lo_ref[i]
+    hi = chunk_hi_ref[i]
+    bn = xb_ref.shape[0]
+    c_out = out_ref.shape[-1]
+    xbf = xb_ref[...].astype(jnp.float32)
+    osegs = oseg_ref[...]  # (1, BN)
+
+    def body(code_s, fit_s, tseg_s, sems):
+        # one DMA triple per (slot, chunk); fresh descriptors are cheap —
+        # start() and wait() pair up through the per-(slot, k) semaphore
+        def dma(slot, ci, k):
+            src, dst = (
+                (code_hbm, code_s), (fit_hbm, fit_s), (tseg_hbm, tseg_s)
+            )[k]
+            return pltpu.make_async_copy(
+                src.at[pl.ds(ci * block_trees, block_trees)],
+                dst.at[slot],
+                sems.at[slot, k],
+            )
+
+        @pl.when(lo < hi)
+        def _():  # warm-up: fill slot 0 before the steady-state loop
+            for k in range(3):
+                dma(0, lo, k).start()
+
+        def chunk_step(step, acc):
+            ci = lo + step
+            cur = step % 2
+
+            @pl.when(ci + 1 < hi)
+            def _():  # overlap: next chunk uploads while this one computes
+                for k in range(3):
+                    dma((step + 1) % 2, ci + 1, k).start()
+
+            for k in range(3):
+                dma(cur, ci, k).wait()
+            code3 = code_s[cur].reshape(block_trees, n_hi, n_lo)
+            idx = jnp.zeros((block_trees, bn), jnp.int32)
+
+            def level(_, idx):
+                oh_hi = jax.nn.one_hot(
+                    idx >> lo_bits, n_hi, dtype=jnp.float32
+                )
+                oh_lo = jax.nn.one_hot(
+                    idx & (n_lo - 1), n_lo, dtype=jnp.float32
+                )
+                c = _two_level_gather(code3, oh_hi, oh_lo)
+                # power-of-two field scales: divide/floor decode is exact
+                fe = jnp.floor(c / tb2)
+                rem = c - fe * tb2
+                th = jnp.floor(rem * 0.5)
+                it = rem - 2.0 * th
+                ohf = jax.nn.one_hot(
+                    jnp.clip(fe.astype(jnp.int32), 0, d - 1), d,
+                    dtype=jnp.float32,
+                )
+                xv = jnp.einsum(
+                    "tnd,nd->tn", ohf, xbf,
+                    preferred_element_type=jnp.float32,
+                )
+                child = jnp.where(xv <= th, 2 * idx + 1, 2 * idx + 2)
+                return jnp.where(it > 0.5, child, idx)
+
+            idx = jax.lax.fori_loop(0, max_depth, level, idx)
+            fit3 = fit_s[cur].reshape(block_trees, n_hi, n_lo)
+            oh_hi = jax.nn.one_hot(idx >> lo_bits, n_hi, dtype=jnp.float32)
+            oh_lo = jax.nn.one_hot(idx & (n_lo - 1), n_lo, dtype=jnp.float32)
+            leaf = _two_level_gather(fit3, oh_hi, oh_lo)  # (BT, BN)
+            # padding trees carry segment -1, which never matches a row
+            valid = (tseg_s[cur] == osegs).astype(jnp.float32)
+            if n_classes > 0:
+                oh_c = jax.nn.one_hot(
+                    leaf.astype(jnp.int32), n_classes, dtype=jnp.float32
+                )
+                return acc + (oh_c * valid[..., None]).sum(0)
+            return acc + (leaf * valid).sum(0)[:, None]
+
+        acc = jax.lax.fori_loop(
+            0, hi - lo, chunk_step, jnp.zeros((bn, c_out), jnp.float32)
+        )
+        out_ref[...] = acc
+
+    pl.run_scoped(
+        body,
+        pltpu.VMEM((2, block_trees, n_hi * n_lo), jnp.float32),
+        pltpu.VMEM((2, block_trees, n_hi * n_lo), jnp.float32),
+        pltpu.VMEM((2, block_trees, 1), jnp.int32),
+        pltpu.SemaphoreType.DMA((2, 3)),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "max_depth", "n_classes", "block_trees", "block_obs", "tb2",
+        "interpret",
+    ),
+)
+def _forest_predict_agg_seg_pipelined_impl(
+    xb, obs_seg, code, fit, tree_seg, chunk_lo, chunk_hi,
+    max_depth, n_classes, block_trees, block_obs, tb2, interpret,
+):
+    t_pad, h = code.shape
+    n, d = xb.shape
+    lo_bits, n_lo, n_hi = _heap_split(h)
+    h_pad = n_lo * n_hi
+    code = _pad_heap(code, h_pad)
+    fit = _pad_heap(fit, h_pad)
+    c_out = n_classes if n_classes > 0 else 1
+    grid = (pl.cdiv(n, block_obs),)
+    kernel = functools.partial(
+        _tree_predict_agg_seg_pipelined_kernel,
+        max_depth=max_depth, lo_bits=lo_bits, n_lo=n_lo, n_hi=n_hi, d=d,
+        n_classes=n_classes, block_trees=block_trees, tb2=float(tb2),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_obs, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_obs), lambda i: (0, i)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_obs, c_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c_out), jnp.float32),
+        interpret=interpret,
+    )(
+        chunk_lo, chunk_hi, xb, obs_seg.reshape(1, n), code, fit,
+        tree_seg.reshape(t_pad, 1),
+    )
+    return out[:, 0] if n_classes == 0 else out
+
+
+def forest_predict_agg_segmented_packed(
+    xb,  # (N, d) int32
+    obs_seg,  # (N,) int32
+    code,  # (T_pad, H) float32 fused node attrs (fuse_node_attrs)
+    fit,  # (T_pad, H) float32
+    tree_seg,  # (T_pad,) int32, -1 marks padding trees
+    chunk_lo,  # (ceil(N / block_obs),) int32
+    chunk_hi,  # (ceil(N / block_obs),) int32
+    max_depth: int,
+    tb2: int,  # 2 * fused_threshold_base(...)
+    n_classes: int = 0,
+    block_trees: int = 8,
+    block_obs: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Low-level pipelined entry for PRE-FUSED tree tiles (the device tile
+    arena stores this layout): one launch, double-buffered DMA over tree
+    chunks.  ``T_pad`` must be a positive multiple of ``block_trees`` with
+    padding trees marked ``tree_seg == -1``."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    t_pad, _ = code.shape
+    n, d = xb.shape
+    if t_pad % block_trees != 0 or t_pad == 0:
+        raise ValueError(
+            f"T_pad={t_pad} must be a positive multiple of "
+            f"block_trees={block_trees}"
+        )
+    if n_classes > 0 and n_classes >= _F32_EXACT_INT:
+        raise ValueError("n_classes >= 2**24 overflows float32 vote counts")
+    # value-check code only when it is a host array: device-resident code
+    # comes from the arena, whose constructor already rejects schemas that
+    # could reach 2**24 — re-reducing it here would force a device sync on
+    # every serving batch and serialize the dispatch the pipeline overlaps
+    arrays = {"xb": xb}
+    if isinstance(code, np.ndarray):
+        arrays["code"] = code
+    _validate_f32_exact(max_depth, d, **arrays)
+    return _forest_predict_agg_seg_pipelined_impl(
+        xb, jnp.asarray(obs_seg, jnp.int32), code, fit,
+        jnp.asarray(tree_seg, jnp.int32), jnp.asarray(chunk_lo, jnp.int32),
+        jnp.asarray(chunk_hi, jnp.int32), max_depth, n_classes, block_trees,
+        min(block_obs, n), int(tb2), interpret,
+    )
+
+
+def _is_concrete(*arrays) -> bool:
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def forest_predict_agg_segmented(
+    xb: jnp.ndarray,  # (N, d) int32
+    obs_seg: jnp.ndarray,  # (N,) or (N, 1) int32 segment (user) id per row
+    tree_seg: jnp.ndarray,  # (T,) or (T, 1) int32 segment (user) id per tree
+    feature: jnp.ndarray,  # (T, H) int32
+    threshold: jnp.ndarray,  # (T, H) int32
+    fit: jnp.ndarray,  # (T, H) float32 (class ids for classification)
+    is_internal: jnp.ndarray,  # (T, H) bool
+    max_depth: int,
+    n_classes: int = 0,
+    block_trees: int = 8,
+    block_obs: int = 256,
+    interpret: bool | None = None,
+    engine: str | None = None,
+) -> jnp.ndarray:
+    """Ragged multi-tenant serving kernel: per-row ensemble aggregation
+    restricted to the trees whose segment id matches the row's.
+
+    Trees from MANY users' forests concatenate along the T axis (ragged —
+    users need not have equal tree counts) and a mixed batch of many users'
+    observations concatenates along N; one launch returns, per row, the
+    (N,) fit sum / (N, C) vote counts over that row's own forest only.
+    Segment ids are compared as int32 inside the kernel (they never route
+    through the float32 one-hot gathers), so any int32 id is safe.
+
+    ``engine``: ``"pipelined"`` (fused-attribute double-buffered DMA, one
+    launch), ``"simple"`` (the PR 2 oracle), or ``None`` to pick
+    ``"pipelined"`` whenever the inputs are concrete, the node attributes
+    are non-negative, and the fused code word fits below 2**24.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    t, _ = feature.shape
+    n, d = xb.shape
+    obs_seg = (
+        obs_seg.reshape(-1) if hasattr(obs_seg, "reshape") else obs_seg
+    )
+    tree_seg = (
+        tree_seg.reshape(-1) if hasattr(tree_seg, "reshape") else tree_seg
+    )
+    if engine is None or engine == "pipelined":
+        eligible = t > 0 and n > 0 and _is_concrete(
+            xb, obs_seg, tree_seg, feature, threshold, fit, is_internal
+        )
+        if eligible:
+            feat_h = np.asarray(feature)
+            thr_h = np.asarray(threshold)
+            tb = fused_threshold_base(int(thr_h.max(initial=0)))
+            eligible = (
+                int(feat_h.min(initial=0)) >= 0
+                and int(thr_h.min(initial=0)) >= 0
+                and fused_code_limit(d, tb) < _F32_EXACT_INT
+            )
+        if not eligible:
+            if engine == "pipelined":
+                raise ValueError(
+                    "engine='pipelined' needs concrete non-negative "
+                    "feature/threshold arrays whose fused code word fits "
+                    "below 2**24 (and a non-empty batch)"
+                )
+            engine = "simple"
+        else:
+            code = fuse_node_attrs(
+                feat_h, thr_h, np.asarray(is_internal), tb
+            )
+            block_trees = min(block_trees, t)
+            t_pad = -(-t // block_trees) * block_trees
+            tseg_h = np.asarray(tree_seg, np.int32)
+            pad = t_pad - t
+            if pad:
+                code = np.pad(code, ((0, pad), (0, 0)))
+                fit = np.pad(np.asarray(fit), ((0, pad), (0, 0)))
+                tseg_h = np.pad(tseg_h, (0, pad), constant_values=-1)
+            oseg_h = np.asarray(obs_seg, np.int32)
+            block_obs = min(block_obs, n)
+            chunk_lo, chunk_hi = segment_chunk_ranges(
+                oseg_h, tseg_h, block_trees, block_obs
+            )
+            return forest_predict_agg_segmented_packed(
+                xb, oseg_h, jnp.asarray(code), jnp.asarray(fit, jnp.float32),
+                tseg_h, chunk_lo, chunk_hi, max_depth, 2 * tb,
+                n_classes=n_classes, block_trees=block_trees,
+                block_obs=block_obs, interpret=interpret,
+            )
+    if engine != "simple":
+        raise ValueError(f"unknown segmented engine {engine!r}")
+    return _forest_predict_agg_segmented_simple(
+        xb, obs_seg, tree_seg, feature, threshold, fit, is_internal,
+        max_depth, n_classes, block_trees, block_obs, interpret,
     )
 
 

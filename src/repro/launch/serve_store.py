@@ -1,28 +1,39 @@
-"""Ragged multi-tenant serving from the compressed store (store piece 4).
+"""Ragged multi-tenant serving from the compressed store — pipelined
+(ISSUE 3 tentpole).
 
 A request batch mixes MANY users: each request is ``(user_id, x_binned)``
-against that user's own forest.  Instead of one kernel launch per user,
-the driver:
+against that user's own forest.  Three engines share one grouping front-end
+(rows → one (N, d) block + int32 segment id per row):
 
-1. groups the batch — concatenates all rows into one (N, d) block with an
-   int32 segment id per row, and all requested users' decoded heap tiles
-   (from the store's tile LRU, so hot users skip entropy decode) into one
-   ragged tree axis with an int32 segment id per tree;
-2. streams tree tiles of ``block_trees`` through the segment-aware Pallas
-   kernel ``forest_predict_agg_segmented`` — a (tree, obs) pair contributes
-   only when segments match, so users of different forest sizes share one
-   launch with zero per-user padding along the tree axis;
-3. splits the aggregated (N, C) votes / (N,) sums back into per-request
-   predictions (argmax / mean over that user's own tree count).
+* ``engine="pipelined"`` (default) — the device-resident TILE ARENA packs
+  each requested user's decoded heap tiles ONCE (fused node attributes,
+  common padded width); per batch the driver index-gathers the users' runs
+  on device, sorts rows by segment, and makes ONE launch of the
+  double-buffered DMA kernel (``forest_predict_agg_segmented_packed``),
+  which streams tree chunks HBM→VMEM overlapping the previous chunk's
+  traversal and skips chunks outside each row block's segment range.
+* ``engine="sharded"`` (default when >1 device) — the ragged tree axis is
+  partitioned ACROSS devices (greedy bin-pack on per-user tree counts),
+  each device runs the pipelined kernel over its own tree shard against
+  the replicated batch, and the (N, C) partial votes/sums all-reduce via
+  ``psum`` — fleets whose hot set exceeds one core's VMEM scale out.
+* ``engine="simple"`` — the PR 2 path, kept verbatim: host-side tile
+  re-pack each call + one segmented-kernel launch per tree chunk.  The
+  differential oracle and the serving baseline the pipelined engines are
+  benchmarked against (``benchmarks/serve_pipeline.py``).
+
+All engines aggregate per row over that row's own forest only and match
+per-user ``predict_compressed`` (vote counts are integer-exact; the
+regression mean accumulates in float32 on device).
 
     PYTHONPATH=src python -m repro.launch.serve_store --users 40 \
-        --requests 64 --rows 256
+        --requests 64 --rows 256 --engine pipelined
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import numpy as np
 
@@ -30,34 +41,32 @@ from ..store.runtime import ForestStore
 
 Request = tuple[str, np.ndarray]
 
+_ENGINE_BLOCKS = {  # per-engine (block_trees, block_obs) sweet spots
+    "simple": (32, 256),
+    "pipelined": (8, 128),
+    "sharded": (8, 128),
+}
+
 
 def _pad_heap_width(tile_arr: np.ndarray, h: int) -> np.ndarray:
     t, h_u = tile_arr.shape
     if h_u == h:
-        return tile_arr
+        return tile_arr  # width already common: no copy (hot fleet path)
     out = np.zeros((t, h), dtype=tile_arr.dtype)
     out[:, :h_u] = tile_arr
     return out
 
 
-def pack_request_batch(
-    store: ForestStore,
-    requests: Sequence[Request],
-    block_trees: int = 32,
-):
-    """Group a mixed-user batch for the segmented kernel.
-
-    Returns ``(xb, obs_seg, row_slices, tree_pack, max_depth, seg_trees)``
-    where ``tree_pack`` is the ragged concatenation of every requested
-    user's heap tiles (feature, threshold, fit, is_internal, tree_seg) at a
-    common heap width, and ``seg_trees[s]`` is user s's tree count."""
+def _group_requests(requests: Sequence[Request]):
+    """Rows → one (N, d) int32 block + segment id per row; users in
+    first-appearance order (their position IS their segment id — the
+    returned ``seg_of`` is the one mapping baked into ``obs_seg``)."""
     users: list[str] = []
     seg_of: dict[str, int] = {}
     for user_id, _ in requests:
         if user_id not in seg_of:
             seg_of[user_id] = len(users)
             users.append(user_id)
-
     xb_parts, oseg_parts, row_slices = [], [], []
     off = 0
     for user_id, x in requests:
@@ -68,7 +77,28 @@ def pack_request_batch(
         off += len(x)
     xb = np.concatenate(xb_parts)
     obs_seg = np.concatenate(oseg_parts)
+    return users, seg_of, xb, obs_seg, row_slices
 
+
+def pack_request_batch(
+    store: ForestStore,
+    requests: Sequence[Request],
+    block_trees: int = 32,
+):
+    """Group a mixed-user batch for the segmented kernel (the PR 2 host
+    packing, kept for ``engine="simple"``).
+
+    Returns ``(xb, obs_seg, row_slices, tree_pack, max_depth, seg_trees)``
+    where ``tree_pack`` is the ragged concatenation of every requested
+    user's heap tiles (feature, threshold, fit, is_internal, tree_seg) at a
+    common heap width, and ``seg_trees[s]`` is user s's tree count.
+
+    Re-padding only happens for users whose heap width differs from the
+    batch maximum (``_pad_heap_width`` is a no-op otherwise); the pipelined
+    engines skip this host pass entirely — their padded tiles persist in
+    the store's device arena and each batch is an index-gather
+    (``ForestStore.arena_pack``)."""
+    users, seg_of, xb, obs_seg, row_slices = _group_requests(requests)
     max_depth = max(store.max_depth(u) for u in users)
     h = (1 << (max_depth + 1)) - 1
     feats, thrs, fits, inters, tsegs = [], [], [], [], []
@@ -94,21 +124,38 @@ def pack_request_batch(
     return xb, obs_seg, row_slices, tree_pack, max_depth, seg_trees
 
 
-def serve_store_batch(
+def _finalize(
     store: ForestStore,
     requests: Sequence[Request],
-    block_trees: int = 32,
-    block_obs: int = 256,
-    interpret: bool | None = None,
+    row_slices,
+    total: np.ndarray,
+    task: str,
 ) -> list[np.ndarray]:
-    """Serve a mixed-user request batch in one ragged pass.  Returns one
-    prediction array per request (majority vote / ensemble mean), matching
-    per-user ``predict_compressed`` (vote counts are integer-exact; the
-    regression mean accumulates in float32 on device)."""
-    from ..kernels.tree_predict.tree_predict import forest_predict_agg_segmented
+    out: list[np.ndarray] = []
+    for (user_id, _), sl in zip(requests, row_slices):
+        if task == "classification":
+            out.append(total[sl].argmax(-1).astype(np.float64))
+        else:
+            out.append(
+                total[sl].astype(np.float64)
+                / max(store.n_trees(user_id), 1)
+            )
+    return out
 
-    if not requests:
-        return []
+
+def _empty_preds(requests):
+    return [np.zeros(len(x), np.float64) for _, x in requests]
+
+
+def _serve_simple(
+    store, requests, block_trees, block_obs, interpret
+) -> list[np.ndarray]:
+    """The PR 2 serving path, verbatim: host pack + one segmented-kernel
+    launch per tree chunk over that chunk's row span."""
+    from ..kernels.tree_predict.tree_predict import (
+        forest_predict_agg_segmented,
+    )
+
     xb, obs_seg, row_slices, tree_pack, max_depth, seg_trees = (
         pack_request_batch(store, requests, block_trees)
     )
@@ -117,6 +164,8 @@ def serve_store_batch(
     n_classes = store.shared.n_classes if task == "classification" else 0
     n, c_out = len(xb), max(n_classes, 1)
     t = feature.shape[0]
+    if n == 0:
+        return _empty_preds(requests)
 
     # Segments only overlap block-diagonally: sort rows by segment and run
     # each tree chunk against just the row span of the users it contains —
@@ -172,23 +221,214 @@ def serve_store_batch(
             block_trees=block_trees,
             block_obs=block_obs,
             interpret=interpret,
+            engine="simple",
         )  # dispatched async; host keeps slicing/submitting
         parts.append((r0p, r1p, part))
     for r0p, r1p, part in parts:
         total_sorted[r0p:r1p] += np.asarray(part, np.float64)
     total = np.empty_like(total_sorted)
     total[order] = total_sorted
+    return _finalize(store, requests, row_slices, total, task)
 
-    out: list[np.ndarray] = []
-    for (user_id, _), sl in zip(requests, row_slices):
-        if task == "classification":
-            out.append(total[sl].argmax(-1).astype(np.float64))
+
+class PipelinedBatch(NamedTuple):
+    """Output of ``pack_pipelined_batch``: everything the one-launch DMA
+    kernel needs, plus the row bookkeeping to undo the segment sort."""
+
+    xb_s: np.ndarray
+    oseg_s: np.ndarray
+    code: object  # (T_pad, H) device
+    fit: object  # (T_pad, H) device
+    tree_seg: np.ndarray
+    chunk_lo: np.ndarray
+    chunk_hi: np.ndarray
+    max_depth: int
+    block_trees: int
+    block_obs: int
+    order: np.ndarray
+    row_slices: list
+
+
+def pack_pipelined_batch(
+    store, requests, block_trees: int = 8, block_obs: int = 128,
+) -> PipelinedBatch | None:
+    """Pipelined pack stage: group rows, arena index-gather, segment sort,
+    chunk ranges.  Returns None for an all-empty batch.  (Public so the
+    benchmark times the EXACT stage the engine runs.)"""
+    from ..kernels.tree_predict.tree_predict import segment_chunk_ranges
+
+    users, _seg_of, xb, obs_seg, row_slices = _group_requests(requests)
+    n = len(xb)
+    if n == 0:
+        return None
+    code, fit, tree_seg, counts, max_depth = store.arena_pack(
+        users, block_trees
+    )
+    # rows sorted by segment id == arena gather order, so each row block's
+    # needed chunk range is tight (block-diagonal work in one launch)
+    order = np.argsort(obs_seg, kind="stable")
+    xb_s = np.ascontiguousarray(xb[order])
+    oseg_s = np.ascontiguousarray(obs_seg[order])
+    block_obs = min(block_obs, n)
+    chunk_lo, chunk_hi = segment_chunk_ranges(
+        oseg_s, tree_seg, block_trees, block_obs
+    )
+    return PipelinedBatch(
+        xb_s, oseg_s, code, fit, tree_seg, chunk_lo, chunk_hi, max_depth,
+        block_trees, block_obs, order, row_slices,
+    )
+
+
+def run_pipelined_kernel(store, pb: PipelinedBatch, interpret=None):
+    """Pipelined kernel stage: the single double-buffered DMA launch."""
+    from ..kernels.tree_predict.tree_predict import (
+        forest_predict_agg_segmented_packed,
+    )
+
+    task = store.shared.task
+    n_classes = store.shared.n_classes if task == "classification" else 0
+    return forest_predict_agg_segmented_packed(
+        pb.xb_s, pb.oseg_s, pb.code, pb.fit, pb.tree_seg, pb.chunk_lo,
+        pb.chunk_hi, pb.max_depth, store.arena.tb2, n_classes=n_classes,
+        block_trees=pb.block_trees, block_obs=pb.block_obs,
+        interpret=interpret,
+    )
+
+
+def finalize_pipelined_batch(
+    store, requests, pb: PipelinedBatch, out
+) -> list[np.ndarray]:
+    """Pipelined finalize stage: unsort + per-request argmax/mean."""
+    task = store.shared.task
+    out = np.asarray(out, np.float64)
+    total = np.empty_like(out)
+    total[pb.order] = out
+    return _finalize(store, requests, pb.row_slices, total, task)
+
+
+def _serve_pipelined(
+    store, requests, block_trees, block_obs, interpret
+) -> list[np.ndarray]:
+    """Arena index-gather + ONE double-buffered DMA kernel launch."""
+    pb = pack_pipelined_batch(store, requests, block_trees, block_obs)
+    if pb is None:
+        return _empty_preds(requests)
+    out = run_pipelined_kernel(store, pb, interpret)
+    return finalize_pipelined_batch(store, requests, pb, out)
+
+
+def _serve_sharded(
+    store, requests, block_trees, block_obs, interpret
+) -> list[np.ndarray]:
+    """Tree axis sharded across devices: per-device pipelined partial
+    aggregation + one all-reduce."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.tree_predict.ops import (
+        forest_predict_agg_segmented_sharded,
+        partition_segments_by_load,
+    )
+    from ..kernels.tree_predict.tree_predict import segment_chunk_ranges
+
+    users, _seg_of, xb, obs_seg, row_slices = _group_requests(requests)
+    task = store.shared.task
+    n_classes = store.shared.n_classes if task == "classification" else 0
+    n = len(xb)
+    if n == 0:
+        return _empty_preds(requests)
+
+    n_dev = len(jax.devices())
+    # admit the WHOLE batch before any per-shard gather: a later shard's
+    # cold admission may grow the arena heap width, which would leave
+    # earlier shards' gathered arrays at a stale (narrower) width
+    store.arena_ensure(users, block_trees)
+    seg_trees = np.array([store.n_trees(u) for u in users], np.int64)
+    shards = partition_segments_by_load(seg_trees, n_dev)
+    # per-shard users ascend by segment id: sorted rows keep ranges tight
+    shards = [sorted(s) for s in shards]
+    t_pad = max(
+        max(
+            (-(-int(seg_trees[s].sum()) // block_trees) * block_trees
+             for s in map(np.asarray, shards) if len(s)),
+            default=block_trees,
+        ),
+        block_trees,
+    )
+    block_obs = min(block_obs, n)
+    order = np.argsort(obs_seg, kind="stable")
+    xb_s = np.ascontiguousarray(xb[order])
+    oseg_s = np.ascontiguousarray(obs_seg[order])
+
+    codes, fits, tsegs, los, his = [], [], [], [], []
+    max_depth = 0
+    for shard in shards:
+        shard_users = [users[s] for s in shard]
+        code, fit, tseg, _, max_depth = store.arena_pack(
+            shard_users, block_trees, pad_to=t_pad, seg_ids=shard
+        )
+        lo, hi = segment_chunk_ranges(
+            oseg_s, tseg, block_trees, block_obs
+        )
+        codes.append(code)
+        fits.append(fit)
+        tsegs.append(tseg)
+        los.append(lo)
+        his.append(hi)
+    out = forest_predict_agg_segmented_sharded(
+        xb_s, oseg_s, jnp.stack(codes), jnp.stack(fits),
+        np.stack(tsegs), np.stack(los), np.stack(his),
+        max_depth, store.arena.tb2, n_classes=n_classes,
+        block_trees=block_trees, block_obs=block_obs, interpret=interpret,
+    )
+    out = np.asarray(out, np.float64)
+    total = np.empty_like(out)
+    total[order] = out
+    return _finalize(store, requests, row_slices, total, task)
+
+
+def serve_store_batch(
+    store: ForestStore,
+    requests: Sequence[Request],
+    block_trees: int | None = None,
+    block_obs: int | None = None,
+    interpret: bool | None = None,
+    engine: str | None = None,
+) -> list[np.ndarray]:
+    """Serve a mixed-user request batch in one ragged pass.  Returns one
+    prediction array per request (majority vote / ensemble mean), matching
+    per-user ``predict_compressed`` (vote counts are integer-exact; the
+    regression mean accumulates in float32 on device).
+
+    ``engine=None`` picks ``"sharded"`` on multi-device hosts, else
+    ``"pipelined"``, falling back to ``"simple"`` when the store schema is
+    incompatible with the fused arena layout."""
+    if not requests:
+        return []
+    if engine is None:
+        if store.arena is None:
+            engine = "simple"
         else:
-            out.append(
-                total[sl].astype(np.float64)
-                / max(store.n_trees(user_id), 1)
-            )
-    return out
+            import jax
+
+            engine = "sharded" if len(jax.devices()) > 1 else "pipelined"
+    if engine not in _ENGINE_BLOCKS:
+        raise ValueError(f"unknown serving engine {engine!r}")
+    if engine != "simple" and store.arena is None:
+        raise ValueError(
+            f"engine={engine!r} needs the fused tile arena, which this "
+            "store's schema cannot use (packed code word >= 2**24); use "
+            "engine='simple'"
+        )
+    bt_default, bo_default = _ENGINE_BLOCKS[engine]
+    block_trees = bt_default if block_trees is None else block_trees
+    block_obs = bo_default if block_obs is None else block_obs
+    serve = {
+        "simple": _serve_simple,
+        "pipelined": _serve_pipelined,
+        "sharded": _serve_sharded,
+    }[engine]
+    return serve(store, requests, block_trees, block_obs, interpret)
 
 
 def main() -> None:
@@ -200,13 +440,14 @@ def main() -> None:
     ap.add_argument("--task", choices=("classification", "regression"),
                     default="classification")
     ap.add_argument("--depth", type=int, default=6)
-    ap.add_argument("--block-trees", type=int, default=32)
+    ap.add_argument("--block-trees", type=int, default=None)
+    ap.add_argument("--engine", default=None,
+                    choices=("simple", "pipelined", "sharded"))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    from ..store import build_store, make_synthetic_fleet
+    from ..store import build_store, make_request_batch, make_synthetic_fleet
 
-    rng = np.random.default_rng(args.seed)
     fleet = make_synthetic_fleet(
         args.users, task=args.task, max_depth=args.depth, seed=args.seed
     )
@@ -214,22 +455,15 @@ def main() -> None:
     store = build_store(fleet)
     t_build = time.time() - t0
     rep = store.size_report()
-    d = store.shared.n_features
-    n_bins = int(store.shared.n_bins_per_feature[0])
-
-    user_ids = store.user_ids
-    requests = [
-        (
-            user_ids[int(rng.integers(len(user_ids)))],
-            rng.integers(0, n_bins, (args.rows, d)).astype(np.int32),
-        )
-        for _ in range(args.requests)
-    ]
-    serve_store_batch(store, requests[:2],
-                      block_trees=args.block_trees)  # compile + warm cache
+    requests = make_request_batch(
+        store, args.requests, args.rows, args.seed
+    )
+    serve_store_batch(store, requests[:2], block_trees=args.block_trees,
+                      engine=args.engine)  # compile + warm cache
     t0 = time.time()
     preds = serve_store_batch(store, requests,
-                              block_trees=args.block_trees)
+                              block_trees=args.block_trees,
+                              engine=args.engine)
     t_serve = time.time() - t0
     n_rows = sum(len(x) for _, x in requests)
 
@@ -240,16 +474,20 @@ def main() -> None:
             mismatch += int((p != ref).sum())
         else:
             mismatch += int(np.max(np.abs(p - ref)) > 1e-4)
+    cache_stats = store.cache.stats()
+    cache_stats.pop("per_user", None)  # too chatty for the demo printout
     print(
         f"store: {rep['n_users']} users, "
         f"{rep['total_bytes']} bytes total "
         f"({rep['shared_codebook_bytes']} shared codebook), "
         f"built in {t_build:.1f}s\n"
-        f"ragged batch: {len(requests)} requests / "
-        f"{len(set(u for u, _ in requests))} distinct users / "
+        f"ragged batch [{args.engine or 'auto'}]: {len(requests)} requests "
+        f"/ {len(set(u for u, _ in requests))} distinct users / "
         f"{n_rows} rows in {t_serve * 1e3:.1f} ms "
         f"({n_rows / t_serve:.0f} rows/s)\n"
-        f"tile cache: {store.cache.stats()}\n"
+        f"tile cache: {cache_stats}\n"
+        f"tile arena: "
+        f"{store.arena.stats() if store.arena is not None else None}\n"
         f"parity vs per-user predict_compressed (8 requests): "
         f"{mismatch} mismatches"
     )

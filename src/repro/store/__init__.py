@@ -8,21 +8,24 @@ multi-tenant batched serving through the segment-aware Pallas kernel
 (``repro.launch.serve_store``).
 """
 
+from .arena import TileArena
 from .codebook import SharedCodebook, SharedComponent, build_shared_codebook
 from .delta import UserDelta, encode_user_delta, hydrate, reconstruct_user
-from .fleet import make_synthetic_fleet
+from .fleet import make_request_batch, make_synthetic_fleet
 from .runtime import ForestStore, TileCache, build_store
 
 __all__ = [
     "ForestStore",
     "SharedCodebook",
     "SharedComponent",
+    "TileArena",
     "TileCache",
     "UserDelta",
     "build_shared_codebook",
     "build_store",
     "encode_user_delta",
     "hydrate",
+    "make_request_batch",
     "make_synthetic_fleet",
     "reconstruct_user",
 ]

@@ -1,0 +1,296 @@
+"""Device-resident tile arena (ISSUE 3 tentpole piece 1).
+
+PR 2 re-packed every request batch on the host: each call concatenated the
+requested users' decoded heap tiles, re-padded them to a common heap width,
+and re-uploaded the result.  The arena moves that work OFF the request
+path: a user's decoded tiles are fused + padded + uploaded ONCE into a
+persistent device buffer, and ``pack_request_batch`` degenerates to an
+int32 row-index gather (``jnp.take`` along the tree axis) — no host
+concatenation, no re-padding, no re-upload for warm users.
+
+Layout: trees from all resident users pack row-contiguously into two
+device arrays at the arena's common (padded) heap width —
+
+* ``code``  (T_resident, H) float32 — FUSED node attributes
+  ``(feature * TB + threshold) * 2 + is_internal`` (the pipelined kernel's
+  single-gather-per-level layout, exact below 2**24);
+* ``fit``   (T_resident, H) float32 — leaf payloads (class ids or fits).
+
+The width grows monotonically as deeper users are admitted (rare: one
+``jnp.pad`` rebuild); admission appends rows; eviction compacts survivors
+with one device gather.  Eviction is DECODE-COST-WEIGHTED (GreedyDual):
+each run's priority is ``clock + trees * 2**depth`` at admission/access,
+the minimum-priority non-pinned run is evicted first, and the clock
+advances to the evicted priority — deep users (expensive to re-decode and
+re-upload) outlive shallow ones at equal recency, and equal costs reduce
+to plain LRU.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from ..kernels.tree_predict.tree_predict import (
+    fuse_node_attrs,
+    fused_code_limit,
+    fused_threshold_base,
+)
+from .policy import GreedyDualClock, decode_cost
+
+_F32_EXACT_INT = 1 << 24
+
+Tile = tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+
+class _Run:
+    __slots__ = (
+        "start", "n_trees", "cost", "priority", "last_access", "h", "depth",
+    )
+
+    def __init__(self, start, n_trees, cost, priority, last_access, h,
+                 depth):
+        self.start = start
+        self.n_trees = n_trees
+        self.cost = cost
+        self.priority = priority
+        self.last_access = last_access
+        self.h = h  # the run's OWN heap width (pre arena padding)
+        self.depth = depth
+
+
+class TileArena:
+    """Persistent padded-width device buffer of fused heap tiles, keyed by
+    user run, with decode-cost-weighted (GreedyDual) eviction."""
+
+    def __init__(
+        self, n_features: int, threshold_base: int,
+        capacity_trees: int = 16384,
+    ) -> None:
+        if fused_code_limit(n_features, threshold_base) >= _F32_EXACT_INT:
+            raise ValueError(
+                f"fused code word for d={n_features}, TB={threshold_base} "
+                "exceeds 2**24; the arena's packed layout would corrupt"
+            )
+        self.n_features = n_features
+        self.tb = threshold_base
+        self.tb2 = 2 * threshold_base
+        self.capacity_trees = capacity_trees
+        self.max_depth = 0
+        self.h = 0  # common padded heap width of the resident buffers
+        self._code = None  # (T_resident, h) f32 device
+        self._fit = None  # (T_resident, h) f32 device
+        self._runs: dict[str, _Run] = {}
+        self._gd = GreedyDualClock()
+        self.admissions = 0
+        self.evictions = 0
+        self.gathers = 0
+
+    # ---------------- bookkeeping -----------------------------------------
+    def __contains__(self, user_id: str) -> bool:
+        return user_id in self._runs
+
+    @property
+    def resident_trees(self) -> int:
+        return sum(r.n_trees for r in self._runs.values())
+
+    def stats(self) -> dict:
+        return {
+            "resident_users": len(self._runs),
+            "resident_trees": self.resident_trees,
+            "heap_width": self.h,
+            "admissions": self.admissions,
+            "evictions": self.evictions,
+            "gathers": self.gathers,
+        }
+
+    def invalidate(self, user_id: str) -> None:
+        if user_id in self._runs:
+            del self._runs[user_id]
+            self._compact()
+
+    # ---------------- admission / eviction --------------------------------
+    def _touch(self, run: _Run) -> None:
+        run.priority, run.last_access = self._gd.touch(run.cost)
+
+    def _compact(self) -> None:
+        """Rebuild the device buffers with only surviving runs (one gather
+        per attribute), re-basing every run's start offset and SHRINKING
+        the common width/depth back to the survivors' maximum — evicting
+        the one deep user must not inflate every later batch forever."""
+        import jax.numpy as jnp
+
+        if not self._runs:
+            self._code = self._fit = None
+            self.h = 0
+            self.max_depth = 0
+            return
+        idx_parts, off = [], 0
+        for run in self._runs.values():
+            idx_parts.append(np.arange(run.start, run.start + run.n_trees))
+            run.start = off
+            off += run.n_trees
+        idx = jnp.asarray(np.concatenate(idx_parts), jnp.int32)
+        self.h = max(run.h for run in self._runs.values())
+        self.max_depth = max(run.depth for run in self._runs.values())
+        self._code = jnp.take(self._code, idx, axis=0)[:, : self.h]
+        self._fit = jnp.take(self._fit, idx, axis=0)[:, : self.h]
+
+    def _evict_for(self, need: int, pinned: set[str]) -> None:
+        """GreedyDual: evict minimum-priority non-pinned runs until ``need``
+        trees fit (ties broken oldest-access-first), advancing the clock."""
+        victims = []
+        resident = self.resident_trees
+        while resident + need > self.capacity_trees:
+            candidates = [
+                (r.priority, r.last_access, u)
+                for u, r in self._runs.items() if u not in pinned
+            ]
+            if not candidates:
+                break  # working set itself exceeds capacity: let it grow
+            prio, _, user = min(candidates)
+            resident -= self._runs.pop(user).n_trees
+            self._gd.evicted(prio)
+            victims.append(user)
+            self.evictions += 1
+        if victims:
+            self._compact()
+
+    def _grow_width(self, h_new: int, max_depth: int) -> None:
+        import jax.numpy as jnp
+
+        if self._code is not None and h_new > self.h:
+            pad = ((0, 0), (0, h_new - self.h))
+            self._code = jnp.pad(self._code, pad)
+            self._fit = jnp.pad(self._fit, pad)
+        self.h = max(self.h, h_new)
+        self.max_depth = max(self.max_depth, max_depth)
+
+    def admit_many(
+        self,
+        items: Sequence[tuple[str, Sequence[Tile], int]],
+        pinned: set[str] | None = None,
+    ) -> None:
+        """Fuse + pad + upload several users' decoded heap tiles in ONE
+        eviction pass and ONE buffer append (a cold fleet sweep costs one
+        device concatenate, not one per user).  ``items`` holds
+        ``(user_id, tiles, max_depth)`` triples; already-resident users are
+        just touched."""
+        import jax.numpy as jnp
+
+        fused: list[tuple[str, np.ndarray, np.ndarray, int]] = []
+        for user_id, tiles, max_depth in items:
+            if user_id in self._runs:
+                self._touch(self._runs[user_id])
+                continue
+            feats, thrs, fits, inters = (
+                [t[k] for t in tiles] for k in range(4)
+            )
+            feature = np.concatenate(feats)
+            threshold = np.concatenate(thrs)
+            fit = np.concatenate(fits).astype(np.float32)
+            inter = np.concatenate(inters)
+            if int(threshold.max(initial=0)) >= self.tb:
+                raise ValueError(
+                    f"user {user_id!r} threshold symbols exceed the "
+                    f"arena's field width TB={self.tb}"
+                )
+            fused.append(
+                (user_id, fuse_node_attrs(feature, threshold, inter,
+                                          self.tb),
+                 fit, max_depth)
+            )
+        if not fused:
+            return
+        if pinned is None:
+            pinned = {u for u, _, _, _ in fused}
+        t_new = sum(c.shape[0] for _, c, _, _ in fused)
+        self._evict_for(t_new, pinned)
+        for _, code, _, max_depth in fused:
+            self._grow_width(code.shape[1], max_depth)
+
+        def to_width(a: np.ndarray) -> np.ndarray:
+            if a.shape[1] == self.h:
+                return a
+            return np.pad(a, ((0, 0), (0, self.h - a.shape[1])))
+
+        code_rows = np.concatenate([to_width(c) for _, c, _, _ in fused])
+        fit_rows = np.concatenate([to_width(f) for _, _, f, _ in fused])
+        start = 0 if self._code is None else int(self._code.shape[0])
+        if self._code is None:
+            self._code = jnp.asarray(code_rows)
+            self._fit = jnp.asarray(fit_rows)
+        else:
+            self._code = jnp.concatenate(
+                [self._code, jnp.asarray(code_rows)]
+            )
+            self._fit = jnp.concatenate([self._fit, jnp.asarray(fit_rows)])
+        for user_id, code, _, max_depth in fused:
+            t_u, h_u = code.shape
+            cost = decode_cost(t_u, h_u)
+            prio, tick = self._gd.touch(cost)
+            self._runs[user_id] = _Run(
+                start, t_u, cost, prio, tick, h_u, max_depth
+            )
+            start += t_u
+            self.admissions += 1
+
+    def admit(
+        self, user_id: str, tiles: Sequence[Tile], max_depth: int,
+        pinned: set[str] | None = None,
+    ) -> None:
+        """Fuse + pad + upload one user's decoded heap tiles (the expensive
+        one-time step the per-request path no longer pays)."""
+        self.admit_many([(user_id, tiles, max_depth)], pinned=pinned)
+
+    # ---------------- the hot path ----------------------------------------
+    def gather(
+        self, users: Sequence[str], block_trees: int = 8,
+        pad_to: int | None = None,
+        seg_ids: Sequence[int] | None = None,
+    ):
+        """Index-gather the requested users' resident runs into one packed
+        (T_pad, H) pair of device arrays plus host segment ids.
+
+        Returns ``(code, fit, tree_seg, counts)`` where ``tree_seg[r]`` is
+        the position of row r's user in ``users`` (-1 for padding rows;
+        override per-user ids with ``seg_ids`` — the sharded path keeps
+        GLOBAL segment ids on per-shard gathers) and ``counts[s]`` is user
+        s's tree count.  ``T_pad`` is padded up to a multiple of
+        ``block_trees`` (or to ``pad_to``) so the pipelined kernel sees a
+        handful of distinct shapes."""
+        import jax.numpy as jnp
+
+        idx_parts, seg_parts, counts = [], [], []
+        for s, user_id in enumerate(users):
+            run = self._runs[user_id]
+            self._touch(run)
+            idx_parts.append(np.arange(run.start, run.start + run.n_trees))
+            seg = s if seg_ids is None else int(seg_ids[s])
+            seg_parts.append(np.full(run.n_trees, seg, np.int32))
+            counts.append(run.n_trees)
+        idx = (
+            np.concatenate(idx_parts)
+            if idx_parts else np.zeros(0, np.int64)
+        )
+        t = len(idx)
+        t_pad = max(-(-t // block_trees) * block_trees, block_trees)
+        if pad_to is not None:
+            if pad_to % block_trees or pad_to < t_pad:
+                raise ValueError(
+                    f"pad_to={pad_to} must be a multiple of block_trees "
+                    f">= {t_pad}"
+                )
+            t_pad = pad_to
+        idx = np.pad(idx, (0, t_pad - t))  # pad rows re-read row 0 ...
+        tree_seg = np.full(t_pad, -1, np.int32)  # ... but never match a row
+        if t:
+            tree_seg[:t] = np.concatenate(seg_parts)
+        didx = jnp.asarray(idx, jnp.int32)
+        self.gathers += 1
+        return (
+            jnp.take(self._code, didx, axis=0),
+            jnp.take(self._fit, didx, axis=0),
+            tree_seg,
+            np.asarray(counts, np.int64),
+        )

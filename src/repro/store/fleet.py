@@ -122,3 +122,22 @@ def make_synthetic_fleet(
             trees=trees, meta=meta, fit_values=fit_values
         )
     return fleet
+
+
+def make_request_batch(
+    store, n_requests: int, rows_per_request: int, seed: int = 0
+) -> list[tuple[str, np.ndarray]]:
+    """Random mixed-user request batch against a store — the workload the
+    serving demos and benchmarks share (one helper so they all measure the
+    same request shape)."""
+    rng = np.random.default_rng(seed)
+    d = store.shared.n_features
+    n_bins = int(store.shared.n_bins_per_feature[0])
+    users = store.user_ids
+    return [
+        (
+            users[int(rng.integers(len(users)))],
+            rng.integers(0, n_bins, (rows_per_request, d)).astype(np.int32),
+        )
+        for _ in range(n_requests)
+    ]

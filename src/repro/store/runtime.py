@@ -29,6 +29,7 @@ from ..core.framing import read_bytes, write_bytes
 from ..core.tree import Forest
 from .codebook import SharedCodebook, build_shared_codebook
 from .delta import UserDelta, encode_user_delta, hydrate, reconstruct_user
+from .policy import GreedyDualClock, decode_cost
 
 _MAGIC = b"RFT1"
 
@@ -36,17 +37,30 @@ Tile = tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
 
 
 class TileCache:
-    """LRU over decoded heap tiles, bounded by total resident TREES (a tile
-    of t trees at heap width h costs ~t * h * 13 bytes; trees are the
-    stable unit across users of different depths)."""
+    """Decoded heap-tile cache, bounded by total resident TREES (a tile of
+    t trees at heap width h costs ~t * h * 13 bytes; trees are the stable
+    unit across users of different depths).
+
+    Eviction is DECODE-COST-WEIGHTED (GreedyDual, ISSUE 3 satellite; the
+    policy core is shared with the device tile arena — see
+    ``store.policy``): a tile's priority is ``clock + trees * 2**depth``
+    at insert/access — the reconstruction cost of the entropy decode it
+    saves — the minimum-priority tile goes first (ties: least recently
+    used), and the clock advances to each evicted priority so long-idle
+    expensive tiles age out eventually.  Equal costs reduce exactly to
+    LRU.  Per-user hit/miss counters feed admission-control decisions
+    (``stats()``)."""
 
     def __init__(self, capacity_trees: int = 4096) -> None:
         self.capacity_trees = capacity_trees
         self._tiles: OrderedDict[tuple, Tile] = OrderedDict()
+        self._prio: dict[tuple, tuple[float, int]] = {}
+        self._gd = GreedyDualClock()
         self._resident_trees = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self._per_user: dict[str, list[int]] = {}  # user -> [hits, misses]
 
     def __len__(self) -> int:
         return len(self._tiles)
@@ -54,41 +68,77 @@ class TileCache:
     def __contains__(self, key: tuple) -> bool:
         return key in self._tiles
 
+    @staticmethod
+    def _cost(tile: Tile) -> float:
+        t, h = tile[0].shape
+        return decode_cost(t, h)
+
+    def _user_stat(self, key: tuple) -> list[int]:
+        return self._per_user.setdefault(str(key[0]), [0, 0])
+
+    def _touch(self, key: tuple, tile: Tile) -> None:
+        self._prio[key] = self._gd.touch(self._cost(tile))
+        self._tiles.move_to_end(key)
+
     def get(self, key: tuple) -> Tile | None:
         tile = self._tiles.get(key)
         if tile is None:
             self.misses += 1
+            self._user_stat(key)[1] += 1
             return None
-        self._tiles.move_to_end(key)
+        self._touch(key, tile)
         self.hits += 1
+        self._user_stat(key)[0] += 1
         return tile
+
+    def record_decode_misses(self, user_id: str, n: int) -> None:
+        """Count ``n`` tile decodes forced by a cold/partial run (the run
+        probe in ``ForestStore.tiles`` bypasses per-tile ``get``)."""
+        self.misses += n
+        self._per_user.setdefault(user_id, [0, 0])[1] += n
 
     def put(self, key: tuple, tile: Tile) -> None:
         if key in self._tiles:
-            self._tiles.move_to_end(key)
+            self._touch(key, tile)
             return
         self._tiles[key] = tile
+        self._touch(key, tile)
         self._resident_trees += tile[0].shape[0]
         while (
             self._resident_trees > self.capacity_trees
             and len(self._tiles) > 1
         ):
-            _, old = self._tiles.popitem(last=False)
-            self._resident_trees -= old[0].shape[0]
+            victim = min(
+                (k for k in self._tiles if k != key),
+                key=lambda k: self._prio[k],
+            )
+            prio, _ = self._prio.pop(victim)
+            self._gd.evicted(prio)
+            self._resident_trees -= self._tiles.pop(victim)[0].shape[0]
             self.evictions += 1
 
     def invalidate_user(self, user_id: str) -> None:
         stale = [k for k in self._tiles if k[0] == user_id]
         for k in stale:
             self._resident_trees -= self._tiles.pop(k)[0].shape[0]
+            self._prio.pop(k, None)
 
     def stats(self) -> dict:
+        per_user = {
+            u: {
+                "hits": h,
+                "misses": m,
+                "hit_rate": round(h / (h + m), 4) if h + m else 0.0,
+            }
+            for u, (h, m) in sorted(self._per_user.items())
+        }
         return {
             "tiles": len(self._tiles),
             "resident_trees": self._resident_trees,
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "per_user": per_user,
         }
 
 
@@ -96,13 +146,30 @@ class ForestStore:
     """Registry of per-user delta-encoded forests over one shared codebook."""
 
     def __init__(
-        self, shared: SharedCodebook, tile_cache_trees: int = 4096
+        self, shared: SharedCodebook, tile_cache_trees: int = 4096,
+        arena_capacity_trees: int = 16384,
     ) -> None:
         self.shared = shared
         self._deltas: dict[str, UserDelta] = {}
         self._hydrated: dict[str, CompressedForest] = {}
         self._tile_counts: dict[tuple, int] = {}
         self.cache = TileCache(tile_cache_trees)
+        # device-resident fused-tile arena for the pipelined serving path;
+        # None when the schema's fused code word would overflow 2**24 (the
+        # serving driver then falls back to engine="simple")
+        from ..kernels.tree_predict.tree_predict import fused_threshold_base
+        from .arena import TileArena
+
+        try:
+            self.arena: TileArena | None = TileArena(
+                shared.n_features,
+                fused_threshold_base(
+                    int(np.max(shared.n_bins_per_feature)) - 1
+                ),
+                capacity_trees=arena_capacity_trees,
+            )
+        except ValueError:
+            self.arena = None
 
     # ---------------- registry --------------------------------------------
     @property
@@ -127,6 +194,8 @@ class ForestStore:
             k: v for k, v in self._tile_counts.items() if k[0] != user_id
         }
         self.cache.invalidate_user(user_id)
+        if self.arena is not None:
+            self.arena.invalidate(user_id)
 
     def delta(self, user_id: str) -> UserDelta:
         return self._deltas[user_id]
@@ -169,11 +238,51 @@ class ForestStore:
         from ..launch.serve_forest import iter_heap_tiles
 
         tiles = list(iter_heap_tiles(self.hydrate(user_id), block_trees))
-        self.cache.misses += len(tiles)  # one miss per tile decoded
+        self.cache.record_decode_misses(user_id, len(tiles))
         self._tile_counts[run_key] = len(tiles)
         for i, t in enumerate(tiles):
             self.cache.put((user_id, block_trees, i), t)
         return tiles
+
+    def arena_pack(
+        self, users: Sequence[str], block_trees: int = 8,
+        pad_to: int | None = None, seg_ids: Sequence[int] | None = None,
+    ):
+        """Ensure every requested user is resident in the device tile arena
+        (cold users pay one decode + fuse + upload), then INDEX-GATHER their
+        runs into one packed (T_pad, H) device pair — the pipelined serving
+        path's replacement for per-call host packing.
+
+        Returns ``(code, fit, tree_seg, counts, max_depth)`` where
+        ``max_depth`` is the arena-wide depth matching the common heap
+        width (traversing a shallower user's trees at the arena depth just
+        idles at leaves — results are unchanged)."""
+        self.arena_ensure(users, block_trees)
+        code, fit, tree_seg, counts = self.arena.gather(
+            users, block_trees, pad_to=pad_to, seg_ids=seg_ids
+        )
+        return code, fit, tree_seg, counts, self.arena.max_depth
+
+    def arena_ensure(
+        self, users: Sequence[str], block_trees: int = 8
+    ) -> None:
+        """Admit every non-resident user in ONE arena append.  Callers that
+        gather in several pieces (the sharded engine) MUST ensure the whole
+        working set first: admissions can grow the arena's common heap
+        width, which would leave earlier gathers at a stale width."""
+        if self.arena is None:
+            raise ValueError(
+                "store schema is incompatible with the fused tile arena"
+            )
+        missing = [u for u in users if u not in self.arena]
+        if missing:  # one eviction pass + one buffer append for the batch
+            self.arena.admit_many(
+                [
+                    (u, self.tiles(u, block_trees), self.max_depth(u))
+                    for u in missing
+                ],
+                pinned=set(users),
+            )
 
     # ---------------- sizes + serialization -------------------------------
     def size_report(self) -> dict:
@@ -219,6 +328,7 @@ def build_store(
     engine: str = "chunked",
     chunk_size: int = 65536,
     tile_cache_trees: int = 4096,
+    arena_capacity_trees: int = 16384,
 ) -> ForestStore:
     """Build a multi-tenant store from a fleet: fleet-scale Bregman
     clustering for the shared codebooks, then one delta per user."""
@@ -230,7 +340,10 @@ def build_store(
         [f for _, f in items], k_max=k_max, seed=seed,
         engine=engine, chunk_size=chunk_size,
     )
-    store = ForestStore(shared, tile_cache_trees=tile_cache_trees)
+    store = ForestStore(
+        shared, tile_cache_trees=tile_cache_trees,
+        arena_capacity_trees=arena_capacity_trees,
+    )
     for user_id, forest in items:
         store.add_user(user_id, forest, seed=seed)
     return store

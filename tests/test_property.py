@@ -143,3 +143,76 @@ def test_store_delta_roundtrip_bit_exact(seed, n_users, max_depth, task):
         delta = encode_user_delta(forest, shared, seed=seed % 5)
         rt = UserDelta.from_bytes(delta.to_bytes())
         assert reconstruct_user(rt, shared).equals(forest)
+
+
+@st.composite
+def segmented_batches(draw):
+    """Random ragged multi-tenant batch: random heap depth, random per-user
+    tree counts, random (unsorted) segment maps on both axes."""
+    depth = draw(st.integers(1, 6))
+    d = draw(st.integers(2, 6))
+    n_bins = draw(st.integers(2, 16))
+    n_segs = draw(st.integers(1, 5))
+    tree_counts = draw(
+        st.lists(st.integers(0, 6), min_size=n_segs, max_size=n_segs)
+    )
+    n = draw(st.integers(1, 40))
+    seed = draw(st.integers(0, 2**32 - 1))
+    return depth, d, n_bins, tree_counts, n, seed
+
+
+@given(segmented_batches(), st.sampled_from([0, 3]))
+@settings(max_examples=15, deadline=None)
+def test_segmented_kernel_engines_match_reference(batch, n_classes):
+    """ISSUE 3 invariant: the pipelined DMA engine and the simple oracle
+    both match the pure-jnp segmented reference on random segment maps,
+    ragged per-user tree counts, and random heap depths (classification
+    vote counts integer-exact; regression sums to f32 tolerance)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.tree_predict.ref import (
+        forest_predict_agg_segmented_reference,
+    )
+    from repro.kernels.tree_predict.tree_predict import (
+        forest_predict_agg_segmented,
+    )
+
+    depth, d, n_bins, tree_counts, n, seed = batch
+    rng = np.random.default_rng(seed)
+    t = sum(tree_counts)
+    if t == 0:
+        return  # no trees: serving driver never launches the kernel
+    h = (1 << (depth + 1)) - 1
+    feature = rng.integers(0, d, (t, h)).astype(np.int32)
+    threshold = rng.integers(0, n_bins, (t, h)).astype(np.int32)
+    inter = rng.random((t, h)) < 0.6
+    inter[:, (h - 1) // 2 :] = False  # bottom level must be leaves
+    xb = rng.integers(0, n_bins, (n, d)).astype(np.int32)
+    tseg = rng.permutation(
+        np.repeat(np.arange(len(tree_counts)), tree_counts)
+    ).astype(np.int32)
+    oseg = rng.integers(0, len(tree_counts), n).astype(np.int32)
+    if n_classes > 0:
+        fit = rng.integers(0, n_classes, (t, h)).astype(np.float32)
+    else:
+        fit = rng.normal(size=(t, h)).astype(np.float32)
+    ref = np.asarray(
+        forest_predict_agg_segmented_reference(
+            jnp.asarray(xb), jnp.asarray(oseg), jnp.asarray(tseg),
+            jnp.asarray(feature), jnp.asarray(threshold),
+            jnp.asarray(fit), jnp.asarray(inter), depth,
+            n_classes=n_classes,
+        )
+    )
+    for engine in ("simple", "pipelined"):
+        got = np.asarray(
+            forest_predict_agg_segmented(
+                xb, oseg, tseg, feature, threshold, fit, inter,
+                max_depth=depth, n_classes=n_classes,
+                block_trees=4, block_obs=16, engine=engine,
+            )
+        )
+        if n_classes > 0:
+            assert np.array_equal(got, ref), engine
+        else:
+            np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)

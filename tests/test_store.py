@@ -359,3 +359,342 @@ class TestSegmentedServing:
             else:
                 np.testing.assert_allclose(preds[idx], ref, rtol=1e-5,
                                            atol=1e-5)
+
+
+class TestCostWeightedEviction:
+    def test_equal_costs_reduce_to_lru(self):
+        cache = TileCache(capacity_trees=4)
+        mk = lambda t: (np.zeros((t, 3)),) * 4
+        cache.put(("a", 4, 0), mk(2))
+        cache.put(("b", 4, 0), mk(2))
+        assert cache.get(("a", 4, 0)) is not None
+        cache.put(("c", 4, 0), mk(2))  # evicts b: same cost, older access
+        assert cache.get(("b", 4, 0)) is None
+        assert cache.get(("a", 4, 0)) is not None
+        assert cache.evictions == 1
+
+    def test_expensive_tile_outlives_older_cheap_tile(self):
+        # deep (h=15 => cost 4*8=32) vs shallow (h=3 => cost 4*2=8): at
+        # equal recency the cheap-to-re-decode tile is evicted first even
+        # though the expensive one is OLDER
+        cache = TileCache(capacity_trees=10)
+        deep = (np.zeros((4, 15)),) * 4
+        shallow = (np.zeros((4, 3)),) * 4
+        cache.put(("deep", 4, 0), deep)
+        cache.put(("shallow", 4, 0), shallow)
+        cache.put(("x", 4, 0), (np.zeros((4, 3)),) * 4)
+        assert ("deep", 4, 0) in cache
+        assert ("shallow", 4, 0) not in cache
+
+    def test_clock_ages_out_idle_expensive_tiles(self):
+        # GreedyDual clock: repeated insert/evict churn of cheap tiles
+        # raises the clock past an idle expensive tile's priority
+        cache = TileCache(capacity_trees=8)
+        cache.put(("deep", 4, 0), (np.zeros((4, 15)),) * 4)  # prio 32
+        for i in range(20):  # churn: cheap tiles, each re-accessed
+            cache.put(("u%d" % i, 4, 0), (np.zeros((4, 3)),) * 4)
+        assert ("deep", 4, 0) not in cache  # eventually evicted
+
+    def test_per_user_hit_rates(self):
+        fleet = small_fleet(n_users=3)
+        store = build_store(fleet)
+        u0, u1 = store.user_ids[:2]
+        store.tiles(u0, block_trees=4)  # decode misses
+        store.tiles(u0, block_trees=4)  # pure hits
+        store.tiles(u1, block_trees=4)  # decode misses only
+        per_user = store.cache.stats()["per_user"]
+        assert per_user[u0]["hits"] > 0 and per_user[u0]["misses"] > 0
+        assert 0.0 < per_user[u0]["hit_rate"] < 1.0
+        assert per_user[u1]["hits"] == 0 and per_user[u1]["misses"] > 0
+        assert per_user[u1]["hit_rate"] == 0.0
+
+
+class TestTileArena:
+    def _pack_host(self, store, users, block_trees=4):
+        """Host-side oracle: what the arena gather must reproduce."""
+        from repro.kernels.tree_predict.tree_predict import fuse_node_attrs
+
+        arena = store.arena
+        h = arena.h
+        feats, fits = [], []
+        for u in users:
+            for f, t, ft, it in store.tiles(u, block_trees):
+                code = fuse_node_attrs(f, t, it, arena.tb)
+                pad = ((0, 0), (0, h - code.shape[1]))
+                feats.append(np.pad(code, pad))
+                fits.append(np.pad(ft.astype(np.float32), pad))
+        return np.concatenate(feats), np.concatenate(fits)
+
+    def test_arena_pack_matches_packed_reference(self, rng):
+        """The arena's fused device tiles drive the packed reference oracle
+        to the same votes as per-user predict_compressed."""
+        import jax.numpy as jnp
+
+        from repro.kernels.tree_predict.ref import (
+            forest_predict_agg_segmented_packed_reference,
+        )
+
+        fleet = small_fleet(n_users=4)
+        store = build_store(fleet)
+        users = store.user_ids
+        code, fit, tseg, counts, md = store.arena_pack(users, block_trees=4)
+        x = rng.integers(0, 12, (25, 5)).astype(np.int32)
+        for s, u in enumerate(users):
+            votes = forest_predict_agg_segmented_packed_reference(
+                jnp.asarray(x), jnp.full(len(x), s, np.int32),
+                jnp.asarray(code), jnp.asarray(fit), jnp.asarray(tseg),
+                md, store.arena.tb2, n_classes=2,
+            )
+            assert np.array_equal(
+                np.asarray(votes).argmax(-1).astype(np.float64),
+                store.predict(u, x),
+            )
+
+    def test_gather_matches_host_pack(self):
+        fleet = small_fleet(n_users=5)
+        store = build_store(fleet)
+        users = store.user_ids[:4]
+        code, fit, tseg, counts, md = store.arena_pack(users, block_trees=4)
+        code_h, fit_h = self._pack_host(store, users)
+        t = code_h.shape[0]
+        assert np.array_equal(np.asarray(code)[:t], code_h)
+        assert np.array_equal(np.asarray(fit)[:t], fit_h)
+        assert np.array_equal(
+            tseg[:t], np.repeat(np.arange(len(users)), counts)
+        )
+        assert np.all(tseg[t:] == -1)  # padding rows never match a row
+        assert len(tseg) % 4 == 0
+
+    def test_gather_is_warm_after_admission(self):
+        fleet = small_fleet(n_users=3)
+        store = build_store(fleet)
+        users = store.user_ids
+        store.arena_pack(users, block_trees=4)
+        adm = store.arena.admissions
+        store.arena_pack(users, block_trees=4)  # warm: pure index-gather
+        assert store.arena.admissions == adm
+
+    def test_width_grows_for_deeper_user(self):
+        shallow = small_fleet(n_users=3)  # max_depth 5
+        store = build_store(shallow)
+        u = store.user_ids
+        store.arena_pack([u[0]], block_trees=4)
+        h0 = store.arena.h
+        deep = random_forest(seed=7, n_trees=4, d=5, max_depth=7, n_bins=12)
+        store.add_user("deep", deep)
+        code, fit, tseg, counts, md = store.arena_pack(
+            [u[0], "deep"], block_trees=4
+        )
+        assert store.arena.h > h0
+        assert md == 7
+        assert np.asarray(code).shape[1] == store.arena.h
+
+    def test_eviction_and_compaction(self):
+        fleet = small_fleet(n_users=6)
+        store = build_store(fleet, arena_capacity_trees=16)
+        users = store.user_ids
+        for u in users:
+            store.arena_pack([u], block_trees=4)
+        arena = store.arena
+        assert arena.resident_trees <= 16 or len(arena._runs) == 1
+        assert arena.evictions > 0
+        # surviving runs still gather correctly after compaction
+        resident = [u for u in users if u in arena]
+        code, fit, tseg, counts, _ = store.arena_pack(
+            resident, block_trees=4
+        )
+        code_h, _ = self._pack_host(store, resident)
+        assert np.array_equal(
+            np.asarray(code)[: code_h.shape[0]], code_h
+        )
+
+    def test_invalidated_on_reregister(self):
+        fleet = small_fleet(n_users=3)
+        store = build_store(fleet)
+        u = store.user_ids[0]
+        store.arena_pack([u], block_trees=4)
+        assert u in store.arena
+        store.add_user(u, fleet[u])
+        assert u not in store.arena
+
+
+class TestServingEngines:
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    @pytest.mark.parametrize("engine", ["pipelined", "sharded"])
+    def test_engines_match_simple_and_reference(self, rng, task, engine):
+        from repro.launch.serve_store import serve_store_batch
+
+        fleet = small_fleet(task, n_users=5)
+        store = build_store(fleet)
+        users = store.user_ids
+        requests = [
+            (users[i % len(users)], rng.integers(0, 12, (30 + 7 * i, 5)))
+            for i in range(7)
+        ]
+        got = serve_store_batch(store, requests, engine=engine)
+        ref = serve_store_batch(store, requests, engine="simple")
+        for (u, x), p, q in zip(requests, got, ref):
+            exact = store.predict(u, x)
+            if task == "classification":
+                assert np.array_equal(p, q)  # integer votes: bit-exact
+                assert np.array_equal(p, exact)
+            else:
+                np.testing.assert_allclose(p, q, rtol=1e-5, atol=1e-5)
+                np.testing.assert_allclose(p, exact, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("engine", ["pipelined", "sharded"])
+    def test_zero_row_requests_new_engines(self, rng, engine):
+        from repro.launch.serve_store import serve_store_batch
+
+        fleet = small_fleet(n_users=3)
+        store = build_store(fleet)
+        u = store.user_ids
+        x = rng.integers(0, 12, (20, 5)).astype(np.int32)
+        empty = np.zeros((0, 5), np.int32)
+        preds = serve_store_batch(
+            store,
+            [(u[0], x), (u[1], empty), (u[2], x), (u[0], empty)],
+            engine=engine,
+        )
+        assert preds[1].shape == (0,) and preds[3].shape == (0,)
+        for idx, user in ((0, u[0]), (2, u[2])):
+            assert np.array_equal(preds[idx], store.predict(user, x))
+
+    def test_unknown_engine_raises(self):
+        from repro.launch.serve_store import serve_store_batch
+
+        fleet = small_fleet(n_users=2)
+        store = build_store(fleet)
+        with pytest.raises(ValueError, match="engine"):
+            serve_store_batch(
+                store, [(store.user_ids[0], np.zeros((1, 5), np.int32))],
+                engine="nope",
+            )
+
+    def test_pipelined_kernel_unsorted_segments(self, rng):
+        """Conservative chunk ranges keep the pipelined kernel correct on
+        UNSORTED segment maps (the serving driver sorts; the kernel must
+        not rely on it)."""
+        import jax.numpy as jnp
+
+        from repro.kernels.tree_predict.ref import (
+            forest_predict_agg_segmented_reference,
+        )
+        from repro.kernels.tree_predict.tree_predict import (
+            forest_predict_agg_segmented,
+        )
+
+        t, n, d, depth = 13, 70, 5, 4
+        h = (1 << (depth + 1)) - 1
+        feature = rng.integers(0, d, (t, h)).astype(np.int32)
+        threshold = rng.integers(0, 16, (t, h)).astype(np.int32)
+        inter = rng.random((t, h)) < 0.6
+        inter[:, (h - 1) // 2 :] = False
+        xb = rng.integers(0, 16, (n, d)).astype(np.int32)
+        tseg = rng.integers(0, 6, t).astype(np.int32)  # unsorted
+        oseg = rng.integers(0, 6, n).astype(np.int32)  # unsorted
+        fit = rng.integers(0, 3, (t, h)).astype(np.float32)
+        got = forest_predict_agg_segmented(
+            xb, oseg, tseg, feature, threshold, fit, inter,
+            max_depth=depth, n_classes=3, block_trees=4, block_obs=32,
+            engine="pipelined",
+        )
+        ref = forest_predict_agg_segmented_reference(
+            jnp.asarray(xb), jnp.asarray(oseg), jnp.asarray(tseg),
+            jnp.asarray(feature), jnp.asarray(threshold), jnp.asarray(fit),
+            jnp.asarray(inter), depth, n_classes=3,
+        )
+        assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+    def test_pipelined_rejects_tracers(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.tree_predict.tree_predict import (
+            forest_predict_agg_segmented,
+        )
+
+        t, n, d, depth = 4, 8, 3, 2
+        h = (1 << (depth + 1)) - 1
+        args = (
+            jnp.zeros((n, d), jnp.int32), jnp.zeros(n, jnp.int32),
+            jnp.zeros(t, jnp.int32), jnp.zeros((t, h), jnp.int32),
+            jnp.zeros((t, h), jnp.int32), jnp.zeros((t, h), jnp.float32),
+            jnp.zeros((t, h), bool),
+        )
+
+        def f(*a):
+            return forest_predict_agg_segmented(
+                *a, max_depth=depth, engine="pipelined"
+            )
+
+        with pytest.raises(ValueError, match="pipelined"):
+            jax.jit(f)(*args)
+        # engine=None silently falls back to the simple oracle under jit
+        out = jax.jit(
+            lambda *a: forest_predict_agg_segmented(*a, max_depth=depth)
+        )(*args)
+        assert out.shape == (n,)
+
+
+class TestMixedDepthSharding:
+    def test_piecewise_gathers_share_width_after_ensure(self, rng):
+        """The sharded engine gathers per shard; arena_ensure of the WHOLE
+        batch must come first so a later shard's deeper user cannot grow
+        the arena width after an earlier shard was gathered (regression:
+        mixed-depth fleets crashed jnp.stack on multi-device hosts)."""
+        shallow = random_forest(seed=0, n_trees=3, d=5, max_depth=2,
+                                n_bins=12)
+        deep = random_forest(seed=1, n_trees=3, d=5, max_depth=6,
+                             n_bins=12)
+        shared = build_shared_codebook([shallow, deep])
+        store = ForestStore(shared)
+        store.add_user("shallow", shallow)
+        store.add_user("deep", deep)
+        store.arena_ensure(["shallow", "deep"], block_trees=4)
+        code_a, *_ = store.arena_pack(["shallow"], block_trees=4)
+        code_b, *_ = store.arena_pack(["deep"], block_trees=4)
+        assert code_a.shape[1] == code_b.shape[1] == store.arena.h
+
+        from repro.launch.serve_store import serve_store_batch
+
+        x = rng.integers(0, 12, (15, 5)).astype(np.int32)
+        reqs = [("shallow", x), ("deep", x)]
+        for engine in ("pipelined", "sharded"):
+            preds = serve_store_batch(store, reqs, engine=engine)
+            for (u, xi), p in zip(reqs, preds):
+                assert np.array_equal(p, store.predict(u, xi)), engine
+
+
+class TestArenaWidthShrink:
+    def test_width_and_depth_shrink_after_deep_user_leaves(self, rng):
+        """Evicting/invalidating the one deep user must shrink the arena's
+        common width and traversal depth back to the survivors' maximum —
+        not inflate every later batch forever."""
+        shallow = {
+            f"s{i}": random_forest(seed=i, n_trees=3, d=5, max_depth=3,
+                                   n_bins=12)
+            for i in range(3)
+        }
+        deep = random_forest(seed=11, n_trees=3, d=5, max_depth=7,
+                             n_bins=12)  # realized depth 7 at this seed
+        shared = build_shared_codebook(list(shallow.values()) + [deep])
+        store = ForestStore(shared)
+        for u, f in shallow.items():
+            store.add_user(u, f)
+        store.add_user("deep", deep)
+        store.arena_pack(list(shallow) + ["deep"], block_trees=4)
+        h_wide = store.arena.h
+        assert store.arena.max_depth == 7
+        store.arena.invalidate("deep")
+        assert store.arena.h < h_wide
+        assert store.arena.max_depth == 3
+        # surviving users still serve correctly at the shrunk width
+        from repro.launch.serve_store import serve_store_batch
+
+        x = rng.integers(0, 12, (12, 5)).astype(np.int32)
+        reqs = [(u, x) for u in shallow]
+        for (u, xi), p in zip(reqs, serve_store_batch(
+            store, reqs, engine="pipelined"
+        )):
+            assert np.array_equal(p, store.predict(u, xi))
