@@ -16,6 +16,7 @@ from repro.data.tabular import TabularSpec, make_dataset
 from repro.forest import fit_binner, predict_forest, to_compact_forest, train_forest
 from repro.launch.steps import make_decode_step
 from repro.models import init_params, prefill
+from repro.serving import ForestServer
 
 
 def lm_serving():
@@ -47,14 +48,27 @@ def forest_serving():
     forest = to_compact_forest(model)
     comp = compress_forest(forest)
     xb = binner.transform(x[:500])
+
+    # the session API (ISSUE 4): plan once, execute per row batch — the
+    # plan carries the engine choice, and repeated batch signatures reuse
+    # the arena-gathered pack across calls
+    server = ForestServer.from_forest(comp)
+    plan = server.plan([("forest", xb)])
     t0 = time.time()
-    pred = predict_compressed(comp, xb)  # decodes only visited paths
-    t_comp = time.time() - t0
+    pred = server.execute(plan, [xb])[0]
+    t_cold = time.time() - t0
+    t0 = time.time()
+    pred_warm = server.execute(plan, [xb])[0]  # plan-cache hot
+    t_warm = time.time() - t0
     ref = predict_forest(model, x[:500])
-    assert (pred == ref).all()
+    assert (pred == ref).all() and (pred_warm == ref).all()
+    assert (predict_compressed(comp, xb) == ref).all()  # reference oracle
     blob = len(comp.to_bytes())
-    print(f"[forest] 500 predictions from {blob} compressed bytes in "
-          f"{t_comp:.2f}s — identical to the uncompressed forest")
+    pc = server.stats()["plan_cache"]
+    print(f"[forest] 500 predictions from {blob} compressed bytes via "
+          f"engine={plan.engine.name}: cold {t_cold:.2f}s, warm "
+          f"{t_warm * 1e3:.0f}ms (pack hits {pc['pack_hits']}) — "
+          f"identical to the uncompressed forest")
 
 
 if __name__ == "__main__":

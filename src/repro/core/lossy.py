@@ -21,6 +21,19 @@ import numpy as np
 from .tree import Forest
 
 
+@dataclass(frozen=True)
+class LossyConfig:
+    """Store-level lossy mode (paper §6/§7): quantize every user's
+    regression fit table onto one fleet-wide fixed-rate grid of
+    ``2**fit_bits`` levels before (lossless) delta encoding.  Consumed by
+    ``repro.store.build_store(lossy=...)``, which reports the measured max
+    error next to the closed-form distortion bound."""
+
+    fit_bits: int = 8
+    dithered: bool = False
+    seed: int = 0
+
+
 def subsample_trees(forest: Forest, n_keep: int, seed: int = 0) -> Forest:
     rng = np.random.default_rng(seed)
     idx = rng.choice(forest.n_trees, size=min(n_keep, forest.n_trees), replace=False)
@@ -32,7 +45,11 @@ def subsample_trees(forest: Forest, n_keep: int, seed: int = 0) -> Forest:
 
 
 def quantize_fits(
-    forest: Forest, bits: int, dithered: bool = False, seed: int = 0
+    forest: Forest,
+    bits: int,
+    dithered: bool = False,
+    seed: int = 0,
+    value_range: tuple[float, float] | None = None,
 ) -> tuple[Forest, float]:
     """Uniform b-bit quantization of the regression fit-value dictionary.
 
@@ -40,11 +57,20 @@ def quantize_fits(
     ``fit_values`` table has at most 2^bits distinct values, so the fits
     component's alphabet (and dictionary) shrinks accordingly; node fit
     indices are remapped.
+
+    ``value_range=(lo, hi)`` pins the grid to an EXTERNAL range instead of
+    this forest's own min/max — quantizing a whole fleet against one
+    shared range makes every user land on the same fixed-rate grid, so
+    the store's fleet-union fit table collapses to at most 2^bits entries
+    (``repro.store.build_store(lossy=...)``).
     """
     if forest.meta.task != "regression":
         raise ValueError("fit quantization applies to regression forests")
     values = np.asarray(forest.fit_values, dtype=np.float64)
-    lo, hi = float(values.min()), float(values.max())
+    if value_range is None:
+        lo, hi = float(values.min()), float(values.max())
+    else:
+        lo, hi = float(value_range[0]), float(value_range[1])
     span = max(hi - lo, 1e-30)
     n_levels = 1 << bits
     step = span / n_levels

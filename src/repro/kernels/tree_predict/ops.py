@@ -86,6 +86,25 @@ def partition_segments_by_load(
     return shards
 
 
+def estimate_shard_speedup(seg_trees: np.ndarray, n_shards: int) -> float:
+    """Predicted sharded-engine speedup for a batch: total tree load over
+    the heaviest shard's load under the greedy bin-pack (1.0 = one user
+    dominates and sharding buys nothing; ``n_shards`` = perfectly even).
+    The serving session's engine cost model compares this against its
+    minimum-speedup threshold instead of blindly sharding on any
+    multi-device host."""
+    seg_trees = np.asarray(seg_trees, np.int64)
+    total = int(seg_trees.sum())
+    if total == 0 or n_shards <= 1:
+        return 1.0
+    shards = partition_segments_by_load(seg_trees, n_shards)
+    max_load = max(
+        (sum(int(seg_trees[s]) for s in shard) for shard in shards if shard),
+        default=total,
+    )
+    return total / max(max_load, 1)
+
+
 @functools.lru_cache(maxsize=None)
 def _sharded_callable(
     n_devices: int, max_depth: int, n_classes: int, block_trees: int,

@@ -1,18 +1,20 @@
-"""Batched forest serving straight from the compressed bytes (paper §5),
-fused with the Pallas traversal kernel.
+"""DEPRECATED single-forest serving driver (PR 1), now a thin shim over
+the unified session API (ISSUE 4).
 
-Pipeline per request batch:
+``serve_compressed_forest`` delegates to a one-user
+``repro.serving.ForestServer`` session memoized on the ``CompressedForest``
+instance (the same memo pattern as ``predict_compressed``'s stacked
+forest): the first call decodes + admits the forest's tiles into the
+session's device arena, and every later call is an index-gather + one
+kernel launch through the plan/execute IR.  New code should hold the
+session directly:
 
-    compressed bytes --(table-driven Huffman decode, vectorized)--> trees
-        --(heap packing, tile of ``block_trees`` trees)--> device buffers
-        --(forest_predict_agg kernel)--> vote counts / fit sums --> prediction
+    from repro.serving import ForestServer
+    server = ForestServer.from_forest(comp)
+    pred = server.predict(x_binned)
 
-Tiles are streamed: the device predict for tile ``i`` is dispatched
-asynchronously (JAX dispatch returns before the kernel finishes) and the host
-immediately decodes + packs tile ``i + 1``, so decode overlaps predict and
-the device-side working set stays O(single tree-tile) — the forest is never
-materialized on the device at once.  In-kernel ensemble aggregation means
-each tile returns only (N, C) votes / (N,) sums, not (T, N) per-tree fits.
+The heap packing helpers (``tree_to_heap`` / ``iter_heap_tiles``) moved to
+``repro.serving.pack`` and are re-exported here for compatibility.
 
     PYTHONPATH=src python -m repro.launch.serve_forest --trees 100 \
         --depth 8 --rows 5000 --batch 1024
@@ -21,74 +23,15 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Iterator
+import warnings
 
 import numpy as np
 
-from ..core.compressed_predict import iter_trees, predict_compressed
+from ..core.compressed_predict import predict_compressed
 from ..core.forest_codec import CompressedForest
-from ..core.tree import Tree
+from ..serving.pack import iter_heap_tiles, tree_to_heap  # noqa: F401
 
-
-def tree_to_heap(
-    tree: Tree,
-    fit_values: np.ndarray | None,
-    feature: np.ndarray,
-    threshold: np.ndarray,
-    fit: np.ndarray,
-    is_internal: np.ndarray,
-) -> None:
-    """Write one preorder compact tree into heap-form rows (node i ->
-    children 2i+1 / 2i+2), the layout the Pallas kernel traverses."""
-    stack = [(0, 0)]  # (preorder node id, heap slot)
-    left, right = tree.children_left, tree.children_right
-    feat, thr, nfit = tree.feature, tree.threshold, tree.node_fit
-    while stack:
-        i, slot = stack.pop()
-        if feat[i] >= 0:
-            feature[slot] = feat[i]
-            threshold[slot] = thr[i]
-            is_internal[slot] = True
-            stack.append((int(right[i]), 2 * slot + 2))
-            stack.append((int(left[i]), 2 * slot + 1))
-        elif fit_values is not None:
-            fit[slot] = fit_values[int(nfit[i])]
-        else:
-            fit[slot] = float(nfit[i])
-
-
-def iter_heap_tiles(
-    comp: CompressedForest, block_trees: int
-) -> Iterator[tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
-    """Stream (feature, threshold, fit, is_internal) heap tiles of up to
-    ``block_trees`` trees each, decoded on the fly from the compressed
-    bytes — host memory holds one tile, not the forest."""
-    n_heap = (1 << (comp.max_depth + 1)) - 1
-    fit_values = (
-        comp.fit_values if comp.meta.task == "regression" else None
-    )
-    buf: list[Tree] = []
-
-    def pack(trees: list[Tree]):
-        t = len(trees)
-        feature = np.zeros((t, n_heap), np.int32)
-        threshold = np.zeros((t, n_heap), np.int32)
-        fit = np.zeros((t, n_heap), np.float32)
-        is_internal = np.zeros((t, n_heap), bool)
-        for k, tree in enumerate(trees):
-            tree_to_heap(
-                tree, fit_values,
-                feature[k], threshold[k], fit[k], is_internal[k],
-            )
-        return feature, threshold, fit, is_internal
-
-    for tree in iter_trees(comp):
-        buf.append(tree)
-        if len(buf) == block_trees:
-            yield pack(buf)
-            buf = []
-    if buf:
-        yield pack(buf)
+__all__ = ["iter_heap_tiles", "serve_compressed_forest", "tree_to_heap"]
 
 
 def serve_compressed_forest(
@@ -97,43 +40,35 @@ def serve_compressed_forest(
     block_trees: int = 32,
     interpret: bool | None = None,
 ) -> np.ndarray:
-    """Predict for (n, d) binned observations straight from the compressed
-    format through the fused Pallas kernel.  Returns (n,) predictions
-    (majority vote / ensemble mean).
+    """Deprecated: use ``repro.serving.ForestServer.from_forest``.
 
-    Decode of tile i+1 overlaps the device predict of tile i: the kernel
-    call is dispatched asynchronously and only the final accumulated
-    votes/sums are synchronized."""
-    from ..kernels.tree_predict.tree_predict import forest_predict_agg
+    Predicts for (n, d) binned observations straight from the compressed
+    format through the session API.  Returns (n,) predictions (majority
+    vote / ensemble mean), matching ``predict_compressed`` (vote counts
+    are integer-exact; the regression mean accumulates in float32).
 
-    meta = comp.meta
-    # tiles stay numpy on the host side: the kernel wrapper's 2**24 range
-    # check runs with numpy (no device sync), so each tile's kernel is
-    # dispatched without blocking on the previous one
-    xb = np.ascontiguousarray(x_binned, np.int32)
-    n_classes = meta.n_classes if meta.task == "classification" else 0
-    total = None
-    n_trees = 0
-    for feature, threshold, fit, is_internal in iter_heap_tiles(
-        comp, block_trees
-    ):
-        part = forest_predict_agg(
-            xb,
-            feature,
-            threshold,
-            fit,
-            is_internal,
-            max_depth=comp.max_depth,
-            n_classes=n_classes,
-            interpret=interpret,
-        )  # dispatched async; host continues decoding the next tile
-        total = part if total is None else total + part
-        n_trees += feature.shape[0]
-    if total is None:
-        return np.zeros(x_binned.shape[0])
-    if meta.task == "classification":
-        return np.asarray(total.argmax(-1)).astype(np.float64)
-    return np.asarray(total, np.float64) / max(n_trees, 1)
+    NOTE the session trade-off vs the deleted PR 1 streaming path: the
+    forest's fused tiles stay DEVICE-RESIDENT in the session's arena for
+    the comp's lifetime (warm calls are an index-gather + one launch)
+    instead of streaming O(one tile) per call.  Callers serving many
+    forests under tight device memory should hold explicit
+    ``ForestServer.from_forest(..., arena_capacity_trees=...)`` sessions
+    and drop them when done."""
+    warnings.warn(
+        "serve_compressed_forest is deprecated; use "
+        "repro.serving.ForestServer.from_forest(comp).predict(x)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from ..serving import ForestServer
+
+    server = getattr(comp, "_serve_session", None)
+    if server is None:
+        server = ForestServer.from_forest(comp)
+        comp._serve_session = server  # type: ignore[attr-defined]
+    return server.predict(
+        x_binned, block_trees=block_trees, interpret=interpret
+    )
 
 
 def main() -> None:
@@ -152,6 +87,7 @@ def main() -> None:
     from ..core.forest_codec import compress_forest
     from ..data.tabular import TabularSpec, make_dataset
     from ..forest import fit_binner, to_compact_forest, train_forest
+    from ..serving import ForestServer
 
     spec = TabularSpec("serve", args.rows, args.features, args.task, 2, 2)
     x, y, cat = make_dataset(spec, seed=args.seed)
@@ -165,12 +101,11 @@ def main() -> None:
     blob_bytes = len(comp.to_bytes())
     xb = binner.transform(x)
 
-    # warm up (jit compile) then measure streamed serving
-    serve_compressed_forest(comp, xb[: args.batch],
-                            block_trees=args.block_trees)
+    server = ForestServer.from_forest(comp)
+    # warm up (jit compile + arena admission) then measure session serving
+    server.predict(xb[: args.batch], block_trees=args.block_trees)
     t0 = time.time()
-    pred = serve_compressed_forest(comp, xb[: args.batch],
-                                   block_trees=args.block_trees)
+    pred = server.predict(xb[: args.batch], block_trees=args.block_trees)
     t_serve = time.time() - t0
     ref = predict_compressed(comp, xb[: args.batch])
     agree = float((pred == ref).mean()) if args.task == "classification" \
@@ -180,7 +115,8 @@ def main() -> None:
         f"({blob_bytes} compressed bytes)\n"
         f"serve {args.batch} rows: {t_serve * 1e3:.1f} ms "
         f"({args.batch / t_serve:.0f} rows/s), "
-        f"agreement vs predict_compressed: {agree}"
+        f"agreement vs predict_compressed: {agree}\n"
+        f"session: {server.stats()['plan_cache']}"
     )
 
 

@@ -1,30 +1,22 @@
-"""Ragged multi-tenant serving from the compressed store — pipelined
-(ISSUE 3 tentpole).
+"""DEPRECATED ragged multi-tenant serving driver (PR 2/3), now a thin
+shim over the unified session API (ISSUE 4).
 
-A request batch mixes MANY users: each request is ``(user_id, x_binned)``
-against that user's own forest.  Three engines share one grouping front-end
-(rows → one (N, d) block + int32 segment id per row):
+``serve_store_batch`` delegates to a per-store ``repro.serving.ForestServer``
+session (memoized on the store object), so every call now flows through
+the plan/execute IR and benefits from the cross-batch plan cache; the
+``engine=`` string kwarg maps onto the session's explicit engine override.
+New code should hold a session directly:
 
-* ``engine="pipelined"`` (default) — the device-resident TILE ARENA packs
-  each requested user's decoded heap tiles ONCE (fused node attributes,
-  common padded width); per batch the driver index-gathers the users' runs
-  on device, sorts rows by segment, and makes ONE launch of the
-  double-buffered DMA kernel (``forest_predict_agg_segmented_packed``),
-  which streams tree chunks HBM→VMEM overlapping the previous chunk's
-  traversal and skips chunks outside each row block's segment range.
-* ``engine="sharded"`` (default when >1 device) — the ragged tree axis is
-  partitioned ACROSS devices (greedy bin-pack on per-user tree counts),
-  each device runs the pipelined kernel over its own tree shard against
-  the replicated batch, and the (N, C) partial votes/sums all-reduce via
-  ``psum`` — fleets whose hot set exceeds one core's VMEM scale out.
-* ``engine="simple"`` — the PR 2 path, kept verbatim: host-side tile
-  re-pack each call + one segmented-kernel launch per tree chunk.  The
-  differential oracle and the serving baseline the pipelined engines are
-  benchmarked against (``benchmarks/serve_pipeline.py``).
+    from repro.serving import ForestServer
+    server = ForestServer(store)
+    plan = server.plan(requests)     # grouping + cost-model engine choice
+    preds = server.execute(plan, [x for _, x in requests])
 
-All engines aggregate per row over that row's own forest only and match
-per-user ``predict_compressed`` (vote counts are integer-exact; the
-regression mean accumulates in float32 on device).
+The PR 3 pipelined STAGE helpers (``pack_pipelined_batch`` /
+``run_pipelined_kernel`` / ``finalize_pipelined_batch``) are kept verbatim
+below: they are the un-memoized baseline ``benchmarks/serve_pipeline.py``
+times stage-by-stage and ``benchmarks/serve_session.py`` compares the
+session's warm path against.
 
     PYTHONPATH=src python -m repro.launch.serve_store --users 40 \
         --requests 64 --rows 256 --engine pipelined
@@ -33,51 +25,33 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 from typing import NamedTuple, Sequence
 
 import numpy as np
 
+from ..serving.pack import (
+    group_requests as _group_requests,
+    pad_heap_width as _pad_heap_width,  # canonical home: serving.pack
+    pack_host_tiles,
+)
+from ..serving.plan import ENGINE_BLOCKS as _ENGINE_BLOCKS
 from ..store.runtime import ForestStore
 
 Request = tuple[str, np.ndarray]
 
-_ENGINE_BLOCKS = {  # per-engine (block_trees, block_obs) sweet spots
-    "simple": (32, 256),
-    "pipelined": (8, 128),
-    "sharded": (8, 128),
-}
 
+def _session_for(store: ForestStore):
+    """Memoize one ForestServer per store so repeated legacy calls share
+    the session's plan cache (same pattern as predict_compressed's
+    stacked-forest memo)."""
+    server = getattr(store, "_serve_session", None)
+    if server is None:
+        from ..serving import ForestServer
 
-def _pad_heap_width(tile_arr: np.ndarray, h: int) -> np.ndarray:
-    t, h_u = tile_arr.shape
-    if h_u == h:
-        return tile_arr  # width already common: no copy (hot fleet path)
-    out = np.zeros((t, h), dtype=tile_arr.dtype)
-    out[:, :h_u] = tile_arr
-    return out
-
-
-def _group_requests(requests: Sequence[Request]):
-    """Rows → one (N, d) int32 block + segment id per row; users in
-    first-appearance order (their position IS their segment id — the
-    returned ``seg_of`` is the one mapping baked into ``obs_seg``)."""
-    users: list[str] = []
-    seg_of: dict[str, int] = {}
-    for user_id, _ in requests:
-        if user_id not in seg_of:
-            seg_of[user_id] = len(users)
-            users.append(user_id)
-    xb_parts, oseg_parts, row_slices = [], [], []
-    off = 0
-    for user_id, x in requests:
-        x = np.ascontiguousarray(x, np.int32)
-        xb_parts.append(x)
-        oseg_parts.append(np.full(len(x), seg_of[user_id], np.int32))
-        row_slices.append(slice(off, off + len(x)))
-        off += len(x)
-    xb = np.concatenate(xb_parts)
-    obs_seg = np.concatenate(oseg_parts)
-    return users, seg_of, xb, obs_seg, row_slices
+        server = ForestServer(store)
+        store._serve_session = server  # type: ignore[attr-defined]
+    return server
 
 
 def pack_request_batch(
@@ -86,41 +60,12 @@ def pack_request_batch(
     block_trees: int = 32,
 ):
     """Group a mixed-user batch for the segmented kernel (the PR 2 host
-    packing, kept for ``engine="simple"``).
-
-    Returns ``(xb, obs_seg, row_slices, tree_pack, max_depth, seg_trees)``
-    where ``tree_pack`` is the ragged concatenation of every requested
-    user's heap tiles (feature, threshold, fit, is_internal, tree_seg) at a
-    common heap width, and ``seg_trees[s]`` is user s's tree count.
-
-    Re-padding only happens for users whose heap width differs from the
-    batch maximum (``_pad_heap_width`` is a no-op otherwise); the pipelined
-    engines skip this host pass entirely — their padded tiles persist in
-    the store's device arena and each batch is an index-gather
-    (``ForestStore.arena_pack``)."""
-    users, seg_of, xb, obs_seg, row_slices = _group_requests(requests)
-    max_depth = max(store.max_depth(u) for u in users)
-    h = (1 << (max_depth + 1)) - 1
-    feats, thrs, fits, inters, tsegs = [], [], [], [], []
-    for user_id in users:
-        for feature, threshold, fit, is_internal in store.tiles(
-            user_id, block_trees
-        ):
-            feats.append(_pad_heap_width(feature, h))
-            thrs.append(_pad_heap_width(threshold, h))
-            fits.append(_pad_heap_width(fit, h))
-            inters.append(_pad_heap_width(is_internal, h))
-            tsegs.append(
-                np.full(feature.shape[0], seg_of[user_id], np.int32)
-            )
-    tree_pack = (
-        np.concatenate(feats),
-        np.concatenate(thrs),
-        np.concatenate(fits),
-        np.concatenate(inters),
-        np.concatenate(tsegs),
+    packing, kept for ``engine="simple"`` oracles and tests; the canonical
+    pieces live in ``serving.pack``)."""
+    users, _seg_of, xb, obs_seg, row_slices = _group_requests(requests)
+    tree_pack, max_depth, seg_trees = pack_host_tiles(
+        store, users, block_trees
     )
-    seg_trees = np.array([store.n_trees(u) for u in users], np.int64)
     return xb, obs_seg, row_slices, tree_pack, max_depth, seg_trees
 
 
@@ -147,89 +92,10 @@ def _empty_preds(requests):
     return [np.zeros(len(x), np.float64) for _, x in requests]
 
 
-def _serve_simple(
-    store, requests, block_trees, block_obs, interpret
-) -> list[np.ndarray]:
-    """The PR 2 serving path, verbatim: host pack + one segmented-kernel
-    launch per tree chunk over that chunk's row span."""
-    from ..kernels.tree_predict.tree_predict import (
-        forest_predict_agg_segmented,
-    )
-
-    xb, obs_seg, row_slices, tree_pack, max_depth, seg_trees = (
-        pack_request_batch(store, requests, block_trees)
-    )
-    feature, threshold, fit, is_internal, tree_seg = tree_pack
-    task = store.shared.task
-    n_classes = store.shared.n_classes if task == "classification" else 0
-    n, c_out = len(xb), max(n_classes, 1)
-    t = feature.shape[0]
-    if n == 0:
-        return _empty_preds(requests)
-
-    # Segments only overlap block-diagonally: sort rows by segment and run
-    # each tree chunk against just the row span of the users it contains —
-    # work stays ~sum_u T_u * N_u instead of T_total * N_total, while one
-    # launch still serves several users' trees (the segment mask sorts out
-    # chunk-boundary users).  Spans are padded to block_obs multiples (rows)
-    # and block_trees (trees) with non-matching sentinel segments, so the
-    # jitted kernel sees a handful of distinct shapes, not one per span.
-    order = np.argsort(obs_seg, kind="stable")
-    xb_s = np.ascontiguousarray(xb[order])
-    oseg_s = np.ascontiguousarray(obs_seg[order])
-    n_segs = len(seg_trees)
-    seg_start = np.searchsorted(oseg_s, np.arange(n_segs))
-    seg_end = np.searchsorted(oseg_s, np.arange(n_segs), side="right")
-
-    total_sorted = np.zeros(
-        (n, c_out) if n_classes > 0 else (n,), np.float64
-    )
-    parts: list[tuple[int, int, object]] = []
-    for lo in range(0, t, block_trees):
-        hi = min(lo + block_trees, t)
-        r0 = int(seg_start[int(tree_seg[lo])])
-        r1 = int(seg_end[int(tree_seg[hi - 1])])
-        if r1 <= r0:
-            continue
-        n_rows = r1 - r0
-        n_pad = min(-(-n_rows // block_obs) * block_obs, n)
-        r1p = min(r0 + n_pad, n)
-        r0p = r1p - n_pad  # slide the window instead of materializing pads
-        chunk = [tree_seg[lo:hi], feature[lo:hi], threshold[lo:hi],
-                 fit[lo:hi], is_internal[lo:hi]]
-        if hi - lo < block_trees:  # pad tail chunk to the common tree shape
-            pad_t = block_trees - (hi - lo)
-            chunk[0] = np.concatenate(
-                [chunk[0], np.full(pad_t, -1, np.int32)]
-            )
-            for i in range(1, 5):
-                chunk[i] = np.concatenate(
-                    [chunk[i], np.zeros((pad_t,) + chunk[i].shape[1:],
-                                        chunk[i].dtype)]
-                )
-        tseg_c, feat_c, thr_c, fit_c, inter_c = chunk
-        part = forest_predict_agg_segmented(
-            xb_s[r0p:r1p],
-            oseg_s[r0p:r1p],
-            tseg_c,
-            feat_c,
-            thr_c,
-            fit_c,
-            inter_c,
-            max_depth=max_depth,
-            n_classes=n_classes,
-            block_trees=block_trees,
-            block_obs=block_obs,
-            interpret=interpret,
-            engine="simple",
-        )  # dispatched async; host keeps slicing/submitting
-        parts.append((r0p, r1p, part))
-    for r0p, r1p, part in parts:
-        total_sorted[r0p:r1p] += np.asarray(part, np.float64)
-    total = np.empty_like(total_sorted)
-    total[order] = total_sorted
-    return _finalize(store, requests, row_slices, total, task)
-
+# ---------------------------------------------------------------------------
+# PR 3 pipelined stage helpers — the un-memoized baseline the benchmarks
+# time; the session API composes the same stages through serving.engines.
+# ---------------------------------------------------------------------------
 
 class PipelinedBatch(NamedTuple):
     """Output of ``pack_pipelined_batch``: everything the one-launch DMA
@@ -306,10 +172,13 @@ def finalize_pipelined_batch(
     return _finalize(store, requests, pb.row_slices, total, task)
 
 
-def _serve_pipelined(
-    store, requests, block_trees, block_obs, interpret
+def serve_pipelined_uncached(
+    store, requests, block_trees: int = 8, block_obs: int = 128,
+    interpret=None,
 ) -> list[np.ndarray]:
-    """Arena index-gather + ONE double-buffered DMA kernel launch."""
+    """The PR 3 pipelined path composed stage-by-stage WITHOUT the session
+    plan cache — the baseline ``benchmarks/serve_session.py`` measures the
+    cross-batch gather memoization against."""
     pb = pack_pipelined_batch(store, requests, block_trees, block_obs)
     if pb is None:
         return _empty_preds(requests)
@@ -317,75 +186,9 @@ def _serve_pipelined(
     return finalize_pipelined_batch(store, requests, pb, out)
 
 
-def _serve_sharded(
-    store, requests, block_trees, block_obs, interpret
-) -> list[np.ndarray]:
-    """Tree axis sharded across devices: per-device pipelined partial
-    aggregation + one all-reduce."""
-    import jax
-    import jax.numpy as jnp
-
-    from ..kernels.tree_predict.ops import (
-        forest_predict_agg_segmented_sharded,
-        partition_segments_by_load,
-    )
-    from ..kernels.tree_predict.tree_predict import segment_chunk_ranges
-
-    users, _seg_of, xb, obs_seg, row_slices = _group_requests(requests)
-    task = store.shared.task
-    n_classes = store.shared.n_classes if task == "classification" else 0
-    n = len(xb)
-    if n == 0:
-        return _empty_preds(requests)
-
-    n_dev = len(jax.devices())
-    # admit the WHOLE batch before any per-shard gather: a later shard's
-    # cold admission may grow the arena heap width, which would leave
-    # earlier shards' gathered arrays at a stale (narrower) width
-    store.arena_ensure(users, block_trees)
-    seg_trees = np.array([store.n_trees(u) for u in users], np.int64)
-    shards = partition_segments_by_load(seg_trees, n_dev)
-    # per-shard users ascend by segment id: sorted rows keep ranges tight
-    shards = [sorted(s) for s in shards]
-    t_pad = max(
-        max(
-            (-(-int(seg_trees[s].sum()) // block_trees) * block_trees
-             for s in map(np.asarray, shards) if len(s)),
-            default=block_trees,
-        ),
-        block_trees,
-    )
-    block_obs = min(block_obs, n)
-    order = np.argsort(obs_seg, kind="stable")
-    xb_s = np.ascontiguousarray(xb[order])
-    oseg_s = np.ascontiguousarray(obs_seg[order])
-
-    codes, fits, tsegs, los, his = [], [], [], [], []
-    max_depth = 0
-    for shard in shards:
-        shard_users = [users[s] for s in shard]
-        code, fit, tseg, _, max_depth = store.arena_pack(
-            shard_users, block_trees, pad_to=t_pad, seg_ids=shard
-        )
-        lo, hi = segment_chunk_ranges(
-            oseg_s, tseg, block_trees, block_obs
-        )
-        codes.append(code)
-        fits.append(fit)
-        tsegs.append(tseg)
-        los.append(lo)
-        his.append(hi)
-    out = forest_predict_agg_segmented_sharded(
-        xb_s, oseg_s, jnp.stack(codes), jnp.stack(fits),
-        np.stack(tsegs), np.stack(los), np.stack(his),
-        max_depth, store.arena.tb2, n_classes=n_classes,
-        block_trees=block_trees, block_obs=block_obs, interpret=interpret,
-    )
-    out = np.asarray(out, np.float64)
-    total = np.empty_like(out)
-    total[order] = out
-    return _finalize(store, requests, row_slices, total, task)
-
+# ---------------------------------------------------------------------------
+# the deprecated public entry point
+# ---------------------------------------------------------------------------
 
 def serve_store_batch(
     store: ForestStore,
@@ -395,40 +198,30 @@ def serve_store_batch(
     interpret: bool | None = None,
     engine: str | None = None,
 ) -> list[np.ndarray]:
-    """Serve a mixed-user request batch in one ragged pass.  Returns one
-    prediction array per request (majority vote / ensemble mean), matching
-    per-user ``predict_compressed`` (vote counts are integer-exact; the
-    regression mean accumulates in float32 on device).
+    """Deprecated: use ``repro.serving.ForestServer``.
 
-    ``engine=None`` picks ``"sharded"`` on multi-device hosts, else
-    ``"pipelined"``, falling back to ``"simple"`` when the store schema is
-    incompatible with the fused arena layout."""
+    Serves a mixed-user request batch through the session API (one
+    memoized session per store).  Results are identical to
+    ``ForestServer.serve``: one prediction array per request, matching
+    per-user ``predict_compressed``.  ``engine=None`` now asks the
+    session's cost model instead of the old "sharded iff multi-device"
+    rule."""
+    warnings.warn(
+        "serve_store_batch is deprecated; use repro.serving.ForestServer "
+        "(plan/execute session API)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     if not requests:
         return []
-    if engine is None:
-        if store.arena is None:
-            engine = "simple"
-        else:
-            import jax
-
-            engine = "sharded" if len(jax.devices()) > 1 else "pipelined"
-    if engine not in _ENGINE_BLOCKS:
-        raise ValueError(f"unknown serving engine {engine!r}")
-    if engine != "simple" and store.arena is None:
-        raise ValueError(
-            f"engine={engine!r} needs the fused tile arena, which this "
-            "store's schema cannot use (packed code word >= 2**24); use "
-            "engine='simple'"
-        )
-    bt_default, bo_default = _ENGINE_BLOCKS[engine]
-    block_trees = bt_default if block_trees is None else block_trees
-    block_obs = bo_default if block_obs is None else block_obs
-    serve = {
-        "simple": _serve_simple,
-        "pipelined": _serve_pipelined,
-        "sharded": _serve_sharded,
-    }[engine]
-    return serve(store, requests, block_trees, block_obs, interpret)
+    server = _session_for(store)
+    plan = server.plan(
+        requests, engine=engine,
+        block_trees=block_trees, block_obs=block_obs,
+    )
+    return server.execute(
+        plan, [x for _, x in requests], interpret=interpret
+    )
 
 
 def main() -> None:
@@ -446,6 +239,7 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    from ..serving import ForestServer
     from ..store import build_store, make_request_batch, make_synthetic_fleet
 
     fleet = make_synthetic_fleet(
@@ -455,15 +249,15 @@ def main() -> None:
     store = build_store(fleet)
     t_build = time.time() - t0
     rep = store.size_report()
+    server = ForestServer(store)
     requests = make_request_batch(
         store, args.requests, args.rows, args.seed
     )
-    serve_store_batch(store, requests[:2], block_trees=args.block_trees,
-                      engine=args.engine)  # compile + warm cache
+    plan = server.plan(requests, engine=args.engine,
+                       block_trees=args.block_trees)
+    server.execute(plan, [x for _, x in requests])  # compile + warm caches
     t0 = time.time()
-    preds = serve_store_batch(store, requests,
-                              block_trees=args.block_trees,
-                              engine=args.engine)
+    preds = server.execute(plan, [x for _, x in requests])
     t_serve = time.time() - t0
     n_rows = sum(len(x) for _, x in requests)
 
@@ -474,20 +268,19 @@ def main() -> None:
             mismatch += int((p != ref).sum())
         else:
             mismatch += int(np.max(np.abs(p - ref)) > 1e-4)
-    cache_stats = store.cache.stats()
-    cache_stats.pop("per_user", None)  # too chatty for the demo printout
+    stats = server.stats()
+    stats["tile_cache"].pop("per_user", None)  # too chatty for the demo
     print(
         f"store: {rep['n_users']} users, "
         f"{rep['total_bytes']} bytes total "
         f"({rep['shared_codebook_bytes']} shared codebook), "
         f"built in {t_build:.1f}s\n"
-        f"ragged batch [{args.engine or 'auto'}]: {len(requests)} requests "
-        f"/ {len(set(u for u, _ in requests))} distinct users / "
-        f"{n_rows} rows in {t_serve * 1e3:.1f} ms "
-        f"({n_rows / t_serve:.0f} rows/s)\n"
-        f"tile cache: {cache_stats}\n"
-        f"tile arena: "
-        f"{store.arena.stats() if store.arena is not None else None}\n"
+        f"plan: engine={plan.engine.name} ({plan.engine.reason}), "
+        f"{plan.n_users} users / {plan.t_pad} padded trees / "
+        f"{plan.n_row_blocks} row blocks\n"
+        f"ragged batch: {len(requests)} requests / {n_rows} rows in "
+        f"{t_serve * 1e3:.1f} ms ({n_rows / t_serve:.0f} rows/s)\n"
+        f"session stats: {stats}\n"
         f"parity vs per-user predict_compressed (8 requests): "
         f"{mismatch} mismatches"
     )

@@ -1,0 +1,35 @@
+"""repro.serving — the unified serving session API (ISSUE 4).
+
+``ForestServer`` is the one public way to serve predictions from the
+compressed format (paper §5): it owns the store, the device tile arena,
+the decoded tile cache, and a cross-batch plan cache, and splits every
+request batch into an explicit plan/execute IR —
+
+    server = ForestServer(store)          # or .from_forest(comp)
+    plan = server.plan(requests)          # grouping + cost-model engine
+    preds = server.execute(plan, X)       # pack -> gather -> kernel ->
+                                          # finalize
+
+The legacy entry points (``launch.serve_forest.serve_compressed_forest``,
+``launch.serve_store.serve_store_batch``) are deprecated shims over this
+API; ``core.compressed_predict.predict_compressed`` remains the pure
+decode-side reference oracle every engine is verified against.
+"""
+
+from .cache import PlanCache
+from .pack import iter_heap_tiles, pad_heap_width, tree_to_heap
+from .plan import ENGINE_BLOCKS, EngineChoice, ServePlan, choose_engine
+from .server import ForestServer, SingleForestStore
+
+__all__ = [
+    "ENGINE_BLOCKS",
+    "EngineChoice",
+    "ForestServer",
+    "PlanCache",
+    "ServePlan",
+    "SingleForestStore",
+    "choose_engine",
+    "iter_heap_tiles",
+    "pad_heap_width",
+    "tree_to_heap",
+]

@@ -1,0 +1,122 @@
+"""Cross-batch plan/pack memoization (ISSUE 4 tentpole + the PR 3
+"cross-batch gather memoization" ROADMAP item).
+
+Two LRU maps, both keyed by the batch's user-run signature
+(``ServePlan.signature``):
+
+* PLANS — the host-side IR (grouping, sort permutation, engine choice).
+  Valid while the store registry is unchanged (``store.version``).
+* PACKS — the arena-gathered device arrays + chunk ranges a plan resolves
+  to at execute time.  Valid while BOTH the registry version and the
+  arena ``epoch`` are unchanged: any admission, eviction, compaction, or
+  width growth bumps the epoch, so a cached gather can never be served
+  stale (and evicted users' tiles don't survive as hidden copies, which
+  would defeat the arena's capacity bound).
+
+A hot repeated batch therefore skips grouping, the argsort, the device
+index-gather, and the chunk-range computation — it pays only the row
+upload, the kernel, and the finalize.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any
+
+
+class PlanCache:
+    """LRU memo of ServePlans and their gathered packs, with version/epoch
+    invalidation and hit/miss accounting for admission-control dashboards."""
+
+    def __init__(self, capacity: int = 64) -> None:
+        self.capacity = capacity
+        # signature -> (store_version, plan)
+        self._plans: OrderedDict[tuple, tuple[int, Any]] = OrderedDict()
+        # signature -> (store_version, arena_epoch, pack)
+        self._packs: OrderedDict[tuple, tuple[int, int, Any]] = OrderedDict()
+        self.plan_hits = 0
+        self.plan_misses = 0
+        self.pack_hits = 0
+        self.pack_misses = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._packs)
+
+    # ---------------- plans -----------------------------------------------
+    def get_plan(self, key: tuple, store_version: int):
+        entry = self._plans.get(key)
+        if entry is not None and entry[0] != store_version:
+            del self._plans[key]
+            self.invalidations += 1
+            entry = None
+        if entry is None:
+            self.plan_misses += 1
+            return None
+        self._plans.move_to_end(key)
+        self.plan_hits += 1
+        return entry[1]
+
+    def put_plan(self, key: tuple, store_version: int, plan) -> None:
+        self._plans[key] = (store_version, plan)
+        self._plans.move_to_end(key)
+        while len(self._plans) > self.capacity:
+            self._plans.popitem(last=False)
+
+    # ---------------- gathered packs --------------------------------------
+    def _sweep_packs(self, store_version: int, arena_epoch: int) -> None:
+        """Drop EVERY pack whose validity token mismatches — all packs
+        share the one global (version, epoch) token, so after any arena
+        change the whole set is stale at once.  Sweeping eagerly (not just
+        the queried key) keeps evicted users' gathered device arrays from
+        surviving as hidden copies, which would defeat the arena's
+        capacity bound."""
+        stale = [
+            k for k, (v, e, _) in self._packs.items()
+            if v != store_version or e != arena_epoch
+        ]
+        for k in stale:
+            del self._packs[k]
+        self.invalidations += len(stale)
+
+    def get_pack(self, key: tuple, store_version: int, arena_epoch: int):
+        self._sweep_packs(store_version, arena_epoch)
+        entry = self._packs.get(key)
+        if entry is None:
+            self.pack_misses += 1
+            return None
+        self._packs.move_to_end(key)
+        self.pack_hits += 1
+        return entry[2]
+
+    def put_pack(
+        self, key: tuple, store_version: int, arena_epoch: int, pack
+    ) -> None:
+        self._sweep_packs(store_version, arena_epoch)
+        self._packs[key] = (store_version, arena_epoch, pack)
+        self._packs.move_to_end(key)
+        while len(self._packs) > self.capacity:
+            self._packs.popitem(last=False)
+
+    # ---------------- maintenance -----------------------------------------
+    def clear(self) -> None:
+        self._plans.clear()
+        self._packs.clear()
+
+    def stats(self) -> dict:
+        plan_total = self.plan_hits + self.plan_misses
+        pack_total = self.pack_hits + self.pack_misses
+        return {
+            "plans": len(self._plans),
+            "packs": len(self._packs),
+            "plan_hits": self.plan_hits,
+            "plan_misses": self.plan_misses,
+            "plan_hit_rate": (
+                round(self.plan_hits / plan_total, 4) if plan_total else 0.0
+            ),
+            "pack_hits": self.pack_hits,
+            "pack_misses": self.pack_misses,
+            "pack_hit_rate": (
+                round(self.pack_hits / pack_total, 4) if pack_total else 0.0
+            ),
+            "invalidations": self.invalidations,
+        }

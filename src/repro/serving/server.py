@@ -1,0 +1,318 @@
+"""``ForestServer`` — the unified serving session facade (ISSUE 4
+tentpole).
+
+One public API replaces the three divergent entry points PR 1-3 grew
+(``predict_compressed`` stays as the pure decode-side reference oracle;
+``serve_compressed_forest`` / ``serve_store_batch`` become deprecated
+shims over this class):
+
+    server = ForestServer(store)            # fleet session
+    plan = server.plan(requests)            # host-only: grouping, sort,
+                                            # engine cost model, signature
+    preds = server.execute(plan, X)         # pack -> gather -> kernel ->
+                                            # finalize
+    server.serve(requests)                  # plan + execute convenience
+
+The session owns the store, its device ``TileArena``, the decoded
+``TileCache``, and a ``PlanCache`` that memoizes plans AND arena-gathered
+packs across batches by the batch's user-run signature — invalidated on
+any arena admission/eviction (epoch) or registry change (version), never
+served stale.  Single-forest serving is a one-user session
+(``ForestServer.from_forest(...)``).
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Sequence
+
+import numpy as np
+
+from ..store.runtime import ForestStore, TileCache, make_schema_arena
+from . import engines
+from .cache import PlanCache
+from .plan import ServePlan, build_plan
+
+Request = tuple[str, np.ndarray]
+
+
+class SingleForestStore(ForestStore):
+    """The ForestStore surface the serving engines need, backed by ONE
+    inline ``CompressedForest`` — no fleet codebook, no deltas.  This is
+    what makes single-forest serving a one-user session instead of a
+    separate code path."""
+
+    def __init__(
+        self,
+        comp,
+        user_id: str = "forest",
+        tile_cache_trees: int = 4096,
+        arena_capacity_trees: int = 16384,
+    ) -> None:
+        # deliberately NOT calling ForestStore.__init__: there is no
+        # SharedCodebook — comp.meta carries every schema field the
+        # serving layer reads (task, n_classes, n_features, bins)
+        self.shared = comp.meta
+        self._comp = comp
+        self._user = user_id
+        self._deltas = {}
+        self._hydrated = {}
+        self._tile_counts = {}
+        self.cache = TileCache(tile_cache_trees)
+        self.version = 0
+        self.lossy = None
+        self.arena = make_schema_arena(
+            comp.meta.n_features, comp.meta.n_bins_per_feature,
+            arena_capacity_trees,
+        )
+
+    # ---------------- one-user registry ------------------------------------
+    @property
+    def user_ids(self) -> list[str]:
+        return [self._user]
+
+    def __contains__(self, user_id: str) -> bool:
+        return user_id == self._user
+
+    def _check(self, user_id: str) -> None:
+        if user_id != self._user:
+            raise KeyError(
+                f"single-forest session serves {self._user!r}, "
+                f"not {user_id!r}"
+            )
+
+    def n_trees(self, user_id: str) -> int:
+        self._check(user_id)
+        return self._comp.n_trees
+
+    def max_depth(self, user_id: str) -> int:
+        self._check(user_id)
+        return self._comp.max_depth
+
+    def hydrate(self, user_id: str):
+        self._check(user_id)
+        return self._comp
+
+    def predict(self, user_id: str, x_binned: np.ndarray) -> np.ndarray:
+        from ..core.compressed_predict import predict_compressed
+
+        self._check(user_id)
+        return predict_compressed(self._comp, x_binned)
+
+    # the multi-tenant registry/serialization surface does not apply
+    def _unsupported(self, *_a, **_k):
+        raise TypeError(
+            "SingleForestStore is a read-only one-user serving adapter; "
+            "build a ForestStore for registry operations"
+        )
+
+    add_user = add_delta = delta = reconstruct = _unsupported
+    to_bytes = size_report = _unsupported
+
+
+class ForestServer:
+    """Session-level serving facade: plan/execute IR over one store."""
+
+    def __init__(
+        self,
+        store: ForestStore,
+        plan_cache_size: int = 64,
+        interpret: bool | None = None,
+    ) -> None:
+        self.store = store
+        self.plan_cache = PlanCache(plan_cache_size)
+        self.interpret = interpret
+        self.engine_counts: Counter[str] = Counter()
+
+    @classmethod
+    def from_forest(
+        cls,
+        forest,
+        user_id: str = "forest",
+        tile_cache_trees: int = 4096,
+        arena_capacity_trees: int = 16384,
+        **kwargs,
+    ) -> "ForestServer":
+        """One-user session over a single forest: accepts a plain
+        ``Forest`` (compressed on the way in) or an already-compressed
+        ``CompressedForest`` — serving always runs from the compressed
+        format (paper §5)."""
+        from ..core.forest_codec import compress_forest
+        from ..core.tree import Forest
+
+        comp = compress_forest(forest) if isinstance(forest, Forest) \
+            else forest
+        store = SingleForestStore(
+            comp, user_id,
+            tile_cache_trees=tile_cache_trees,
+            arena_capacity_trees=arena_capacity_trees,
+        )
+        return cls(store, **kwargs)
+
+    # ---------------- plan ------------------------------------------------
+    def plan(
+        self,
+        requests: Sequence[Request],
+        engine: str | None = None,
+        block_trees: int | None = None,
+        block_obs: int | None = None,
+    ) -> ServePlan:
+        """Compile a request batch into a ``ServePlan``.  Each request is
+        ``(user_id, rows)`` where ``rows`` is the (n, d) row block or just
+        its row COUNT — plans depend only on the batch signature, so they
+        can be built (and cached) without the data.  Memoized across
+        batches; invalidated when the store registry changes."""
+        request_users = tuple(u for u, _ in requests)
+        row_counts = tuple(
+            int(x) if isinstance(x, (int, np.integer)) else len(x)
+            for _, x in requests
+        )
+        key = (
+            tuple(zip(request_users, row_counts)),
+            engine, block_trees, block_obs,
+        )
+        version = getattr(self.store, "version", 0)
+        plan = self.plan_cache.get_plan(key, version)
+        if plan is None:
+            plan = build_plan(
+                self.store, request_users, row_counts,
+                engine=engine, block_trees=block_trees, block_obs=block_obs,
+            )
+            self.plan_cache.put_plan(key, version, plan)
+        return plan
+
+    # ---------------- execute ---------------------------------------------
+    def execute(
+        self,
+        plan: ServePlan,
+        X: Sequence[np.ndarray],
+        interpret: bool | None = None,
+    ) -> list[np.ndarray]:
+        """Run pack -> gather -> kernel -> finalize for one row batch under
+        a plan.  ``X`` holds one (n_i, d) int32 row block per request, in
+        plan order.  Returns one prediction array per request (majority
+        vote / ensemble mean), matching per-user ``predict_compressed``
+        (vote counts are integer-exact; the regression mean accumulates in
+        float32 on device)."""
+        if len(X) != len(plan.row_counts):
+            raise ValueError(
+                f"plan covers {len(plan.row_counts)} requests, "
+                f"got {len(X)} row blocks"
+            )
+        for i, (x, n) in enumerate(zip(X, plan.row_counts)):
+            if len(x) != n:
+                raise ValueError(
+                    f"request {i}: plan expects {n} rows, got {len(x)}"
+                )
+        if getattr(self.store, "version", 0) != plan.store_version:
+            raise ValueError(
+                "stale plan: the store registry changed since it was "
+                "built — call plan() again"
+            )
+        if not plan.request_users:
+            return []
+        if plan.n_rows == 0:
+            return [np.zeros(len(x), np.float64) for x in X]
+        from .pack import concat_rows
+
+        xb = concat_rows(X)
+        if interpret is None:
+            interpret = self.interpret
+        name = plan.engine.name
+        self.engine_counts[name] += 1
+        if name == "simple":
+            total = engines.run_simple(self.store, plan, xb, interpret)
+        else:
+            pack = self._gathered_pack(plan)
+            run = (
+                engines.run_pipelined if name == "pipelined"
+                else engines.run_sharded
+            )
+            total = run(self.store, plan, pack, xb, interpret)
+        return self._finalize(plan, total)
+
+    def _gathered_pack(self, plan: ServePlan):
+        """Cross-batch gather memoization: reuse the arena-gathered pack
+        for this plan signature unless the arena changed underneath it."""
+        arena = self.store.arena
+        version = getattr(self.store, "version", 0)
+        pack = self.plan_cache.get_pack(
+            plan.signature, version, arena.epoch
+        )
+        if pack is not None:
+            # keep the eviction policy honest: a served-from-cache batch
+            # must still count as an access for its users' runs
+            arena.touch_users(plan.users)
+            return pack
+        build = (
+            engines.build_pipelined_pack if plan.engine.name == "pipelined"
+            else engines.build_sharded_pack
+        )
+        pack = build(self.store, plan)
+        # read the epoch AFTER building: cold admissions inside the gather
+        # bump it, and the entry must be valid for the arena as-left
+        self.plan_cache.put_pack(
+            plan.signature, version, arena.epoch, pack
+        )
+        return pack
+
+    def _finalize(self, plan: ServePlan, total: np.ndarray):
+        task = self.store.shared.task
+        out: list[np.ndarray] = []
+        for user_id, sl in zip(plan.request_users, plan.row_slices):
+            if task == "classification":
+                out.append(total[sl].argmax(-1).astype(np.float64))
+            else:
+                out.append(
+                    total[sl].astype(np.float64)
+                    / max(self.store.n_trees(user_id), 1)
+                )
+        return out
+
+    # ---------------- conveniences ----------------------------------------
+    def serve(
+        self,
+        requests: Sequence[Request],
+        engine: str | None = None,
+        block_trees: int | None = None,
+        block_obs: int | None = None,
+        interpret: bool | None = None,
+    ) -> list[np.ndarray]:
+        """plan + execute in one call (what the deprecated shims route
+        through)."""
+        if not requests:
+            return []
+        plan = self.plan(
+            requests, engine=engine,
+            block_trees=block_trees, block_obs=block_obs,
+        )
+        return self.execute(
+            plan, [x for _, x in requests], interpret=interpret
+        )
+
+    def predict(
+        self, x_binned: np.ndarray, user_id: str | None = None, **kwargs
+    ) -> np.ndarray:
+        """Single-user convenience: one request, one prediction array.
+        ``user_id`` defaults to the sole user of a one-user session."""
+        if user_id is None:
+            users = self.store.user_ids
+            if len(users) != 1:
+                raise ValueError(
+                    f"store has {len(users)} users; pass user_id"
+                )
+            user_id = users[0]
+        x = np.ascontiguousarray(x_binned, np.int32)
+        return self.serve([(user_id, x)], **kwargs)[0]
+
+    def stats(self) -> dict:
+        """One dict for admission-control dashboards: arena occupancy,
+        tile-cache per-user hit rates, plan-cache hit/miss counts, engine
+        usage, and the store's lossy report when quantization is on."""
+        arena = self.store.arena
+        return {
+            "engine_counts": dict(self.engine_counts),
+            "plan_cache": self.plan_cache.stats(),
+            "tile_cache": self.store.cache.stats(),
+            "arena": arena.stats() if arena is not None else None,
+            "lossy": getattr(self.store, "lossy", None),
+        }

@@ -24,6 +24,11 @@ the minimum-priority non-pinned run is evicted first, and the clock
 advances to the evicted priority — deep users (expensive to re-decode and
 re-upload) outlive shallow ones at equal recency, and equal costs reduce
 to plain LRU.
+
+Every structural change (admission, eviction/compaction, width growth,
+invalidation) bumps a monotonic ``epoch`` — the validity token the serving
+session's ``PlanCache`` checks before reusing a memoized cross-batch
+gather, so a cached pack can never be served stale.
 """
 from __future__ import annotations
 
@@ -85,6 +90,7 @@ class TileArena:
         self.admissions = 0
         self.evictions = 0
         self.gathers = 0
+        self.epoch = 0  # bumped on any structural change (see module doc)
 
     # ---------------- bookkeeping -----------------------------------------
     def __contains__(self, user_id: str) -> bool:
@@ -102,7 +108,17 @@ class TileArena:
             "admissions": self.admissions,
             "evictions": self.evictions,
             "gathers": self.gathers,
+            "epoch": self.epoch,
         }
+
+    def touch_users(self, users: Sequence[str]) -> None:
+        """Record an access for resident runs WITHOUT gathering — a batch
+        served from a memoized cross-batch pack must still refresh its
+        users' eviction priorities."""
+        for user_id in users:
+            run = self._runs.get(user_id)
+            if run is not None:
+                self._touch(run)
 
     def invalidate(self, user_id: str) -> None:
         if user_id in self._runs:
@@ -120,6 +136,7 @@ class TileArena:
         the one deep user must not inflate every later batch forever."""
         import jax.numpy as jnp
 
+        self.epoch += 1
         if not self._runs:
             self._code = self._fit = None
             self.h = 0
@@ -209,13 +226,14 @@ class TileArena:
         for _, code, _, max_depth in fused:
             self._grow_width(code.shape[1], max_depth)
 
-        def to_width(a: np.ndarray) -> np.ndarray:
-            if a.shape[1] == self.h:
-                return a
-            return np.pad(a, ((0, 0), (0, self.h - a.shape[1])))
+        from ..serving.pack import pad_heap_width  # canonical pad helper
 
-        code_rows = np.concatenate([to_width(c) for _, c, _, _ in fused])
-        fit_rows = np.concatenate([to_width(f) for _, _, f, _ in fused])
+        code_rows = np.concatenate(
+            [pad_heap_width(c, self.h) for _, c, _, _ in fused]
+        )
+        fit_rows = np.concatenate(
+            [pad_heap_width(f, self.h) for _, _, f, _ in fused]
+        )
         start = 0 if self._code is None else int(self._code.shape[0])
         if self._code is None:
             self._code = jnp.asarray(code_rows)
@@ -234,6 +252,7 @@ class TileArena:
             )
             start += t_u
             self.admissions += 1
+        self.epoch += 1
 
     def admit(
         self, user_id: str, tiles: Sequence[Tile], max_depth: int,

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import io
 import struct
+import zlib
 from collections import OrderedDict
 from typing import Iterable, Sequence
 
@@ -34,6 +35,28 @@ from .policy import GreedyDualClock, decode_cost
 _MAGIC = b"RFT1"
 
 Tile = tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+
+def make_schema_arena(
+    n_features: int,
+    n_bins_per_feature: np.ndarray,
+    capacity_trees: int = 16384,
+):
+    """Device tile arena for a schema, or ``None`` when the schema's fused
+    code word would overflow 2**24 (serving then falls back to
+    ``engine="simple"``).  Shared by ``ForestStore`` and the single-forest
+    serving session."""
+    from ..kernels.tree_predict.tree_predict import fused_threshold_base
+    from .arena import TileArena
+
+    try:
+        return TileArena(
+            n_features,
+            fused_threshold_base(int(np.max(n_bins_per_feature)) - 1),
+            capacity_trees=capacity_trees,
+        )
+    except ValueError:
+        return None
 
 
 class TileCache:
@@ -154,22 +177,18 @@ class ForestStore:
         self._hydrated: dict[str, CompressedForest] = {}
         self._tile_counts: dict[tuple, int] = {}
         self.cache = TileCache(tile_cache_trees)
+        # registry version: bumped on every (re-)registration so serving
+        # sessions can invalidate memoized plans built against old deltas
+        self.version = 0
+        # store-level lossy report (set by build_store(lossy=...))
+        self.lossy: dict | None = None
         # device-resident fused-tile arena for the pipelined serving path;
         # None when the schema's fused code word would overflow 2**24 (the
         # serving driver then falls back to engine="simple")
-        from ..kernels.tree_predict.tree_predict import fused_threshold_base
-        from .arena import TileArena
-
-        try:
-            self.arena: TileArena | None = TileArena(
-                shared.n_features,
-                fused_threshold_base(
-                    int(np.max(shared.n_bins_per_feature)) - 1
-                ),
-                capacity_trees=arena_capacity_trees,
-            )
-        except ValueError:
-            self.arena = None
+        self.arena = make_schema_arena(
+            shared.n_features, shared.n_bins_per_feature,
+            arena_capacity_trees,
+        )
 
     # ---------------- registry --------------------------------------------
     @property
@@ -189,6 +208,7 @@ class ForestStore:
 
     def add_delta(self, user_id: str, delta: UserDelta) -> None:
         self._deltas[user_id] = delta
+        self.version += 1
         self._hydrated.pop(user_id, None)
         self._tile_counts = {
             k: v for k, v in self._tile_counts.items() if k[0] != user_id
@@ -235,7 +255,7 @@ class ForestStore:
             # must not inflate the hit stats
             if all(k in self.cache for k in keys):
                 return [self.cache.get(k) for k in keys]  # type: ignore[misc]
-        from ..launch.serve_forest import iter_heap_tiles
+        from ..serving.pack import iter_heap_tiles
 
         tiles = list(iter_heap_tiles(self.hydrate(user_id), block_trees))
         self.cache.record_decode_misses(user_id, len(tiles))
@@ -294,6 +314,7 @@ class ForestStore:
             "user_delta_bytes_total": sum(per_user.values()),
             "total_bytes": shared_bytes + sum(per_user.values()),
             "per_user_bytes": per_user,
+            "lossy": self.lossy,
         }
 
     def to_bytes(self) -> bytes:
@@ -321,6 +342,53 @@ class ForestStore:
         return store
 
 
+def _quantize_fleet(items, lossy):
+    """Quantize every user's regression fit table onto ONE fleet-wide
+    fixed-rate grid (satellite of ISSUE 4, closing the ROADMAP "regression
+    fit quantization at the store level" item): the fleet fit-value table
+    then holds at most 2**fit_bits learned grid points, and the report
+    carries the paper's §6 distortion bound for the store stats."""
+    from ..core.lossy import quantize_fits
+
+    if any(f.meta.task != "regression" for _, f in items):
+        raise ValueError(
+            "lossy fit quantization applies to regression fleets"
+        )
+    union = np.concatenate([
+        np.asarray(f.fit_values, np.float64) for _, f in items
+    ])
+    lo, hi = float(union.min()), float(union.max())
+    step = max(hi - lo, 1e-30) / (1 << lossy.fit_bits)
+    quantized, max_err = [], 0.0
+    for user_id, forest in items:
+        # per-user dither seed: reusing one seed would draw IDENTICAL
+        # dither vectors across users, correlating quantization errors
+        # and voiding the independent-error model behind the bounds
+        user_seed = (lossy.seed + zlib.crc32(user_id.encode())) & 0x7FFFFFFF
+        qf, err = quantize_fits(
+            forest, lossy.fit_bits, dithered=lossy.dithered,
+            seed=user_seed, value_range=(lo, hi),
+        )
+        max_err = max(max_err, err)
+        quantized.append((user_id, qf))
+    grid_used = np.unique(np.concatenate([
+        np.asarray(f.fit_values, np.float64) for _, f in quantized
+    ]))
+    report = {
+        "fit_bits": lossy.fit_bits,
+        "dithered": lossy.dithered,
+        "grid_levels": 1 << lossy.fit_bits,
+        "grid_levels_used": int(grid_used.size),
+        "step": step,
+        # §6 closed-form bounds: |error| <= step/2 (step with dither),
+        # per-value quantization variance step^2 / 12
+        "max_error_bound": step * (1.0 if lossy.dithered else 0.5),
+        "max_abs_error": max_err,
+        "distortion_bound": step * step / 12.0,
+    }
+    return quantized, report
+
+
 def build_store(
     forests: dict[str, Forest] | Sequence[tuple[str, Forest]],
     k_max: int = 16,
@@ -329,13 +397,26 @@ def build_store(
     chunk_size: int = 65536,
     tile_cache_trees: int = 4096,
     arena_capacity_trees: int = 16384,
+    lossy: "LossyConfig | None" = None,
 ) -> ForestStore:
     """Build a multi-tenant store from a fleet: fleet-scale Bregman
-    clustering for the shared codebooks, then one delta per user."""
+    clustering for the shared codebooks, then one delta per user.
+
+    ``lossy`` (a ``core.lossy.LossyConfig``) turns the fleet fit table
+    into a learned fixed-rate grid: every regression user's fits are
+    quantized onto one fleet-wide 2**fit_bits-level grid BEFORE delta
+    encoding, so the shared value table shrinks to at most ``2**fit_bits``
+    entries and every existing lossless path (delta encode, hydrate,
+    serve) applies unchanged — "lossy = preprocess, then lossless" (paper
+    §7).  The measured max error and the §6 distortion bound land in
+    ``store.lossy`` / ``size_report()``."""
     items: Iterable[tuple[str, Forest]] = (
         forests.items() if isinstance(forests, dict) else forests
     )
     items = list(items)
+    lossy_report = None
+    if lossy is not None:
+        items, lossy_report = _quantize_fleet(items, lossy)
     shared = build_shared_codebook(
         [f for _, f in items], k_max=k_max, seed=seed,
         engine=engine, chunk_size=chunk_size,
@@ -346,4 +427,5 @@ def build_store(
     )
     for user_id, forest in items:
         store.add_user(user_id, forest, seed=seed)
+    store.lossy = lossy_report
     return store

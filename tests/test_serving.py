@@ -1,0 +1,376 @@
+"""ISSUE 4: unified serving session API — plan/execute IR, cross-batch
+plan cache (+ invalidation), deprecated shim parity, lossy store wiring,
+session stats."""
+import numpy as np
+import pytest
+
+from conftest import random_forest
+from repro.core.forest_codec import compress_forest
+from repro.core.compressed_predict import predict_compressed
+from repro.core.lossy import LossyConfig
+from repro.serving import ForestServer
+from repro.store import build_store, make_synthetic_fleet
+
+
+def small_fleet(task="classification", n_users=6, seed=0):
+    return make_synthetic_fleet(
+        n_users, task=task, n_trees=(4, 8), max_depth=4, seed=seed
+    )
+
+
+def fleet_requests(store, rng, n_requests=6, rows=20):
+    users = store.user_ids
+    d = store.shared.n_features
+    return [
+        (users[i % len(users)], rng.integers(0, 12, (rows, d)).astype(np.int32))
+        for i in range(n_requests)
+    ]
+
+
+def assert_matches_store(store, requests, preds, task):
+    for (u, x), p in zip(requests, preds):
+        ref = store.predict(u, x)
+        if task == "classification":
+            assert np.array_equal(p, ref)
+        else:
+            np.testing.assert_allclose(p, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+class TestPlanIR:
+    def test_plan_fields_and_signature(self, rng):
+        store = build_store(small_fleet(n_users=4))
+        server = ForestServer(store)
+        u = store.user_ids
+        requests = [(u[1], rng.integers(0, 12, (9, 8)).astype(np.int32)),
+                    (u[0], rng.integers(0, 12, (5, 8)).astype(np.int32)),
+                    (u[1], rng.integers(0, 12, (3, 8)).astype(np.int32))]
+        plan = server.plan(requests)
+        assert plan.users == (u[1], u[0])  # first-appearance order
+        assert plan.row_counts == (9, 5, 3)
+        assert plan.n_rows == 17
+        assert plan.row_slices == (slice(0, 9), slice(9, 14), slice(14, 17))
+        assert plan.engine.name in ("simple", "pipelined", "sharded")
+        assert plan.engine.reason
+        assert plan.t_pad % plan.engine.block_trees == 0
+        hash(plan.signature)  # plans are hashable by their signature
+
+    def test_plan_from_row_counts_only(self, rng):
+        """Plans depend only on the batch signature — they can be built
+        from (user, n_rows) pairs without any row data."""
+        store = build_store(small_fleet(n_users=3))
+        server = ForestServer(store)
+        u = store.user_ids
+        x = rng.integers(0, 12, (7, 8)).astype(np.int32)
+        p1 = server.plan([(u[0], x), (u[1], x)])
+        p2 = server.plan([(u[0], 7), (u[1], 7)])
+        assert p1 is p2  # memoized: identical signatures share the plan
+
+    def test_plan_memoized_until_store_changes(self, rng):
+        fleet = small_fleet(n_users=3)
+        store = build_store(fleet)
+        server = ForestServer(store)
+        reqs = fleet_requests(store, rng, 3)
+        p1 = server.plan(reqs)
+        p2 = server.plan(reqs)
+        assert p1 is p2
+        assert server.plan_cache.plan_hits == 1
+        store.add_user(store.user_ids[0], fleet[store.user_ids[0]])
+        p3 = server.plan(reqs)
+        assert p3 is not p1  # registry changed: plan rebuilt
+        assert server.plan_cache.invalidations >= 1
+
+
+class TestEngineChoice:
+    def test_cost_model_simple_when_no_arena(self, rng):
+        store = build_store(small_fleet(n_users=3))
+        store.arena = None  # schema-incompatible store
+        server = ForestServer(store)
+        reqs = fleet_requests(store, rng, 3)
+        plan = server.plan(reqs)
+        assert plan.engine.name == "simple"
+        preds = server.execute(plan, [x for _, x in reqs])
+        assert_matches_store(store, reqs, preds, "classification")
+
+    def test_forced_engine_without_arena_raises(self, rng):
+        store = build_store(small_fleet(n_users=2))
+        store.arena = None
+        server = ForestServer(store)
+        with pytest.raises(ValueError, match="fused tile arena"):
+            server.plan(fleet_requests(store, rng, 2), engine="pipelined")
+
+    def test_unknown_engine_raises(self, rng):
+        store = build_store(small_fleet(n_users=2))
+        server = ForestServer(store)
+        with pytest.raises(ValueError, match="engine"):
+            server.plan(fleet_requests(store, rng, 2), engine="nope")
+
+    def test_estimate_shard_speedup(self):
+        from repro.kernels.tree_predict.ops import estimate_shard_speedup
+
+        # one dominant user: sharding buys ~nothing
+        assert estimate_shard_speedup(np.array([100, 1, 1]), 2) < 1.1
+        # even users split perfectly
+        assert estimate_shard_speedup(np.array([10, 10, 10, 10]), 2) == 2.0
+        assert estimate_shard_speedup(np.zeros(0, np.int64), 4) == 1.0
+
+
+class TestSessionServing:
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    @pytest.mark.parametrize("engine", ["simple", "pipelined", "sharded"])
+    def test_engines_match_per_user_predict(self, rng, task, engine):
+        store = build_store(small_fleet(task, n_users=5))
+        server = ForestServer(store)
+        reqs = fleet_requests(store, rng, 7, rows=15)
+        preds = server.serve(reqs, engine=engine)
+        assert_matches_store(store, reqs, preds, task)
+
+    def test_pack_cache_reused_for_fresh_rows(self, rng):
+        """Same user-run signature, DIFFERENT row values: the gathered
+        pack is reused but predictions follow the new rows."""
+        store = build_store(small_fleet(n_users=4))
+        server = ForestServer(store)
+        u = store.user_ids
+        reqs1 = [(u[0], rng.integers(0, 12, (11, 8)).astype(np.int32)),
+                 (u[2], rng.integers(0, 12, (6, 8)).astype(np.int32))]
+        server.serve(reqs1)
+        reqs2 = [(u[0], rng.integers(0, 12, (11, 8)).astype(np.int32)),
+                 (u[2], rng.integers(0, 12, (6, 8)).astype(np.int32))]
+        preds = server.serve(reqs2)
+        assert server.plan_cache.pack_hits >= 1
+        assert_matches_store(store, reqs2, preds, "classification")
+
+    def test_empty_and_zero_row_requests(self, rng):
+        store = build_store(small_fleet(n_users=3))
+        server = ForestServer(store)
+        assert server.serve([]) == []
+        u = store.user_ids
+        x = rng.integers(0, 12, (10, 8)).astype(np.int32)
+        empty = np.zeros((0, 8), np.int32)
+        preds = server.serve([(u[0], x), (u[1], empty), (u[2], x)])
+        assert preds[1].shape == (0,)
+        assert np.array_equal(preds[0], store.predict(u[0], x))
+        assert np.array_equal(preds[2], store.predict(u[2], x))
+
+    def test_execute_validates_rows_against_plan(self, rng):
+        store = build_store(small_fleet(n_users=2))
+        server = ForestServer(store)
+        u = store.user_ids
+        x = rng.integers(0, 12, (8, 8)).astype(np.int32)
+        plan = server.plan([(u[0], x)])
+        with pytest.raises(ValueError, match="rows"):
+            server.execute(plan, [x[:5]])
+        with pytest.raises(ValueError, match="requests"):
+            server.execute(plan, [x, x])
+
+    def test_stale_plan_rejected_after_reregistration(self, rng):
+        fleet = small_fleet(n_users=2)
+        store = build_store(fleet)
+        server = ForestServer(store)
+        u = store.user_ids
+        x = rng.integers(0, 12, (8, 8)).astype(np.int32)
+        plan = server.plan([(u[0], x)])
+        store.add_user(u[0], fleet[u[0]])
+        with pytest.raises(ValueError, match="stale"):
+            server.execute(plan, [x])
+
+
+class TestPlanCacheInvalidation:
+    def test_arena_eviction_invalidates_cached_pack(self, rng):
+        """A cached plan/pack must be invalidated (not served stale) after
+        an arena eviction touching its users."""
+        store = build_store(small_fleet(n_users=4))
+        server = ForestServer(store)
+        u = store.user_ids
+        x = rng.integers(0, 12, (9, 8)).astype(np.int32)
+        reqs = [(u[0], x), (u[1], x)]
+        server.serve(reqs)
+        epoch0 = store.arena.epoch
+        store.arena.invalidate(u[0])  # eviction: epoch bumps
+        assert store.arena.epoch > epoch0
+        preds = server.serve(reqs)  # must re-gather, not reuse
+        assert server.plan_cache.invalidations >= 1
+        assert_matches_store(store, reqs, preds, "classification")
+
+    def test_cold_admission_of_new_users_invalidates(self, rng):
+        """Admitting a different user set bumps the epoch; the original
+        batch re-gathers and still serves correctly."""
+        store = build_store(small_fleet(n_users=6))
+        server = ForestServer(store)
+        u = store.user_ids
+        x = rng.integers(0, 12, (7, 8)).astype(np.int32)
+        reqs_a = [(u[0], x), (u[1], x)]
+        server.serve(reqs_a)
+        misses0 = server.plan_cache.pack_misses
+        server.serve([(u[4], x), (u[5], x)])  # cold admissions
+        preds = server.serve(reqs_a)
+        assert server.plan_cache.pack_misses > misses0 + 1
+        assert_matches_store(store, reqs_a, preds, "classification")
+
+    def test_reregistration_serves_new_forest(self, rng):
+        fleet = small_fleet(n_users=3)
+        store = build_store(fleet)
+        server = ForestServer(store)
+        u0 = store.user_ids[0]
+        x = rng.integers(0, 12, (25, 8)).astype(np.int32)
+        server.serve([(u0, x)])
+        new_forest = small_fleet(n_users=3, seed=9)[
+            list(small_fleet(n_users=3, seed=9))[0]
+        ]
+        store.add_user(u0, new_forest)
+        preds = server.serve([(u0, x)])
+        assert np.array_equal(preds[0], store.predict(u0, x))
+
+    def test_pack_hits_on_repeated_batch(self, rng):
+        store = build_store(small_fleet(n_users=4))
+        server = ForestServer(store)
+        reqs = fleet_requests(store, rng, 4)
+        for _ in range(3):
+            server.serve(reqs)
+        stats = server.plan_cache.stats()
+        assert stats["pack_hits"] >= 2
+        assert stats["plan_hits"] >= 2
+        assert stats["pack_hit_rate"] > 0
+
+
+class TestShimParity:
+    @pytest.mark.parametrize("engine", ["simple", "pipelined", "sharded"])
+    def test_serve_store_batch_deprecated_and_bit_exact(self, rng, engine):
+        from repro.launch.serve_store import serve_store_batch
+
+        store = build_store(small_fleet(n_users=4))
+        reqs = fleet_requests(store, rng, 5)
+        server = ForestServer(store)
+        want = server.serve(reqs, engine=engine)
+        with pytest.warns(DeprecationWarning, match="ForestServer"):
+            got = serve_store_batch(store, reqs, engine=engine)
+        for a, b in zip(want, got):
+            assert np.array_equal(a, b)  # bit-exact vs the session API
+
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    def test_serve_compressed_forest_deprecated_and_bit_exact(
+        self, rng, task
+    ):
+        from repro.launch.serve_forest import serve_compressed_forest
+
+        forest = random_forest(seed=5, n_trees=11, max_depth=5, task=task)
+        comp = compress_forest(forest)
+        x = rng.integers(0, 16, (40, 5)).astype(np.int32)
+        want = ForestServer.from_forest(comp).predict(x, block_trees=5)
+        with pytest.warns(DeprecationWarning, match="ForestServer"):
+            got = serve_compressed_forest(comp, x, block_trees=5)
+        assert np.array_equal(want, got)
+        ref = predict_compressed(comp, x)
+        if task == "classification":
+            assert np.array_equal(got, ref)
+        else:
+            np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+class TestSingleForestSession:
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    def test_from_forest_matches_predict_compressed(self, rng, task):
+        forest = random_forest(seed=2, n_trees=10, max_depth=6, task=task)
+        comp = compress_forest(forest)
+        server = ForestServer.from_forest(comp)
+        x = rng.integers(0, 16, (50, 5)).astype(np.int32)
+        got = server.predict(x)
+        ref = predict_compressed(comp, x)
+        if task == "classification":
+            assert np.array_equal(got, ref)
+        else:
+            np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+    def test_from_plain_forest_and_registry_guard(self, rng):
+        forest = random_forest(seed=4, n_trees=6, max_depth=4)
+        server = ForestServer.from_forest(forest, user_id="me")
+        x = rng.integers(0, 16, (12, 5)).astype(np.int32)
+        comp = compress_forest(forest)
+        assert np.array_equal(server.predict(x), predict_compressed(comp, x))
+        assert server.store.user_ids == ["me"]
+        with pytest.raises(KeyError):
+            server.store.n_trees("someone-else")
+        with pytest.raises(TypeError):
+            server.store.add_user("x", forest)
+
+
+class TestLossyStore:
+    def test_fleet_grid_quantization_and_bounds(self, rng):
+        fleet = small_fleet("regression", n_users=5)
+        bits = 5
+        store = build_store(fleet, lossy=LossyConfig(fit_bits=bits))
+        rep = store.size_report()["lossy"]
+        assert rep["fit_bits"] == bits
+        assert rep["grid_levels"] == 1 << bits
+        # the fleet table IS the learned fixed-rate grid
+        assert len(store.shared.fleet_fit_values) <= 1 << bits
+        # measured error within the closed-form §6 bound
+        assert rep["max_abs_error"] <= rep["max_error_bound"] + 1e-12
+        assert rep["distortion_bound"] == pytest.approx(
+            rep["step"] ** 2 / 12.0
+        )
+        # quantized store still serves (losslessly w.r.t. its own grid)
+        server = ForestServer(store)
+        reqs = fleet_requests(store, rng, 3)
+        preds = server.serve(reqs)
+        assert_matches_store(store, reqs, preds, "regression")
+        assert server.stats()["lossy"] == rep
+
+    def test_lossy_shrinks_fit_table_vs_lossless(self):
+        fleet = small_fleet("regression", n_users=5)
+        lossless = build_store(fleet)
+        lossy = build_store(fleet, lossy=LossyConfig(fit_bits=4))
+        assert (
+            len(lossy.shared.fleet_fit_values)
+            < len(lossless.shared.fleet_fit_values)
+        )
+        assert lossless.size_report()["lossy"] is None
+
+    def test_classification_fleet_rejected(self):
+        with pytest.raises(ValueError, match="regression"):
+            build_store(small_fleet(n_users=2), lossy=LossyConfig(4))
+
+
+class TestStatsAndPack:
+    def test_server_stats_aggregate(self, rng):
+        store = build_store(small_fleet(n_users=4))
+        server = ForestServer(store)
+        reqs = fleet_requests(store, rng, 4)
+        server.serve(reqs)
+        server.serve(reqs)
+        stats = server.stats()
+        assert set(stats) == {
+            "engine_counts", "plan_cache", "tile_cache", "arena", "lossy",
+        }
+        assert sum(stats["engine_counts"].values()) == 2
+        assert stats["plan_cache"]["pack_hit_rate"] > 0
+        assert stats["arena"]["resident_users"] > 0
+        assert "per_user" in stats["tile_cache"]
+
+    def test_canonical_pad_helper(self):
+        from repro.launch.serve_store import _pad_heap_width
+        from repro.serving.pack import pad_heap_width
+
+        assert _pad_heap_width is pad_heap_width  # ONE implementation
+        a = np.arange(6, dtype=np.int32).reshape(2, 3)
+        assert pad_heap_width(a, 3) is a  # width match: no copy
+        out = pad_heap_width(a, 5)
+        assert out.shape == (2, 5)
+        assert np.array_equal(out[:, :3], a) and not out[:, 3:].any()
+        with pytest.raises(ValueError, match="shrink"):
+            pad_heap_width(a, 2)
+
+    def test_arena_epoch_tracks_structural_changes(self, rng):
+        store = build_store(small_fleet(n_users=3))
+        server = ForestServer(store)
+        arena = store.arena
+        e0 = arena.epoch
+        server.serve(fleet_requests(store, rng, 2))  # admissions
+        e1 = arena.epoch
+        assert e1 > e0
+        server.serve(fleet_requests(store, rng, 2))  # warm: no change
+        assert arena.epoch == e1
