@@ -1,0 +1,203 @@
+"""Codebook lifecycle benchmark (ISSUE 5 acceptance measurement).
+
+On a DRIFTED 100-user fleet (30% of users onboarded after the fleet
+codebook froze, splitting on features and carrying fit values the initial
+population never produced), both tasks:
+
+* drift: the ``drift_report`` monitor before/after (fallback user
+  fraction, fallback byte overhead) — the signal that triggers a
+  recluster;
+* ``recluster(mode="extend")``: migration wall time, relabeled vs
+  re-encoded user counts, store bytes before/after (acceptance: bytes
+  after <= before), and EXPLICIT per-user bit-exact reconstruction
+  against the pre-migration forests;
+* warm-serving continuity: a ``ForestServer`` session is warmed on a
+  clean-user batch and a late-user batch, the migration runs mid-session,
+  and both batches are served again — the clean batch must HIT its cached
+  pack (its users migrated by relabeling; partial invalidation keeps
+  their packs), the late batch must re-gather, and every post-migration
+  prediction must match per-user ``predict_compressed``;
+* ``recluster(mode="full")`` on an identical second store, for the
+  rebuild-vs-extend byte/time tradeoff (full mode re-encodes everyone,
+  so the warm session loses every pack — measured, not asserted).
+
+Writes machine-readable results to BENCH_recluster.json (repo root).
+
+    PYTHONPATH=src python benchmarks/recluster_bench.py [--quick] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.serving import ForestServer
+from repro.store import (
+    build_store,
+    drift_report,
+    make_drifted_fleet,
+    recluster,
+)
+
+
+def _drift_summary(rep: dict) -> dict:
+    return {
+        k: rep[k]
+        for k in (
+            "codebook_generation", "n_fallback_users",
+            "fallback_user_fraction", "fallback_bytes",
+            "fallback_overhead_fraction", "recommend_recluster",
+        )
+    }
+
+
+def _parity(store, requests, preds, task) -> int:
+    exact = 0
+    for (u, x), p in zip(requests, preds):
+        ref = store.predict(u, x)
+        if task == "classification":
+            exact += int(np.array_equal(p, ref))
+        else:
+            exact += int(np.allclose(p, ref, rtol=1e-5, atol=1e-5))
+    return exact
+
+
+def _onboarded_store(initial, late):
+    store = build_store(initial)
+    t0 = time.time()
+    for u, f in late.items():
+        store.add_user(u, f)
+    return store, time.time() - t0
+
+
+def bench_fleet(
+    task: str,
+    n_users: int,
+    late_fraction: float,
+    rows_per_request: int,
+    seed: int = 0,
+) -> dict:
+    initial, late = make_drifted_fleet(
+        n_users, late_fraction=late_fraction, task=task, seed=seed,
+    )
+    fleet = {**initial, **late}
+    store, t_onboard = _onboarded_store(initial, late)
+    late_ids = sorted(late)
+    clean_ids = sorted(initial)
+
+    drift_before = drift_report(store)
+    bytes_before = store.size_report()["total_bytes"]
+
+    # ---- warm a serving session across the coming migration --------------
+    rng = np.random.default_rng(seed)
+    d = store.shared.n_features
+    n_bins = int(store.shared.n_bins_per_feature[0])
+
+    def batch(users):
+        return [
+            (u, rng.integers(0, n_bins, (rows_per_request, d)).astype(
+                np.int32
+            ))
+            for u in users
+        ]
+
+    server = ForestServer(store)
+    reqs_clean = batch(clean_ids[:4])
+    reqs_late = batch(late_ids[:4])
+    for _ in range(2):  # second pass hits the pack cache: session is warm
+        server.serve(reqs_clean)
+        server.serve(reqs_late)
+    hits0 = server.plan_cache.pack_hits
+    misses0 = server.plan_cache.pack_misses
+
+    # ---- the lifecycle operation -----------------------------------------
+    res = recluster(store, mode="extend")
+    bit_exact = all(
+        store.reconstruct(u).equals(fleet[u]) for u in store.user_ids
+    )
+    drift_after = drift_report(store)
+    bytes_after = store.size_report()["total_bytes"]
+
+    # ---- warm-serving continuity across the migration --------------------
+    preds_clean = server.serve(reqs_clean)
+    clean_pack_hit = server.plan_cache.pack_hits == hits0 + 1
+    preds_late = server.serve(reqs_late)
+    migrated_pack_regathered = (
+        server.plan_cache.pack_misses == misses0 + 1
+    )
+    parity_exact = _parity(
+        store, reqs_clean + reqs_late, preds_clean + preds_late, task
+    )
+
+    # ---- full rebuild on an identical store, for the tradeoff ------------
+    store_full, _ = _onboarded_store(initial, late)
+    res_full = recluster(store_full, mode="full")
+    bit_exact_full = all(
+        store_full.reconstruct(u).equals(fleet[u])
+        for u in store_full.user_ids
+    )
+
+    return {
+        "task": task,
+        "n_users": n_users,
+        "late_fraction": late_fraction,
+        "onboard_time_s": round(t_onboard, 3),
+        "drift_before": _drift_summary(drift_before),
+        "drift_after": _drift_summary(drift_after),
+        "extend": {
+            "wall_time_s": round(res.wall_time_s, 3),
+            "n_relabeled": res.n_relabeled,
+            "n_reencoded": res.n_reencoded,
+            "bytes_before": bytes_before,
+            "bytes_after": bytes_after,
+            "bytes_ratio": round(bytes_after / bytes_before, 4),
+            "bit_exact_all_users": bit_exact,
+        },
+        "full": {
+            "wall_time_s": round(res_full.wall_time_s, 3),
+            "n_relabeled": res_full.n_relabeled,
+            "n_reencoded": res_full.n_reencoded,
+            "bytes_after": res_full.bytes_after,
+            "bytes_ratio": round(res_full.bytes_after / bytes_before, 4),
+            "bit_exact_all_users": bit_exact_full,
+        },
+        "warm_crossing": {
+            "clean_pack_hit": clean_pack_hit,
+            "migrated_pack_regathered": migrated_pack_regathered,
+            "pack_invalidations": server.plan_cache.invalidations,
+            "parity_exact_requests": parity_exact,
+            "n_requests": len(reqs_clean) + len(reqs_late),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small fleet + classification only (CI smoke)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    n_users = 20 if args.quick else 100
+    tasks = ["classification"] if args.quick else [
+        "classification", "regression"
+    ]
+    fleets = [
+        bench_fleet(task, n_users, late_fraction=0.3, rows_per_request=64)
+        for task in tasks
+    ]
+    results = {"quick": args.quick, "fleets": fleets}
+    out_path = pathlib.Path(
+        args.out
+        or pathlib.Path(__file__).resolve().parent.parent
+        / "BENCH_recluster.json"
+    )
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(json.dumps(results, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,18 @@
 
 One length-prefixed array/bytes wire format shared by every serializer
 (dtype-tag + shape + raw bytes): the inline ``CompressedForest`` (RFC1) and
-the store formats (RFS1/RFD1/RFT1) must never diverge, so both call here.
+the store formats (RFS1/RFD1/RFT1/RFM1) must never diverge, so both call
+here.  The normative byte-level description of every frame built from
+these primitives lives in ``docs/format.md``.
+
+Primitives:
+
+* ``write_arr`` / ``read_arr`` — the ARR record: dtype tag + shape + raw
+  little-endian bytes;
+* ``write_bytes`` / ``read_bytes`` — the BYTES record: u32 length prefix +
+  raw bytes;
+* ``write_u16`` / ``read_u16``, ``write_u32`` / ``read_u32`` — bare
+  little-endian scalars (codebook generations, element counts).
 """
 from __future__ import annotations
 
@@ -12,7 +23,30 @@ import struct
 import numpy as np
 
 
+def write_u16(out: io.BytesIO, v: int) -> None:
+    """Write one little-endian uint16 scalar."""
+    out.write(struct.pack("<H", v))
+
+
+def read_u16(inp: io.BytesIO) -> int:
+    """Read one little-endian uint16 scalar."""
+    return struct.unpack("<H", inp.read(2))[0]
+
+
+def write_u32(out: io.BytesIO, v: int) -> None:
+    """Write one little-endian uint32 scalar."""
+    out.write(struct.pack("<I", v))
+
+
+def read_u32(inp: io.BytesIO) -> int:
+    """Read one little-endian uint32 scalar."""
+    return struct.unpack("<I", inp.read(4))[0]
+
+
 def write_arr(out: io.BytesIO, a: np.ndarray) -> None:
+    """Write one ARR record: u8 dtype-tag length, the numpy dtype string
+    (e.g. ``<i4``), u8 ndim, u32 total element count, u32 per-axis sizes,
+    then the raw little-endian element bytes."""
     a = np.ascontiguousarray(a)
     dt = a.dtype.str.encode()
     out.write(struct.pack("<B", len(dt)))
@@ -24,6 +58,7 @@ def write_arr(out: io.BytesIO, a: np.ndarray) -> None:
 
 
 def read_arr(inp: io.BytesIO) -> np.ndarray:
+    """Read one ARR record written by ``write_arr``."""
     (dl,) = struct.unpack("<B", inp.read(1))
     dt = np.dtype(inp.read(dl).decode())
     ndim, size = struct.unpack("<BI", inp.read(5))
@@ -32,10 +67,12 @@ def read_arr(inp: io.BytesIO) -> np.ndarray:
 
 
 def write_bytes(out: io.BytesIO, b: bytes) -> None:
+    """Write one BYTES record: u32 length prefix + raw bytes."""
     out.write(struct.pack("<I", len(b)))
     out.write(b)
 
 
 def read_bytes(inp: io.BytesIO) -> bytes:
+    """Read one BYTES record written by ``write_bytes``."""
     (n,) = struct.unpack("<I", inp.read(4))
     return inp.read(n)

@@ -1,17 +1,23 @@
-"""Cross-batch plan/pack memoization (ISSUE 4 tentpole + the PR 3
-"cross-batch gather memoization" ROADMAP item).
+"""Cross-batch plan/pack memoization with PER-USER invalidation (ISSUE 4
+tentpole, refined by ISSUE 5's partial invalidation — the ROADMAP
+"plan-cache partial invalidation" item).
 
 Two LRU maps, both keyed by the batch's user-run signature
-(``ServePlan.signature``):
+(``ServePlan.signature``) and validated by a TOKEN the serving session
+derives from the users the entry covers:
 
 * PLANS — the host-side IR (grouping, sort permutation, engine choice).
-  Valid while the store registry is unchanged (``store.version``).
+  Token: the tuple of the store's PER-USER registration versions for the
+  batch's users.  Re-registering (or migrating) one user invalidates only
+  plans containing that user.
 * PACKS — the arena-gathered device arrays + chunk ranges a plan resolves
-  to at execute time.  Valid while BOTH the registry version and the
-  arena ``epoch`` are unchanged: any admission, eviction, compaction, or
-  width growth bumps the epoch, so a cached gather can never be served
-  stale (and evicted users' tiles don't survive as hidden copies, which
-  would defeat the arena's capacity bound).
+  to at execute time.  Token: per user, the pair (store user version,
+  arena run-admission token).  A pack survives exactly while every one of
+  its users is still resident with unchanged content — so a codebook
+  migration or arena eviction touching user A leaves user B's warm packs
+  alone, while evicted users' gathered device copies are still swept
+  eagerly (``sweep_packs``) so they cannot survive as hidden copies and
+  defeat the arena's capacity bound.
 
 A hot repeated batch therefore skips grouping, the argsort, the device
 index-gather, and the chunk-range computation — it pays only the row
@@ -20,19 +26,22 @@ upload, the kernel, and the finalize.
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Any
+from typing import Any, Callable
 
 
 class PlanCache:
-    """LRU memo of ServePlans and their gathered packs, with version/epoch
-    invalidation and hit/miss accounting for admission-control dashboards."""
+    """LRU memo of ServePlans and their gathered packs, with per-user
+    token invalidation and hit/miss accounting for admission-control
+    dashboards."""
 
     def __init__(self, capacity: int = 64) -> None:
         self.capacity = capacity
-        # signature -> (store_version, plan)
-        self._plans: OrderedDict[tuple, tuple[int, Any]] = OrderedDict()
-        # signature -> (store_version, arena_epoch, pack)
-        self._packs: OrderedDict[tuple, tuple[int, int, Any]] = OrderedDict()
+        # signature -> (token, plan)
+        self._plans: OrderedDict[tuple, tuple[tuple, Any]] = OrderedDict()
+        # signature -> (users, token, pack)
+        self._packs: OrderedDict[
+            tuple, tuple[tuple, tuple, Any]
+        ] = OrderedDict()
         self.plan_hits = 0
         self.plan_misses = 0
         self.pack_hits = 0
@@ -43,9 +52,12 @@ class PlanCache:
         return len(self._packs)
 
     # ---------------- plans -----------------------------------------------
-    def get_plan(self, key: tuple, store_version: int):
+    def get_plan(self, key: tuple, token: tuple):
+        """The memoized plan under ``key``, provided its per-user token
+        still matches; a mismatch drops the entry (counted as an
+        invalidation) and misses."""
         entry = self._plans.get(key)
-        if entry is not None and entry[0] != store_version:
+        if entry is not None and entry[0] != token:
             del self._plans[key]
             self.invalidations += 1
             entry = None
@@ -56,31 +68,40 @@ class PlanCache:
         self.plan_hits += 1
         return entry[1]
 
-    def put_plan(self, key: tuple, store_version: int, plan) -> None:
-        self._plans[key] = (store_version, plan)
+    def put_plan(self, key: tuple, token: tuple, plan) -> None:
+        """Memoize ``plan`` under ``key`` with its validity ``token``."""
+        self._plans[key] = (token, plan)
         self._plans.move_to_end(key)
         while len(self._plans) > self.capacity:
             self._plans.popitem(last=False)
 
     # ---------------- gathered packs --------------------------------------
-    def _sweep_packs(self, store_version: int, arena_epoch: int) -> None:
-        """Drop EVERY pack whose validity token mismatches — all packs
-        share the one global (version, epoch) token, so after any arena
-        change the whole set is stale at once.  Sweeping eagerly (not just
-        the queried key) keeps evicted users' gathered device arrays from
+    def sweep_packs(
+        self, current_token_of: Callable[[tuple], tuple]
+    ) -> None:
+        """Drop every pack whose users' current token no longer matches
+        the one it was stored under.  Sweeping eagerly (not just the
+        queried key) keeps evicted users' gathered device arrays from
         surviving as hidden copies, which would defeat the arena's
-        capacity bound."""
+        capacity bound — but packs whose users are untouched stay put
+        (partial invalidation)."""
         stale = [
-            k for k, (v, e, _) in self._packs.items()
-            if v != store_version or e != arena_epoch
+            k for k, (users, token, _) in self._packs.items()
+            if current_token_of(users) != token
         ]
         for k in stale:
             del self._packs[k]
         self.invalidations += len(stale)
 
-    def get_pack(self, key: tuple, store_version: int, arena_epoch: int):
-        self._sweep_packs(store_version, arena_epoch)
+    def get_pack(self, key: tuple, token: tuple):
+        """The memoized gathered pack under ``key``, provided its per-user
+        token still matches (callers sweep first; the token check here
+        guards the queried entry itself)."""
         entry = self._packs.get(key)
+        if entry is not None and entry[1] != token:
+            del self._packs[key]
+            self.invalidations += 1
+            entry = None
         if entry is None:
             self.pack_misses += 1
             return None
@@ -89,20 +110,23 @@ class PlanCache:
         return entry[2]
 
     def put_pack(
-        self, key: tuple, store_version: int, arena_epoch: int, pack
+        self, key: tuple, users: tuple, token: tuple, pack
     ) -> None:
-        self._sweep_packs(store_version, arena_epoch)
-        self._packs[key] = (store_version, arena_epoch, pack)
+        """Memoize a gathered ``pack`` for ``users`` under ``key`` with
+        its per-user validity ``token``."""
+        self._packs[key] = (users, token, pack)
         self._packs.move_to_end(key)
         while len(self._packs) > self.capacity:
             self._packs.popitem(last=False)
 
     # ---------------- maintenance -----------------------------------------
     def clear(self) -> None:
+        """Drop every memoized plan and pack."""
         self._plans.clear()
         self._packs.clear()
 
     def stats(self) -> dict:
+        """Hit/miss/invalidation counters for dashboards."""
         plan_total = self.plan_hits + self.plan_misses
         pack_total = self.pack_hits + self.pack_misses
         return {

@@ -147,7 +147,8 @@ def run_simple(
 def build_pipelined_pack(store, plan: ServePlan) -> PipelinedPack:
     """The gather stage: ensure residency, index-gather the plan's users'
     runs, compute per-row-block chunk ranges.  Memoized by ``PlanCache``
-    keyed on the plan signature + arena epoch."""
+    keyed on the plan signature, validated per user (registry version +
+    arena run token)."""
     from ..kernels.tree_predict.tree_predict import segment_chunk_ranges
 
     bt = plan.engine.block_trees

@@ -53,7 +53,9 @@ class ServePlan:
     cross-batch ``PlanCache`` keys gathered packs by."""
 
     signature: tuple  # ((user, rows)..., engine, block_trees, block_obs)
-    store_version: int  # registry version the plan was built against
+    user_tokens: tuple[int, ...]  # per-user versions (aligned with users):
+    # the plan's validity token — only a change to one of ITS users'
+    # registrations makes it stale (partial invalidation)
     request_users: tuple[str, ...]
     row_counts: tuple[int, ...]
     users: tuple[str, ...]  # first-appearance order == segment ids
@@ -170,7 +172,7 @@ def build_plan(
     )
     return ServePlan(
         signature=signature,
-        store_version=getattr(store, "version", 0),
+        user_tokens=tuple(store.user_version(u) for u in users),
         request_users=request_users,
         row_counts=row_counts,
         users=tuple(users),

@@ -15,10 +15,13 @@ shims over this class):
 
 The session owns the store, its device ``TileArena``, the decoded
 ``TileCache``, and a ``PlanCache`` that memoizes plans AND arena-gathered
-packs across batches by the batch's user-run signature — invalidated on
-any arena admission/eviction (epoch) or registry change (version), never
-served stale.  Single-forest serving is a one-user session
-(``ForestServer.from_forest(...)``).
+packs across batches by the batch's user-run signature.  Invalidation is
+PER USER (ISSUE 5): each memoized entry carries the registry versions —
+and, for packs, the arena run-admission tokens — of exactly the users it
+covers, so re-registering, migrating, or evicting user A drops only the
+entries containing A; a warm session crossing a codebook migration keeps
+serving untouched users from cache.  Single-forest serving is a one-user
+session (``ForestServer.from_forest(...)``).
 """
 from __future__ import annotations
 
@@ -81,10 +84,12 @@ class SingleForestStore(ForestStore):
             )
 
     def n_trees(self, user_id: str) -> int:
+        """Tree count of the session's one forest."""
         self._check(user_id)
         return self._comp.n_trees
 
     def max_depth(self, user_id: str) -> int:
+        """Max tree depth of the session's one forest."""
         self._check(user_id)
         return self._comp.max_depth
 
@@ -98,8 +103,20 @@ class SingleForestStore(ForestStore):
         self._check(user_id)
         return predict_compressed(self._comp, x_binned)
 
+    def user_version(self, user_id: str) -> int:
+        """Per-user validity token (the registry never mutates here, so
+        this is the constant store version)."""
+        self._check(user_id)
+        return self.version
+
+    def drift_stats(self) -> dict | None:
+        """No fleet codebook, hence no codebook lifecycle to monitor."""
+        return None
+
     # the multi-tenant registry/serialization surface does not apply
     def _unsupported(self, *_a, **_k):
+        """Registry/serialization operation unavailable on the one-user
+        serving adapter — raises ``TypeError``."""
         raise TypeError(
             "SingleForestStore is a read-only one-user serving adapter; "
             "build a ForestStore for registry operations"
@@ -170,15 +187,34 @@ class ForestServer:
             tuple(zip(request_users, row_counts)),
             engine, block_trees, block_obs,
         )
-        version = getattr(self.store, "version", 0)
-        plan = self.plan_cache.get_plan(key, version)
+        # validity token: the PER-USER registry versions of this batch's
+        # users — re-registering or migrating user A invalidates only
+        # plans containing A (partial invalidation)
+        token = self._plan_token(request_users)
+        plan = self.plan_cache.get_plan(key, token)
         if plan is None:
             plan = build_plan(
                 self.store, request_users, row_counts,
                 engine=engine, block_trees=block_trees, block_obs=block_obs,
             )
-            self.plan_cache.put_plan(key, version, plan)
+            self.plan_cache.put_plan(key, token, plan)
         return plan
+
+    def _plan_token(self, users) -> tuple:
+        """Plan validity token: each distinct user's registry version."""
+        return tuple(
+            self.store.user_version(u) for u in dict.fromkeys(users)
+        )
+
+    def _pack_token(self, users) -> tuple:
+        """Pack validity token: each user's (registry version, arena
+        run-admission token) pair — stale as soon as any covered user is
+        re-registered, migrated with new bytes, evicted from the arena,
+        or re-admitted."""
+        arena = self.store.arena
+        return tuple(
+            (self.store.user_version(u), arena.run_token(u)) for u in users
+        )
 
     # ---------------- execute ---------------------------------------------
     def execute(
@@ -203,10 +239,10 @@ class ForestServer:
                 raise ValueError(
                     f"request {i}: plan expects {n} rows, got {len(x)}"
                 )
-        if getattr(self.store, "version", 0) != plan.store_version:
+        if self._plan_token(plan.users) != plan.user_tokens:
             raise ValueError(
-                "stale plan: the store registry changed since it was "
-                "built — call plan() again"
+                "stale plan: one of the plan's users was re-registered "
+                "or migrated since it was built — call plan() again"
             )
         if not plan.request_users:
             return []
@@ -232,11 +268,17 @@ class ForestServer:
 
     def _gathered_pack(self, plan: ServePlan):
         """Cross-batch gather memoization: reuse the arena-gathered pack
-        for this plan signature unless the arena changed underneath it."""
+        for this plan signature unless one of ITS users changed underneath
+        it (re-registration, migration, arena eviction/re-admission).
+        Unrelated admissions and evictions leave the pack alone — the
+        per-run partial invalidation a codebook migration relies on.  The
+        eager sweep still drops every pack holding an evicted user, so
+        gathered device copies never outlive the arena's capacity
+        accounting."""
         arena = self.store.arena
-        version = getattr(self.store, "version", 0)
+        self.plan_cache.sweep_packs(self._pack_token)
         pack = self.plan_cache.get_pack(
-            plan.signature, version, arena.epoch
+            plan.signature, self._pack_token(plan.users)
         )
         if pack is not None:
             # keep the eviction policy honest: a served-from-cache batch
@@ -248,10 +290,11 @@ class ForestServer:
             else engines.build_sharded_pack
         )
         pack = build(self.store, plan)
-        # read the epoch AFTER building: cold admissions inside the gather
-        # bump it, and the entry must be valid for the arena as-left
+        # token read AFTER building: cold admissions inside the gather
+        # assign run tokens, and the entry must be valid for the arena
+        # as-left
         self.plan_cache.put_pack(
-            plan.signature, version, arena.epoch, pack
+            plan.signature, plan.users, self._pack_token(plan.users), pack
         )
         return pack
 
@@ -307,12 +350,15 @@ class ForestServer:
     def stats(self) -> dict:
         """One dict for admission-control dashboards: arena occupancy,
         tile-cache per-user hit rates, plan-cache hit/miss counts, engine
-        usage, and the store's lossy report when quantization is on."""
+        usage, the store's codebook-lifecycle drift summary (generation +
+        fallback-cluster fraction — ``None`` for single-forest sessions),
+        and the store's lossy report when quantization is on."""
         arena = self.store.arena
         return {
             "engine_counts": dict(self.engine_counts),
             "plan_cache": self.plan_cache.stats(),
             "tile_cache": self.store.cache.stats(),
             "arena": arena.stats() if arena is not None else None,
+            "store": self.store.drift_stats(),
             "lossy": getattr(self.store, "lossy", None),
         }

@@ -3,19 +3,35 @@
 The paper's subscriber scenario at fleet scale: one fleet-level shared
 codebook (Bregman clustering over the UNION of all users' empirical
 models), per-user delta encoding that references shared clusters and ships
-only residual streams, an LRU-cached decode runtime, and ragged
-multi-tenant batched serving through the segment-aware Pallas kernel
-(``repro.launch.serve_store``).
+only residual streams, an LRU-cached decode runtime, a device-resident
+tile arena for the pipelined serving path, and a codebook LIFECYCLE
+(``store.lifecycle``): versioned codebook generations, a drift monitor,
+and online re-clustering that migrates user deltas bit-exactly onto a
+successor codebook.
+
+Serving goes through ``repro.serving.ForestServer``; the on-disk formats
+(RFS1/RFD1/RFT1/RFM1) are specified byte-for-byte in ``docs/format.md``
+and the subsystem architecture in ``docs/architecture.md``.
 """
 
 from .arena import TileArena
 from .codebook import SharedCodebook, SharedComponent, build_shared_codebook
 from .delta import UserDelta, encode_user_delta, hydrate, reconstruct_user
-from .fleet import make_request_batch, make_synthetic_fleet
+from .fleet import make_drifted_fleet, make_request_batch, make_synthetic_fleet
+from .lifecycle import (
+    ReclusterResult,
+    RemapTable,
+    drift_report,
+    migrate_user,
+    migrate_users,
+    recluster,
+)
 from .runtime import ForestStore, TileCache, build_store
 
 __all__ = [
     "ForestStore",
+    "ReclusterResult",
+    "RemapTable",
     "SharedCodebook",
     "SharedComponent",
     "TileArena",
@@ -23,9 +39,14 @@ __all__ = [
     "UserDelta",
     "build_shared_codebook",
     "build_store",
+    "drift_report",
     "encode_user_delta",
     "hydrate",
+    "make_drifted_fleet",
     "make_request_batch",
     "make_synthetic_fleet",
+    "migrate_user",
+    "migrate_users",
+    "recluster",
     "reconstruct_user",
 ]

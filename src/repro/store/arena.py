@@ -26,9 +26,13 @@ re-upload) outlive shallow ones at equal recency, and equal costs reduce
 to plain LRU.
 
 Every structural change (admission, eviction/compaction, width growth,
-invalidation) bumps a monotonic ``epoch`` — the validity token the serving
-session's ``PlanCache`` checks before reusing a memoized cross-batch
-gather, so a cached pack can never be served stale.
+invalidation) bumps a monotonic ``epoch`` (an observability counter for
+``stats()``).  Cache validity is finer-grained: each resident run carries
+a per-run admission ``token`` (``run_token``), and the serving session's
+``PlanCache`` validates a memoized cross-batch gather against exactly the
+tokens of the users it covers — so evicting or re-admitting one user
+invalidates only the packs containing that user, while compaction and
+width growth (which leave gathered COPIES valid) invalidate nothing.
 """
 from __future__ import annotations
 
@@ -51,10 +55,11 @@ Tile = tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
 class _Run:
     __slots__ = (
         "start", "n_trees", "cost", "priority", "last_access", "h", "depth",
+        "token",
     )
 
     def __init__(self, start, n_trees, cost, priority, last_access, h,
-                 depth):
+                 depth, token):
         self.start = start
         self.n_trees = n_trees
         self.cost = cost
@@ -62,6 +67,7 @@ class _Run:
         self.last_access = last_access
         self.h = h  # the run's OWN heap width (pre arena padding)
         self.depth = depth
+        self.token = token  # admission id: per-run validity token
 
 
 class TileArena:
@@ -96,11 +102,23 @@ class TileArena:
     def __contains__(self, user_id: str) -> bool:
         return user_id in self._runs
 
+    def run_token(self, user_id: str) -> int | None:
+        """Per-run validity token: the admission id of the user's resident
+        run, or ``None`` when the user is not resident.  A memoized
+        cross-batch gather is valid exactly while every one of its users'
+        tokens is unchanged — eviction or re-admission of one user
+        invalidates only the packs containing that user (the serving
+        session's partial invalidation), instead of the arena-wide
+        ``epoch`` sweep."""
+        run = self._runs.get(user_id)
+        return None if run is None else run.token
+
     @property
     def resident_trees(self) -> int:
         return sum(r.n_trees for r in self._runs.values())
 
     def stats(self) -> dict:
+        """Occupancy and admission/eviction/gather counters."""
         return {
             "resident_users": len(self._runs),
             "resident_trees": self.resident_trees,
@@ -121,6 +139,8 @@ class TileArena:
                 self._touch(run)
 
     def invalidate(self, user_id: str) -> None:
+        """Evict one user's resident run (delta replacement), compacting
+        the device buffers."""
         if user_id in self._runs:
             del self._runs[user_id]
             self._compact()
@@ -247,11 +267,12 @@ class TileArena:
             t_u, h_u = code.shape
             cost = decode_cost(t_u, h_u)
             prio, tick = self._gd.touch(cost)
+            self.admissions += 1
             self._runs[user_id] = _Run(
-                start, t_u, cost, prio, tick, h_u, max_depth
+                start, t_u, cost, prio, tick, h_u, max_depth,
+                token=self.admissions,
             )
             start += t_u
-            self.admissions += 1
         self.epoch += 1
 
     def admit(

@@ -68,6 +68,8 @@ class SharedComponent:
         return len(self.freqs)
 
     def coder_for(self, k: int):
+        """Instantiate cluster ``k``'s entropy coder (HuffmanCode from its
+        canonical lengths, or ArithmeticCode from its pooled counts)."""
         if self.coder == "huffman":
             return HuffmanCode(self.codebook_lengths[k])
         return ArithmeticCode(self.freqs[k])
@@ -77,23 +79,40 @@ class SharedComponent:
         code; +inf where the cluster cannot code the symbol at all.  Deltas
         pick, per model, the cluster minimizing ACTUAL coded bits — the
         store-side analogue of the KL assignment (up to Huffman integer
-        rounding), and exactly the quantity billed on disk."""
+        rounding), and exactly the quantity billed on disk.
+
+        Clusters appended by an ``extend``-mode recluster may carry tables
+        shorter than the component's (grown) alphabet — symbols past a
+        cluster's table end are simply uncodable by it (+inf)."""
         k = self.n_clusters
         cost = np.full((k, self.alphabet), np.inf)
         for c in range(k):
             if self.coder == "huffman":
                 ln = np.asarray(self.codebook_lengths[c], dtype=np.float64)
-                cost[c, ln > 0] = ln[ln > 0]
+                cost[c, : len(ln)][ln > 0] = ln[ln > 0]
             else:
                 f = np.asarray(self.freqs[c], dtype=np.float64)
                 tot = f.sum()
-                cost[c, f > 0] = -np.log2(f[f > 0] / tot)
+                cost[c, : len(f)][f > 0] = -np.log2(f[f > 0] / tot)
         return cost
 
 
 @dataclass
 class SharedCodebook:
-    """Fleet-wide schema + shared cluster codebooks for every component."""
+    """Fleet-wide schema + shared cluster codebooks for every component.
+
+    ``generation`` is the codebook's lifecycle version (v1, v2, ...): the
+    store's re-clustering operation (``store.lifecycle.recluster``) builds
+    a successor codebook with ``generation + 1`` and migrates user deltas
+    onto it; every ``UserDelta`` records the generation it references, so
+    old and new codebooks can coexist mid-migration.
+
+    ``fleet_fit_values`` (regression) is the fleet-union value table.  It
+    is SORTED within each generation's contribution but only
+    APPEND-ORDERED across generations: an ``extend``-mode recluster
+    appends newly-onboarded values after the previous generation's block,
+    so existing deltas' fit-symbol ids stay valid without re-encoding.
+    """
 
     n_features: int
     task: str  # "classification" | "regression"
@@ -105,9 +124,12 @@ class SharedCodebook:
     vars_comp: SharedComponent
     splits_comp: dict[int, SharedComponent]
     fits_comp: SharedComponent
-    fleet_fit_values: np.ndarray  # regression: sorted union of user values
+    fleet_fit_values: np.ndarray  # regression: append-ordered union table
+    generation: int = 1  # codebook lifecycle version (v1, v2, ...)
 
     def user_meta(self, n_train_obs: int) -> ForestMeta:
+        """The fleet schema as one user's ``ForestMeta`` (the per-user
+        ``n_train_obs`` is the only field the fleet does not fix)."""
         return ForestMeta(
             n_features=self.n_features,
             task=self.task,
@@ -119,11 +141,13 @@ class SharedCodebook:
 
     # ---------------- serialization ---------------------------------------
     def to_bytes(self) -> bytes:
+        """Serialize as one RFS1 frame (normative spec: docs/format.md)."""
         out = io.BytesIO()
         out.write(_MAGIC)
         out.write(
             struct.pack(
-                "<IBHHI",
+                "<HIBHHI",
+                self.generation,
                 self.n_features,
                 1 if self.task == "regression" else 0,
                 self.n_classes,
@@ -144,10 +168,11 @@ class SharedCodebook:
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "SharedCodebook":
+        """Parse one RFS1 frame (normative spec: docs/format.md)."""
         inp = io.BytesIO(data)
         assert inp.read(4) == _MAGIC, "bad shared-codebook magic"
-        d, is_reg, n_classes, t_max, n_obs = struct.unpack(
-            "<IBHHI", inp.read(13)
+        gen, d, is_reg, n_classes, t_max, n_obs = struct.unpack(
+            "<HIBHHI", inp.read(15)
         )
         n_bins = read_arr(inp).astype(np.int32)
         categorical = read_arr(inp).astype(bool)
@@ -171,6 +196,7 @@ class SharedCodebook:
             splits_comp=splits_comp,
             fits_comp=fits_comp,
             fleet_fit_values=fleet_fit_values,
+            generation=gen,
         )
 
 
@@ -202,6 +228,26 @@ def _read_component(inp: io.BytesIO) -> SharedComponent:
         else:
             comp.codebook_lengths.append(tab.astype(np.int32))
     return comp
+
+
+def fit_value_ids(
+    table: np.ndarray, vals: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Look up ``vals`` in a fleet fit-value ``table`` that is only
+    APPEND-ORDERED (sorted per generation block, not globally — see
+    ``SharedCodebook``).  Returns ``(hit, ids)``: ``hit[i]`` is True when
+    ``vals[i]`` exists in the table and ``ids[i]`` is then its table
+    position (first occurrence); ``ids`` is undefined where ``hit`` is
+    False.  O((T+V) log T) via an argsort view."""
+    vals = np.asarray(vals, np.float64)
+    if not len(table) or not len(vals):
+        return np.zeros(len(vals), bool), np.zeros(len(vals), np.int64)
+    order = np.argsort(table, kind="stable")  # stable: first occurrence wins
+    sorted_table = table[order]
+    pos = np.searchsorted(sorted_table, vals)
+    pos_c = np.minimum(pos, len(table) - 1)
+    hit = (sorted_table[pos_c] == vals) & (pos < len(table))
+    return hit, order[pos_c].astype(np.int64)
 
 
 def _validate_fleet_schema(forests: Sequence[Forest]) -> ForestMeta:
@@ -289,10 +335,13 @@ def build_shared_codebook(
     seed: int = 0,
     engine: str = "chunked",
     chunk_size: int = 65536,
+    generation: int = 1,
 ) -> SharedCodebook:
     """Pool model counts across a fleet of forests and build the shared
     cluster codebooks (fleet-scale Bregman clustering, objective (6) over
-    the union of all users' models)."""
+    the union of all users' models).  ``generation`` stamps the codebook's
+    lifecycle version (a ``full``-mode recluster passes the successor
+    generation; fresh builds are v1)."""
     meta = _validate_fleet_schema(forests)
     d = meta.n_features
     recs = [extract_records(f) for f in forests]
@@ -363,4 +412,5 @@ def build_shared_codebook(
         splits_comp=splits_comp,
         fits_comp=fits_comp,
         fleet_fit_values=fleet_values,
+        generation=generation,
     )

@@ -53,7 +53,12 @@ from ..core.stats import (
 from ..core.framing import read_arr, read_bytes, write_arr, write_bytes
 from ..core.tree import Forest
 from ..core.zaks import zaks_encode
-from .codebook import SharedCodebook, SharedComponent, cluster_codebooks
+from .codebook import (
+    SharedCodebook,
+    SharedComponent,
+    cluster_codebooks,
+    fit_value_ids,
+)
 
 _MAGIC = b"RFD1"
 
@@ -84,8 +89,15 @@ class DeltaComponent:
 
 @dataclass
 class UserDelta:
-    """A user's forest, delta-encoded against a ``SharedCodebook``."""
+    """A user's forest, delta-encoded against a ``SharedCodebook``.
 
+    ``codebook_generation`` names the generation of the shared codebook
+    every shared cluster reference resolves against — decoding a delta
+    against any other generation is a framing error.  The store keeps a
+    superseded codebook alive until the last delta referencing it has
+    been migrated (``store.lifecycle``)."""
+
+    codebook_generation: int
     n_trees: int
     max_depth: int
     n_train_obs: int
@@ -102,11 +114,13 @@ class UserDelta:
 
     # ---------------- serialization ---------------------------------------
     def to_bytes(self) -> bytes:
+        """Serialize as one RFD1 frame (normative spec: docs/format.md)."""
         out = io.BytesIO()
         out.write(_MAGIC)
         out.write(
             struct.pack(
-                "<IHII",
+                "<HIHII",
+                self.codebook_generation,
                 self.n_trees, self.max_depth, self.n_train_obs,
                 self.zaks_total_bits,
             )
@@ -125,10 +139,11 @@ class UserDelta:
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "UserDelta":
+        """Parse one RFD1 frame (normative spec: docs/format.md)."""
         inp = io.BytesIO(data)
         assert inp.read(4) == _MAGIC, "bad user-delta magic"
-        n_trees, max_depth, n_obs, zbits = struct.unpack(
-            "<IHII", inp.read(14)
+        gen, n_trees, max_depth, n_obs, zbits = struct.unpack(
+            "<HIHII", inp.read(16)
         )
         zaks_lengths = read_arr(inp).astype(np.int32)
         zaks_payload = read_bytes(inp)
@@ -142,6 +157,7 @@ class UserDelta:
         fit_map = read_arr(inp).astype(np.int64)
         extra = read_arr(inp).astype(np.float64)
         return cls(
+            codebook_generation=gen,
             n_trees=n_trees, max_depth=max_depth, n_train_obs=n_obs,
             zaks_payload=zaks_payload, zaks_total_bits=zbits,
             zaks_lengths=zaks_lengths, vars_dc=vars_dc,
@@ -349,19 +365,14 @@ def encode_user_delta(
     else:
         fleet = shared.fleet_fit_values
         vals = np.asarray(forest.fit_values, np.float64)
-        pos = np.searchsorted(fleet, vals)
-        pos_c = np.minimum(pos, max(len(fleet) - 1, 0))
-        known = len(fleet) > 0 and vals.size > 0
-        hit = (
-            (fleet[pos_c] == vals) & (pos < len(fleet))
-            if known
-            else np.zeros(len(vals), bool)
-        )
+        # the fleet table is only append-ordered across generations, so the
+        # lookup goes through the argsort view, not a raw searchsorted
+        hit, ids = fit_value_ids(fleet, vals)
         extra_values = vals[~hit]
         fit_map = np.where(
-            hit, pos_c, -(np.cumsum(~hit) - 1) - 1
+            hit, ids, -(np.cumsum(~hit) - 1) - 1
         ).astype(np.int64)
-        ext_ids = np.where(hit, pos_c, len(fleet) + np.cumsum(~hit) - 1)
+        ext_ids = np.where(hit, ids, len(fleet) + np.cumsum(~hit) - 1)
         n_fit_syms = len(fleet) + len(extra_values)
         fit_syms = ext_ids[rec.fit.astype(np.int64)]
     rec_f = type(rec)(
@@ -417,6 +428,7 @@ def encode_user_delta(
     _keep_nonempty(fits_dc, fs, fn)
 
     return UserDelta(
+        codebook_generation=shared.generation,
         n_trees=forest.n_trees,
         max_depth=t_max - 1,
         n_train_obs=meta.n_train_obs,
@@ -472,6 +484,12 @@ def hydrate(delta: UserDelta, shared: SharedCodebook) -> CompressedForest:
     out as FLEET ids with ``fit_values`` set to the fleet(+extra) table —
     numerically identical predictions; use ``reconstruct_user`` for the
     bit-exact original forest."""
+    if delta.codebook_generation != shared.generation:
+        raise ValueError(
+            f"delta references codebook generation "
+            f"{delta.codebook_generation}, got generation "
+            f"{shared.generation}"
+        )
     meta = shared.user_meta(delta.n_train_obs)
     if shared.task == "regression":
         fit_values = np.concatenate(

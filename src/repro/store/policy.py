@@ -28,8 +28,10 @@ class GreedyDualClock:
         self._tick = 0
 
     def touch(self, cost: float) -> tuple[float, int]:
+        """Priority key for an inserted/accessed entry of ``cost``."""
         self._tick += 1
         return (self.clock + cost, self._tick)
 
     def evicted(self, priority: float) -> None:
+        """Advance the aging clock to an evicted entry's priority."""
         self.clock = priority

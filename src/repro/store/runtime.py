@@ -12,13 +12,15 @@ two levels:
   hot users skip entropy decode entirely on repeat requests while cold
   users cost at most one decode each before eviction.
 
-Serving goes through ``repro.launch.serve_store``, which packs many users'
-cached tiles into one ragged segment-aware Pallas kernel launch.
+Serving goes through ``repro.serving.ForestServer``, which packs many
+users' cached tiles into one ragged segment-aware Pallas kernel launch;
+the codebook LIFECYCLE (generations, drift, re-clustering, migration)
+lives in ``store.lifecycle`` and this registry keeps every codebook
+generation its deltas still reference.
 """
 from __future__ import annotations
 
 import io
-import struct
 import zlib
 from collections import OrderedDict
 from typing import Iterable, Sequence
@@ -26,7 +28,14 @@ from typing import Iterable, Sequence
 import numpy as np
 
 from ..core.forest_codec import CompressedForest
-from ..core.framing import read_bytes, write_bytes
+from ..core.framing import (
+    read_bytes,
+    read_u16,
+    read_u32,
+    write_bytes,
+    write_u16,
+    write_u32,
+)
 from ..core.tree import Forest
 from .codebook import SharedCodebook, build_shared_codebook
 from .delta import UserDelta, encode_user_delta, hydrate, reconstruct_user
@@ -104,6 +113,8 @@ class TileCache:
         self._tiles.move_to_end(key)
 
     def get(self, key: tuple) -> Tile | None:
+        """The cached tile under ``key`` (refreshing its eviction
+        priority), or ``None`` on a miss — both counted per user."""
         tile = self._tiles.get(key)
         if tile is None:
             self.misses += 1
@@ -121,6 +132,8 @@ class TileCache:
         self._per_user.setdefault(user_id, [0, 0])[1] += n
 
     def put(self, key: tuple, tile: Tile) -> None:
+        """Insert a decoded tile, evicting minimum-priority tiles until
+        the resident-tree capacity holds."""
         if key in self._tiles:
             self._touch(key, tile)
             return
@@ -141,12 +154,15 @@ class TileCache:
             self.evictions += 1
 
     def invalidate_user(self, user_id: str) -> None:
+        """Drop every resident tile of one user (delta replacement)."""
         stale = [k for k in self._tiles if k[0] == user_id]
         for k in stale:
             self._resident_trees -= self._tiles.pop(k)[0].shape[0]
             self._prio.pop(k, None)
 
     def stats(self) -> dict:
+        """Cache occupancy and global + per-user hit/miss counters (the
+        admission-control dashboard feed)."""
         per_user = {
             u: {
                 "hits": h,
@@ -166,20 +182,36 @@ class TileCache:
 
 
 class ForestStore:
-    """Registry of per-user delta-encoded forests over one shared codebook."""
+    """Registry of per-user delta-encoded forests over one shared codebook.
+
+    The shared codebook is a LIVING artifact (ISSUE 5): ``recluster`` in
+    ``store.lifecycle`` installs a successor generation and migrates user
+    deltas onto it one by one.  The store therefore keeps every codebook
+    generation still referenced by at least one delta (``install_codebook``
+    retains the superseded current; ``drop_unreferenced_codebooks`` garbage
+    collects once the last delta migrates), and every decode path resolves
+    a delta against the generation it was encoded for — old- and
+    new-generation users serve side by side mid-migration.
+    """
 
     def __init__(
         self, shared: SharedCodebook, tile_cache_trees: int = 4096,
         arena_capacity_trees: int = 16384,
     ) -> None:
         self.shared = shared
+        # superseded codebook generations still referenced by >=1 delta
+        self._retained: dict[int, SharedCodebook] = {}
         self._deltas: dict[str, UserDelta] = {}
         self._hydrated: dict[str, CompressedForest] = {}
         self._tile_counts: dict[tuple, int] = {}
         self.cache = TileCache(tile_cache_trees)
-        # registry version: bumped on every (re-)registration so serving
-        # sessions can invalidate memoized plans built against old deltas
+        # registry version: bumped on every registry mutation.  Serving
+        # keys its memoized plans/packs on the finer-grained PER-USER
+        # versions below, so migrating one user invalidates only that
+        # user's cached artifacts (ROADMAP "plan-cache partial
+        # invalidation").
         self.version = 0
+        self._user_versions: dict[str, int] = {}
         # store-level lossy report (set by build_store(lossy=...))
         self.lossy: dict | None = None
         # device-resident fused-tile arena for the pipelined serving path;
@@ -190,6 +222,57 @@ class ForestStore:
             arena_capacity_trees,
         )
 
+    # ---------------- codebook generations --------------------------------
+    @property
+    def generation(self) -> int:
+        """Generation of the CURRENT codebook (new users encode against it)."""
+        return self.shared.generation
+
+    @property
+    def generations(self) -> list[int]:
+        """Every resident codebook generation, ascending (current last)."""
+        return sorted(self._retained) + [self.shared.generation]
+
+    def codebook_for(self, generation: int) -> SharedCodebook:
+        """The resident codebook of ``generation`` (current or retained)."""
+        if generation == self.shared.generation:
+            return self.shared
+        try:
+            return self._retained[generation]
+        except KeyError:
+            raise KeyError(
+                f"codebook generation {generation} is not resident "
+                f"(have {self.generations})"
+            ) from None
+
+    def install_codebook(self, shared: SharedCodebook) -> None:
+        """Install a successor codebook as the current generation.  The
+        superseded codebook is RETAINED while any delta still references
+        it (dropped automatically once the last one migrates); resident
+        caches stay valid — no delta changed."""
+        if shared.generation <= self.shared.generation:
+            raise ValueError(
+                f"successor generation {shared.generation} must exceed "
+                f"current generation {self.shared.generation}"
+            )
+        self._retained[self.shared.generation] = self.shared
+        self.shared = shared
+        self.version += 1
+        self.drop_unreferenced_codebooks()
+
+    def referenced_generations(self) -> set[int]:
+        """Codebook generations referenced by at least one registered delta."""
+        return {d.codebook_generation for d in self._deltas.values()}
+
+    def drop_unreferenced_codebooks(self) -> list[int]:
+        """Garbage-collect retained codebooks no delta references anymore
+        (the end state of a migration).  Returns the dropped generations."""
+        live = self.referenced_generations()
+        dropped = [g for g in self._retained if g not in live]
+        for g in dropped:
+            del self._retained[g]
+        return dropped
+
     # ---------------- registry --------------------------------------------
     @property
     def user_ids(self) -> list[str]:
@@ -198,8 +281,17 @@ class ForestStore:
     def __contains__(self, user_id: str) -> bool:
         return user_id in self._deltas
 
+    def user_version(self, user_id: str) -> int:
+        """Per-user registration version — the validity token serving keys
+        its memoized plans and gathered packs on.  Bumped whenever the
+        user's delta is replaced by content that decodes differently;
+        relabel-only migrations (bit-identical artifact) keep it, so a
+        warm session crossing a migration invalidates only re-encoded
+        users' cached packs."""
+        return self._user_versions.get(user_id, 0)
+
     def add_user(self, user_id: str, forest: Forest, seed: int = 0) -> UserDelta:
-        """Delta-encode ``forest`` against the (frozen) shared codebook and
+        """Delta-encode ``forest`` against the CURRENT shared codebook and
         register it.  Works for fleet members and late-onboarded users alike
         (the latter may carry user-local clusters)."""
         delta = encode_user_delta(forest, self.shared, seed=seed)
@@ -207,8 +299,12 @@ class ForestStore:
         return delta
 
     def add_delta(self, user_id: str, delta: UserDelta) -> None:
+        """Register a delta (new user or re-registration), invalidating
+        every cached artifact derived from the user's previous delta."""
+        self.codebook_for(delta.codebook_generation)  # must be resident
         self._deltas[user_id] = delta
         self.version += 1
+        self._user_versions[user_id] = self.version
         self._hydrated.pop(user_id, None)
         self._tile_counts = {
             k: v for k, v in self._tile_counts.items() if k[0] != user_id
@@ -217,28 +313,57 @@ class ForestStore:
         if self.arena is not None:
             self.arena.invalidate(user_id)
 
+    def replace_delta_relabeled(self, user_id: str, delta: UserDelta) -> None:
+        """Swap in a RELABELED delta — one whose decoded artifact is
+        bit-identical to the resident one (cluster ids renamed onto a new
+        codebook generation, streams untouched).  Decoded tiles, arena
+        runs, and the user's serving version all survive: this is what
+        lets a migration leave untouched users' warm state alone."""
+        if user_id not in self._deltas:
+            raise KeyError(f"unknown user {user_id!r}")
+        self.codebook_for(delta.codebook_generation)  # must be resident
+        self._deltas[user_id] = delta
+        self.version += 1
+        # drop only the cheap hydrated object: it holds a reference to the
+        # old generation's fit table; tiles/arena/packs are value-identical
+        self._hydrated.pop(user_id, None)
+
     def delta(self, user_id: str) -> UserDelta:
+        """The registered ``UserDelta`` for one user."""
         return self._deltas[user_id]
 
     def n_trees(self, user_id: str) -> int:
+        """Tree count of one user's forest (from the delta header — no
+        decode)."""
         return self._deltas[user_id].n_trees
 
     def max_depth(self, user_id: str) -> int:
+        """Max tree depth of one user's forest (from the delta header)."""
         return self._deltas[user_id].max_depth
 
     # ---------------- decode paths ----------------------------------------
     def hydrate(self, user_id: str) -> CompressedForest:
+        """Resolve one user's delta into an inline ``CompressedForest``
+        (cached; codebook resolution only, no entropy decode), against the
+        codebook generation the delta references."""
         comp = self._hydrated.get(user_id)
         if comp is None:
-            comp = hydrate(self._deltas[user_id], self.shared)
+            delta = self._deltas[user_id]
+            comp = hydrate(delta, self.codebook_for(delta.codebook_generation))
             self._hydrated[user_id] = comp
         return comp
 
     def reconstruct(self, user_id: str) -> Forest:
         """Bit-exact original forest for this user."""
-        return reconstruct_user(self._deltas[user_id], self.shared)
+        delta = self._deltas[user_id]
+        return reconstruct_user(
+            delta, self.codebook_for(delta.codebook_generation)
+        )
 
     def predict(self, user_id: str, x_binned: np.ndarray) -> np.ndarray:
+        """Serve one user's predictions via the decode-side reference path
+        (``predict_compressed``) — the oracle the kernels are checked
+        against."""
         from ..core.compressed_predict import predict_compressed
 
         return predict_compressed(self.hydrate(user_id), x_binned)
@@ -304,24 +429,68 @@ class ForestStore:
                 pinned=set(users),
             )
 
+    # ---------------- drift observability ---------------------------------
+    def drift_stats(self) -> dict:
+        """Codebook-lifecycle drift summary (generation, fallback-cluster
+        fraction, fallback byte overhead) for dashboards —
+        ``ForestServer.stats()`` surfaces this without reaching into store
+        internals.  Memoized per registry version: the underlying
+        ``drift_report`` re-serializes every delta, which a polling
+        dashboard must not pay per call.  Full report:
+        ``store.lifecycle.drift_report``."""
+        cached = getattr(self, "_drift_stats_cache", None)
+        if cached is not None and cached[0] == self.version:
+            return cached[1]
+        from .lifecycle import drift_report
+
+        rep = drift_report(self)
+        stats = {
+            "codebook_generation": rep["codebook_generation"],
+            "generations": rep["generations"],
+            "n_users": rep["n_users"],
+            "fallback_user_fraction": rep["fallback_user_fraction"],
+            "fallback_overhead_fraction": rep["fallback_overhead_fraction"],
+        }
+        self._drift_stats_cache = (self.version, stats)
+        return stats
+
     # ---------------- sizes + serialization -------------------------------
     def size_report(self) -> dict:
+        """Byte accounting of everything the store would persist: every
+        resident codebook generation (current + retained-for-migration)
+        plus all user deltas."""
         shared_bytes = len(self.shared.to_bytes())
+        retained_bytes = {
+            g: len(cb.to_bytes()) for g, cb in sorted(self._retained.items())
+        }
         per_user = {u: len(d.to_bytes()) for u, d in self._deltas.items()}
         return {
             "n_users": len(self._deltas),
+            "codebook_generation": self.shared.generation,
             "shared_codebook_bytes": shared_bytes,
+            "retained_codebook_bytes": retained_bytes,
             "user_delta_bytes_total": sum(per_user.values()),
-            "total_bytes": shared_bytes + sum(per_user.values()),
+            "total_bytes": (
+                shared_bytes
+                + sum(retained_bytes.values())
+                + sum(per_user.values())
+            ),
             "per_user_bytes": per_user,
             "lossy": self.lossy,
         }
 
     def to_bytes(self) -> bytes:
+        """Serialize as one RFT1 frame (normative spec: docs/format.md):
+        every resident codebook ascending by generation — the LAST is the
+        current one — then the user deltas."""
         out = io.BytesIO()
         out.write(_MAGIC)
-        write_bytes(out, self.shared.to_bytes())
-        out.write(struct.pack("<I", len(self._deltas)))
+        codebooks = [self._retained[g] for g in sorted(self._retained)]
+        codebooks.append(self.shared)
+        write_u16(out, len(codebooks))
+        for cb in codebooks:
+            write_bytes(out, cb.to_bytes())
+        write_u32(out, len(self._deltas))
         for user_id, delta in sorted(self._deltas.items()):
             write_bytes(out, user_id.encode("utf-8"))
             write_bytes(out, delta.to_bytes())
@@ -331,14 +500,22 @@ class ForestStore:
     def from_bytes(
         cls, data: bytes, tile_cache_trees: int = 4096
     ) -> "ForestStore":
+        """Parse one RFT1 frame (normative spec: docs/format.md)."""
         inp = io.BytesIO(data)
         assert inp.read(4) == _MAGIC, "bad store magic"
-        shared = SharedCodebook.from_bytes(read_bytes(inp))
-        store = cls(shared, tile_cache_trees=tile_cache_trees)
-        (n,) = struct.unpack("<I", inp.read(4))
+        n_cb = read_u16(inp)
+        assert n_cb >= 1, "store frame must carry at least one codebook"
+        codebooks = [
+            SharedCodebook.from_bytes(read_bytes(inp)) for _ in range(n_cb)
+        ]
+        store = cls(codebooks[-1], tile_cache_trees=tile_cache_trees)
+        for cb in codebooks[:-1]:
+            store._retained[cb.generation] = cb
+        n = read_u32(inp)
         for _ in range(n):
             user_id = read_bytes(inp).decode("utf-8")
             store.add_delta(user_id, UserDelta.from_bytes(read_bytes(inp)))
+        store.drop_unreferenced_codebooks()
         return store
 
 

@@ -1,0 +1,344 @@
+"""ISSUE 5: codebook lifecycle — drift monitor, versioned codebook
+generations, online re-clustering, bit-exact delta migration, and
+serving-session partial invalidation across a migration."""
+import numpy as np
+import pytest
+
+from repro.core.tree import Forest, ForestMeta, Tree
+from repro.serving import ForestServer
+from repro.store import (
+    ForestStore,
+    RemapTable,
+    build_store,
+    drift_report,
+    make_drifted_fleet,
+    make_synthetic_fleet,
+    recluster,
+)
+from repro.store.lifecycle import (
+    build_remap,
+    migrate_user,
+    migrate_users,
+    relabel_delta,
+    user_fallback_report,
+)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def drifted_store(task="classification", n_users=10, late_fraction=0.3,
+                  seed=0):
+    """A store frozen on the initial population, with the late (drifted)
+    users onboarded afterwards — the fallback-heavy state recluster
+    repairs.  Returns (store, full fleet dict, late user ids)."""
+    initial, late = make_drifted_fleet(
+        n_users, late_fraction=late_fraction, task=task,
+        n_trees=(4, 8), max_depth=4, seed=seed,
+    )
+    store = build_store(initial)
+    for u, f in late.items():
+        store.add_user(u, f)
+    return store, {**initial, **late}, sorted(late)
+
+
+def one_tree_on_feature(v: int, d: int = 8, n_bins: int = 16) -> Forest:
+    """A forest whose single tree splits ONLY on feature ``v`` — every
+    model emits symbols a codebook built without feature ``v`` cannot
+    code, forcing the all-local fallback path."""
+    tree = Tree(
+        feature=np.array([v, -1, -1]),
+        threshold=np.array([3, -1, -1]),
+        children_left=np.array([1, -1, -1]),
+        children_right=np.array([2, -1, -1]),
+        node_fit=np.array([0, 1, 0], dtype=np.int64),
+    )
+    meta = ForestMeta(
+        n_features=d, task="classification", n_classes=2,
+        n_bins_per_feature=np.full(d, n_bins, np.int32),
+        n_train_obs=1000, categorical=np.zeros(d, dtype=bool),
+    )
+    return Forest(trees=[tree], meta=meta)
+
+
+class TestGenerationFraming:
+    def test_codebook_and_delta_carry_generation(self):
+        from repro.store import SharedCodebook, UserDelta
+
+        fleet = make_synthetic_fleet(3, n_trees=(3, 5), max_depth=3)
+        store = build_store(fleet)
+        assert store.generation == 1
+        cb = SharedCodebook.from_bytes(store.shared.to_bytes())
+        assert cb.generation == 1
+        delta = store.delta(store.user_ids[0])
+        assert delta.codebook_generation == 1
+        rt = UserDelta.from_bytes(delta.to_bytes())
+        assert rt.codebook_generation == 1
+
+    def test_hydrate_rejects_generation_mismatch(self):
+        import dataclasses
+
+        from repro.store.delta import hydrate
+
+        fleet = make_synthetic_fleet(2, n_trees=(3, 5), max_depth=3)
+        store = build_store(fleet)
+        wrong = dataclasses.replace(store.shared, generation=7)
+        with pytest.raises(ValueError, match="generation"):
+            hydrate(store.delta(store.user_ids[0]), wrong)
+
+    def test_rft1_roundtrips_retained_codebooks(self):
+        """Mid-migration stores serialize BOTH generations and restore
+        them (the old codebook must survive until its last delta
+        migrates)."""
+        store, fleet, late = drifted_store()
+        res = recluster(store, migrate=False)
+        migrate_users(store, late, res.remap)
+        assert store.generations == [1, 2]
+        clone = ForestStore.from_bytes(store.to_bytes())
+        assert clone.generations == [1, 2]
+        assert all(
+            clone.reconstruct(u).equals(fleet[u]) for u in clone.user_ids
+        )
+        # finishing the migration on the clone drops generation 1
+        migrate_users(
+            clone, [u for u in clone.user_ids if u not in late], res.remap
+        )
+        assert clone.generations == [2]
+
+
+class TestDriftMonitor:
+    def test_clean_fleet_reports_no_drift(self):
+        store = build_store(make_synthetic_fleet(4, n_trees=(3, 5),
+                                                 max_depth=3))
+        rep = drift_report(store)
+        assert rep["fallback_user_fraction"] == 0.0
+        assert rep["fallback_bytes"] == 0
+        assert not rep["recommend_recluster"]
+
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    def test_drifted_fleet_trips_the_monitor(self, task):
+        store, _, late = drifted_store(task=task)
+        rep = drift_report(store)
+        assert rep["n_fallback_users"] == len(late)
+        assert rep["fallback_user_fraction"] == pytest.approx(
+            len(late) / rep["n_users"]
+        )
+        assert rep["fallback_bytes"] > 0
+        assert 0 < rep["fallback_overhead_fraction"] < 1
+        assert rep["recommend_recluster"]
+        for u in late:
+            assert rep["per_user"][u]["uses_fallback"]
+
+    def test_server_stats_surface_drift(self, rng):
+        store, _, _ = drifted_store()
+        server = ForestServer(store)
+        drift = server.stats()["store"]
+        assert drift["codebook_generation"] == 1
+        assert drift["fallback_user_fraction"] > 0
+        # single-forest sessions have no fleet codebook to monitor
+        from conftest import random_forest
+
+        single = ForestServer.from_forest(random_forest(seed=1, n_trees=3))
+        assert single.stats()["store"] is None
+
+
+class TestRemapTable:
+    def test_extend_remap_is_identity_and_roundtrips(self):
+        store, _, _ = drifted_store()
+        res = recluster(store, migrate=False)
+        remap = res.remap
+        assert remap.is_identity
+        assert remap.old_generation == 1 and remap.new_generation == 2
+        rt = RemapTable.from_bytes(remap.to_bytes())
+        assert rt.old_generation == 1 and rt.new_generation == 2
+        assert rt.fit_table_prefix == remap.fit_table_prefix
+        assert np.array_equal(rt.vars_map, remap.vars_map)
+        assert np.array_equal(rt.fits_map, remap.fits_map)
+        assert set(rt.splits_map) == set(remap.splits_map)
+        for v in remap.splits_map:
+            assert np.array_equal(rt.splits_map[v], remap.splits_map[v])
+
+    def test_build_remap_matches_identical_twins_only(self):
+        store, _, _ = drifted_store()
+        remap = build_remap(store.shared, store.shared)
+        assert remap.is_identity  # a codebook is its own twin
+        assert remap.fit_table_prefix
+
+
+class TestRecluster:
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    def test_extend_is_bit_exact_and_shrinks_bytes(self, task):
+        store, fleet, late = drifted_store(task=task, n_users=12)
+        res = recluster(store, mode="extend")
+        assert res.new_generation == 2 and store.generation == 2
+        assert res.verified_bit_exact
+        assert all(
+            store.reconstruct(u).equals(fleet[u]) for u in store.user_ids
+        )
+        # fallback users re-encode, clean users relabel
+        assert res.n_reencoded == len(late)
+        assert res.n_relabeled == len(store.user_ids) - len(late)
+        assert res.bytes_after <= res.bytes_before
+        # the drift is repaired and the old generation dropped
+        rep = drift_report(store)
+        assert rep["fallback_user_fraction"] == 0.0
+        assert store.generations == [2]
+
+    @pytest.mark.parametrize("task", ["classification", "regression"])
+    def test_full_rebuild_is_bit_exact(self, task):
+        store, fleet, _ = drifted_store(task=task)
+        res = recluster(store, mode="full")
+        assert store.generation == 2
+        assert all(
+            store.reconstruct(u).equals(fleet[u]) for u in store.user_ids
+        )
+        rep = drift_report(store)
+        assert rep["fallback_user_fraction"] == 0.0
+        # totals are NOT asserted for full mode: the rebuilt shared
+        # codebook may outgrow a tiny fleet's per-user savings (the
+        # 100-user tradeoff lives in benchmarks/recluster_bench.py)
+        assert set(r["status"] for r in res.per_user.values()) <= {
+            "relabeled", "reencoded"
+        }
+
+    def test_unknown_mode_rejected(self):
+        store = build_store(make_synthetic_fleet(2, n_trees=(3, 4),
+                                                 max_depth=3))
+        with pytest.raises(ValueError, match="mode"):
+            recluster(store, mode="nope")
+
+    def test_empty_store(self):
+        fleet = make_synthetic_fleet(1, n_trees=(3, 4), max_depth=3)
+        store = build_store(fleet)
+        # build an EMPTY store sharing the codebook
+        empty = ForestStore(store.shared)
+        for mode in ("extend", "full"):
+            res = recluster(empty, mode=mode)
+            assert res.n_users == 0
+            assert res.n_relabeled == res.n_reencoded == 0
+        assert empty.generation == 3
+
+    def test_singleton_fleet(self):
+        fleet = make_synthetic_fleet(1, n_trees=(3, 4), max_depth=3)
+        store = build_store(fleet)
+        for mode in ("extend", "full"):
+            res = recluster(store, mode=mode)
+            assert res.n_users == 1
+        (u,) = store.user_ids
+        assert store.reconstruct(u).equals(fleet[u])
+        assert store.generations == [3]
+
+    def test_late_user_with_only_local_clusters(self):
+        """A user NO shared cluster can code at all (every model local)
+        migrates onto shared clusters and drops its fallback bytes."""
+        initial, _ = make_drifted_fleet(
+            6, late_fraction=0.0, n_trees=(4, 8), max_depth=4,
+        )
+        store = build_store(initial)
+        d = store.shared.n_features
+        loner = one_tree_on_feature(d - 1, d=d)
+        store.add_user("loner", loner)
+        rep = user_fallback_report(store, "loner")
+        assert rep["uses_fallback"] and rep["n_local_clusters"] > 0
+        res = recluster(store, mode="extend")
+        assert res.per_user["loner"]["status"] == "reencoded"
+        assert store.reconstruct("loner").equals(loner)
+        assert not user_fallback_report(store, "loner")["uses_fallback"]
+
+
+class TestMigration:
+    def test_incremental_migration_keeps_old_generation_alive(self):
+        store, fleet, late = drifted_store()
+        res = recluster(store, migrate=False)
+        assert res.n_pending == len(store.user_ids)
+        assert store.generations == [1, 2]
+        # new onboarding lands on the NEW generation immediately
+        extra = make_synthetic_fleet(1, n_trees=(3, 4), max_depth=3,
+                                     seed=99)
+        (uid, forest), = extra.items()
+        store.add_user("fresh-" + uid, forest)
+        assert store.delta("fresh-" + uid).codebook_generation == 2
+        # migrate half: both generations stay resident
+        migrate_users(store, late, res.remap)
+        assert store.generations == [1, 2]
+        # migrate the rest: generation 1 is garbage-collected
+        rest = [
+            u for u in store.user_ids
+            if store.delta(u).codebook_generation == 1
+        ]
+        migrate_users(store, rest, res.remap)
+        assert store.generations == [2]
+        assert all(
+            store.reconstruct(u).equals(fleet[u]) for u in fleet
+        )
+
+    def test_migrate_user_already_current(self):
+        store, _, _ = drifted_store()
+        res = recluster(store)
+        rec = migrate_user(store, store.user_ids[0], res.remap)
+        assert rec["status"] == "current"
+
+    def test_relabel_preserves_bytes_and_decoded_artifact(self):
+        """Relabeled deltas differ ONLY in the generation stamp: same
+        size, identical reconstruction, tile cache untouched."""
+        store, fleet, late = drifted_store()
+        clean = [u for u in store.user_ids if u not in late]
+        before = {u: len(store.delta(u).to_bytes()) for u in clean}
+        ver_before = {u: store.user_version(u) for u in clean}
+        store.tiles(clean[0], 8)  # warm one user's decoded tiles
+        tiles_before = len(store.cache)
+        res = recluster(store, mode="extend")
+        for u in clean:
+            assert res.per_user[u]["status"] == "relabeled"
+            assert len(store.delta(u).to_bytes()) == before[u]
+            # per-user serving version unchanged: caches stay valid
+            assert store.user_version(u) == ver_before[u]
+        assert len(store.cache) == tiles_before  # tiles survived
+
+    def test_serving_mid_migration_mixes_generations(self, rng):
+        store, fleet, late = drifted_store(n_users=8)
+        server = ForestServer(store)
+        res = recluster(store, migrate=False)
+        migrate_users(store, late, res.remap)
+        users = store.user_ids
+        x = rng.integers(0, 12, (9, 8)).astype(np.int32)
+        gens = {store.delta(u).codebook_generation for u in users}
+        assert gens == {1, 2}
+        mixed = [(u, x) for u in users[:2] + late[:2]]
+        preds = server.serve(mixed)
+        for (u, xx), p in zip(mixed, preds):
+            assert np.array_equal(p, store.predict(u, xx))
+
+
+class TestServingAcrossMigration:
+    def test_warm_session_invalidates_only_migrated_users(self, rng):
+        """THE acceptance property: a warm session crossing a migration
+        keeps untouched (relabeled) users' cached packs and re-gathers
+        only re-encoded users' packs."""
+        store, fleet, late = drifted_store(n_users=10)
+        server = ForestServer(store)
+        clean = [u for u in store.user_ids if u not in late]
+        x = rng.integers(0, 12, (9, 8)).astype(np.int32)
+        reqs_clean = [(clean[0], x), (clean[1], x)]
+        reqs_late = [(late[0], x), (late[1], x)]
+        for _ in range(2):
+            server.serve(reqs_clean)
+            server.serve(reqs_late)
+        hits0 = server.plan_cache.pack_hits
+        misses0 = server.plan_cache.pack_misses
+
+        res = recluster(store, mode="extend")
+        assert res.n_reencoded == len(late)
+
+        preds_clean = server.serve(reqs_clean)  # pack HIT: users relabeled
+        preds_late = server.serve(reqs_late)  # pack MISS: users re-encoded
+        assert server.plan_cache.pack_hits == hits0 + 1
+        assert server.plan_cache.pack_misses == misses0 + 1
+        assert_preds = lambda reqs, preds: [
+            np.testing.assert_array_equal(p, store.predict(u, xx))
+            for (u, xx), p in zip(reqs, preds)
+        ]
+        assert_preds(reqs_clean, preds_clean)
+        assert_preds(reqs_late, preds_late)

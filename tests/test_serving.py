@@ -196,9 +196,11 @@ class TestPlanCacheInvalidation:
         assert server.plan_cache.invalidations >= 1
         assert_matches_store(store, reqs, preds, "classification")
 
-    def test_cold_admission_of_new_users_invalidates(self, rng):
-        """Admitting a different user set bumps the epoch; the original
-        batch re-gathers and still serves correctly."""
+    def test_cold_admission_of_unrelated_users_keeps_pack(self, rng):
+        """Partial invalidation (ISSUE 5): admitting a DIFFERENT user set
+        no longer sweeps the whole pack cache — the original batch's pack
+        survives (its users' run tokens are unchanged) and still serves
+        correctly."""
         store = build_store(small_fleet(n_users=6))
         server = ForestServer(store)
         u = store.user_ids
@@ -206,10 +208,34 @@ class TestPlanCacheInvalidation:
         reqs_a = [(u[0], x), (u[1], x)]
         server.serve(reqs_a)
         misses0 = server.plan_cache.pack_misses
-        server.serve([(u[4], x), (u[5], x)])  # cold admissions
+        hits0 = server.plan_cache.pack_hits
+        server.serve([(u[4], x), (u[5], x)])  # unrelated cold admissions
         preds = server.serve(reqs_a)
-        assert server.plan_cache.pack_misses > misses0 + 1
+        # one miss for the new batch, then a HIT for the untouched one
+        assert server.plan_cache.pack_misses == misses0 + 1
+        assert server.plan_cache.pack_hits == hits0 + 1
         assert_matches_store(store, reqs_a, preds, "classification")
+
+    def test_eviction_invalidates_only_affected_users_packs(self, rng):
+        """Evicting one user's arena run drops only the packs containing
+        that user; a disjoint batch's pack keeps hitting."""
+        store = build_store(small_fleet(n_users=6))
+        server = ForestServer(store)
+        u = store.user_ids
+        x = rng.integers(0, 12, (7, 8)).astype(np.int32)
+        reqs_a = [(u[0], x), (u[1], x)]
+        reqs_b = [(u[2], x), (u[3], x)]
+        server.serve(reqs_a)
+        server.serve(reqs_b)
+        inval0 = server.plan_cache.invalidations
+        hits0 = server.plan_cache.pack_hits
+        store.arena.invalidate(u[0])  # eviction touching only reqs_a
+        preds_b = server.serve(reqs_b)  # untouched: pack HIT
+        preds_a = server.serve(reqs_a)  # touched: re-gathered
+        assert server.plan_cache.pack_hits == hits0 + 1
+        assert server.plan_cache.invalidations == inval0 + 1
+        assert_matches_store(store, reqs_a, preds_a, "classification")
+        assert_matches_store(store, reqs_b, preds_b, "classification")
 
     def test_reregistration_serves_new_forest(self, rng):
         fleet = small_fleet(n_users=3)
@@ -344,12 +370,16 @@ class TestStatsAndPack:
         server.serve(reqs)
         stats = server.stats()
         assert set(stats) == {
-            "engine_counts", "plan_cache", "tile_cache", "arena", "lossy",
+            "engine_counts", "plan_cache", "tile_cache", "arena", "store",
+            "lossy",
         }
         assert sum(stats["engine_counts"].values()) == 2
         assert stats["plan_cache"]["pack_hit_rate"] > 0
         assert stats["arena"]["resident_users"] > 0
         assert "per_user" in stats["tile_cache"]
+        # ISSUE 5: drift is observable without reaching into the store
+        assert stats["store"]["codebook_generation"] == 1
+        assert stats["store"]["fallback_user_fraction"] == 0.0
 
     def test_canonical_pad_helper(self):
         from repro.launch.serve_store import _pad_heap_width
