@@ -1,0 +1,300 @@
+"""Fault-tolerance benchmark (ISSUE 6 acceptance measurement).
+
+Puts numbers on the three fault paths the tentpole hardened, on a
+drifted fleet store and a live serving session:
+
+* **crash recovery** — a crash-at-every-journal-step sweep over a
+  journaled ``recluster(mode="extend")``: for each recorded step, the
+  migration is killed there (``InjectedCrash``), the journal is
+  round-tripped through its RFJ1 bytes (a real restart reads it from
+  disk), and ``resume_recluster`` finishes the job.  Measured: resume
+  wall time per crash point and EXPLICIT per-user bit-exactness of the
+  recovered store (acceptance: every crash point recovers bit-exact);
+* **degraded-mode serving** — ``serve_safe`` throughput healthy vs with
+  one user's delta corrupted (quarantined; the rest of the batch still
+  served) vs under injected transient arena-admission faults (bounded
+  retry-with-backoff, falling back to the simple engine when retries
+  are exhausted).  Parity of every served prediction against per-user
+  ``predict_compressed`` is counted, not assumed;
+* **corruption detection** — seeded single-bit flips over each frame
+  type (RFS1/RFD1/RFT1/RFM1): every flip must either be rejected with
+  a typed ``FramingError`` or decode BIT-EXACTLY (a flip in the CRC
+  trailer magic demotes the frame to the legacy CRC-less read path with
+  the payload intact).  Acceptance: zero silent wrong decodes.
+
+Writes machine-readable results to BENCH_chaos.json (repo root).
+
+    PYTHONPATH=src python benchmarks/chaos_bench.py [--quick] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import random
+import time
+
+import numpy as np
+
+from repro.core import predict_compressed
+from repro.core.framing import FramingError
+from repro.runtime.chaos import (
+    CrashSchedule,
+    InjectedCrash,
+    TransientFaults,
+    flip_bit,
+    poison_user,
+)
+from repro.serving import ForestServer
+from repro.store import (
+    MigrationJournal,
+    build_store,
+    encode_user_delta,
+    recluster,
+    resume_recluster,
+)
+from repro.store.codebook import SharedCodebook
+from repro.store.delta import UserDelta
+from repro.store.fleet import make_drifted_fleet, make_synthetic_fleet
+from repro.store.lifecycle import RemapTable
+from repro.store.runtime import ForestStore
+
+
+def _drifted_store_bytes(n_users: int, seed: int) -> tuple[bytes, dict]:
+    initial, late = make_drifted_fleet(
+        n_users, late_fraction=0.3, task="classification", seed=seed
+    )
+    store = build_store(initial)
+    for u, f in late.items():
+        store.add_delta(u, encode_user_delta(f, store.shared))
+    return store.to_bytes(), {**initial, **late}
+
+
+def bench_crash_recovery(n_users: int, seed: int = 3) -> dict:
+    blob, fleet = _drifted_store_bytes(n_users, seed)
+
+    # record the journal's step sequence with a no-crash run
+    probe = ForestStore.from_bytes(blob)
+    sched = CrashSchedule()
+    t0 = time.time()
+    recluster(probe, mode="extend", journal=MigrationJournal(), on_step=sched)
+    t_uninterrupted = time.time() - t0
+    steps = list(sched.steps)
+
+    points = []
+    for idx, name in enumerate(steps):
+        store = ForestStore.from_bytes(blob)
+        journal = MigrationJournal()
+        try:
+            recluster(
+                store, mode="extend", journal=journal,
+                on_step=CrashSchedule(fail_at=(idx,)),
+            )
+            raise AssertionError(f"crash at step {idx} ({name}) did not fire")
+        except InjectedCrash:
+            pass
+        state_at_crash = journal.state
+        # a real restart reads the journal back from disk
+        revived = MigrationJournal.from_bytes(journal.to_bytes())
+        t0 = time.time()
+        if revived.state == "idle":
+            recluster(store, mode="extend", journal=revived)
+        else:
+            resume_recluster(store, revived)
+        t_resume = time.time() - t0
+        bit_exact = all(
+            store.reconstruct(u).equals(fleet[u]) for u in store.user_ids
+        )
+        points.append({
+            "step": idx,
+            "name": name,
+            "state_at_crash": state_at_crash,
+            "resume_s": round(t_resume, 4),
+            "journal_committed": revived.state == "committed",
+            "bit_exact_all_users": bit_exact,
+        })
+
+    return {
+        "n_users": n_users,
+        "n_steps": len(steps),
+        "uninterrupted_s": round(t_uninterrupted, 4),
+        "all_crash_points_bit_exact": all(
+            p["bit_exact_all_users"] for p in points
+        ),
+        "worst_resume_s": max(p["resume_s"] for p in points),
+        "crash_points": points,
+    }
+
+
+def _throughput(server, reqs, repeats: int) -> tuple[float, list]:
+    statuses = server.serve_safe(reqs)  # warm / compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.time()
+        statuses = server.serve_safe(reqs)
+        ts.append(time.time() - t0)
+    rows = sum(x.shape[0] for _, x in reqs)
+    return rows / min(ts), statuses
+
+
+def _parity(store, reqs, statuses) -> int:
+    exact = 0
+    for (u, x), s in zip(reqs, statuses):
+        if s.status != "ok":
+            continue
+        ref = predict_compressed(store.hydrate(u), x)
+        exact += int(np.array_equal(s.prediction, ref))
+    return exact
+
+
+def bench_degraded_serving(
+    n_users: int, rows: int, repeats: int, seed: int = 11
+) -> dict:
+    fleet = make_synthetic_fleet(n_users=n_users, d=5, n_bins=12, seed=seed)
+    store = build_store(fleet)
+    server = ForestServer(store, retry_backoff_s=0.0)
+    rng = np.random.default_rng(seed)
+    d = store.shared.n_features
+    n_bins = int(store.shared.n_bins_per_feature[0])
+    reqs = [
+        (u, rng.integers(0, n_bins, (rows, d)).astype(np.int32))
+        for u in store.user_ids
+    ]
+
+    healthy_rps, statuses = _throughput(server, reqs, repeats)
+    healthy_parity = _parity(store, reqs, statuses)
+
+    # ---- one user's delta corrupted: quarantine, serve the rest ----------
+    victim = store.user_ids[0]
+    poison_user(store, victim)
+    degraded_rps, statuses = _throughput(server, reqs, repeats)
+    by_status: dict[str, int] = {}
+    for s in statuses:
+        by_status[s.status] = by_status.get(s.status, 0) + 1
+    quarantine_parity = _parity(store, reqs, statuses)
+    health = server.stats()["health"]
+
+    # ---- transient admission faults: bounded retry-with-backoff ----------
+    for u in store.user_ids:
+        store.arena.invalidate(u)
+    faults = TransientFaults(fail_first=2)
+    store.arena.admission_fault = faults
+    t0 = time.time()
+    retry_statuses = server.serve_safe(reqs, engine="pipelined")
+    t_retry = time.time() - t0
+    store.arena.admission_fault = None
+    retried_ok = sum(
+        1 for s in retry_statuses if s.status == "ok" and not s.degraded
+    )
+
+    return {
+        "n_users": n_users,
+        "rows_per_request": rows,
+        "healthy": {
+            "rows_per_s": round(healthy_rps, 1),
+            "parity_exact_requests": healthy_parity,
+            "n_ok": len(reqs),
+        },
+        "one_user_poisoned": {
+            "rows_per_s": round(degraded_rps, 1),
+            "statuses": by_status,
+            "parity_exact_requests": quarantine_parity,
+            "n_quarantined": health["n_quarantined"],
+            "integrity_failures": health["integrity_failures"],
+            "throughput_ratio_vs_healthy": round(
+                degraded_rps / healthy_rps, 3
+            ),
+        },
+        "transient_faults": {
+            "injected": faults.calls,
+            "retries_recorded": server.stats()["health"][
+                "transient_retries"
+            ],
+            "batch_s": round(t_retry, 4),
+            "served_ok_undegraded": retried_ok,
+            "n_requests": len(reqs),
+        },
+    }
+
+
+def bench_corruption_detection(flips_per_frame: int, seed: int = 0) -> dict:
+    store = build_store(
+        make_synthetic_fleet(n_users=2, d=5, n_bins=12, seed=23)
+    )
+    remap = RemapTable(
+        old_generation=1, new_generation=2,
+        vars_map=np.arange(3, dtype=np.int32),
+        splits_map={1: np.arange(2, dtype=np.int32)},
+        fits_map=np.arange(2, dtype=np.int32),
+    )
+    frames = {
+        "RFS1": (store.shared.to_bytes(), SharedCodebook.from_bytes),
+        "RFD1": (
+            store.delta(store.user_ids[0]).to_bytes(), UserDelta.from_bytes
+        ),
+        "RFT1": (store.to_bytes(), ForestStore.from_bytes),
+        "RFM1": (remap.to_bytes(), RemapTable.from_bytes),
+    }
+    rng = random.Random(seed)
+    out = {}
+    silent_total = 0
+    for name, (blob, parse) in frames.items():
+        nbits = 8 * len(blob)
+        bits = rng.sample(range(nbits), min(flips_per_frame, nbits))
+        typed = exact = silent = 0
+        t0 = time.time()
+        for bit in bits:
+            try:
+                reparsed = parse(flip_bit(blob, bit))
+            except FramingError:
+                typed += 1
+                continue
+            if reparsed.to_bytes() == blob:
+                exact += 1
+            else:
+                silent += 1
+        out[name] = {
+            "frame_bytes": len(blob),
+            "flips": len(bits),
+            "typed_rejects": typed,
+            "bit_exact_survivals": exact,
+            "silent_wrong": silent,
+            "checks_per_s": round(len(bits) / (time.time() - t0), 1),
+        }
+        silent_total += silent
+    return {"frames": out, "silent_wrong_total": silent_total}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small fleet + fewer flips (CI smoke)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.quick:
+        crash_users, serve_users, rows, repeats, flips = 5, 4, 64, 1, 120
+    else:
+        crash_users, serve_users, rows, repeats, flips = 12, 8, 256, 3, 600
+
+    results = {
+        "benchmark": "chaos",
+        "quick": bool(args.quick),
+        "crash_recovery": bench_crash_recovery(crash_users),
+        "degraded_serving": bench_degraded_serving(
+            serve_users, rows, repeats
+        ),
+        "corruption_detection": bench_corruption_detection(flips),
+    }
+    out_path = pathlib.Path(
+        args.out
+        or pathlib.Path(__file__).resolve().parent.parent
+        / "BENCH_chaos.json"
+    )
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(json.dumps(results, indent=2))
+    print(f"\nwrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -55,7 +55,8 @@ def bench_task(task: str, n_trees: int, rows: int, depth: int,
         forest_predict,
         forest_predict_agg,
     )
-    from repro.launch.serve_forest import iter_heap_tiles, serve_compressed_forest
+    from repro.launch.serve_forest import iter_heap_tiles
+    from repro.serving import ForestServer
 
     spec = TabularSpec(f"serve-{task}", rows, 8, task, 2, 2)
     forest, model, _ = train_compact(
@@ -112,10 +113,11 @@ def bench_task(task: str, n_trees: int, rows: int, depth: int,
     kernel_err = float(np.max(np.abs(per_tree - ref)))
 
     serve = {}
+    session = ForestServer.from_forest(comp)
     for batch in sorted({min(512, rows), min(2048, rows), rows}):
-        serve_compressed_forest(comp, xb[:batch])  # compile + warm
+        session.predict(xb[:batch])  # compile + warm
         t = best_of(
-            lambda b=batch: serve_compressed_forest(comp, xb[:b]), repeats
+            lambda b=batch: session.predict(xb[:b]), repeats
         )
         serve[str(batch)] = {
             "ms": round(t * 1e3, 2),

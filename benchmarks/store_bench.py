@@ -32,8 +32,7 @@ import time
 import numpy as np
 
 from repro.core import compress_forest
-from repro.launch.serve_forest import serve_compressed_forest
-from repro.launch.serve_store import serve_store_batch
+from repro.serving import ForestServer
 from repro.store import build_store, make_request_batch, make_synthetic_fleet
 
 
@@ -74,23 +73,25 @@ def bench_fleet(
         )
         return stats
 
+    server = ForestServer(store)
+
     # the PR 2 baseline path, measured at its shipped block sizes
-    serve_store_batch(store, requests[:2], engine="simple")  # jit warm-up
+    server.serve(requests[:2], engine="simple")  # jit warm-up
     t0 = time.time()
-    preds = serve_store_batch(store, requests, engine="simple")
+    preds = server.serve(requests, engine="simple")
     t_cold = time.time() - t0  # includes first-touch tile decode
     stats_cold = compact(store.cache.stats())
     t0 = time.time()
-    preds_warm = serve_store_batch(store, requests, engine="simple")
+    preds_warm = server.serve(requests, engine="simple")
     t_warm = time.time() - t0  # tiles served from the LRU
     stats_warm = compact(store.cache.stats())
 
     # the pipelined arena engine (ISSUE 3) on the same batch: the serving
     # rows/s trajectory BENCH_store.json tracks across PRs
-    serve_store_batch(store, requests[:2], engine="pipelined")
-    serve_store_batch(store, requests, engine="pipelined")  # arena warm
+    server.serve(requests[:2], engine="pipelined")
+    server.serve(requests, engine="pipelined")  # arena warm
     t0 = time.time()
-    preds_pipe = serve_store_batch(store, requests, engine="pipelined")
+    preds_pipe = server.serve(requests, engine="pipelined")
     t_pipe = time.time() - t0
     pipe_same = all(
         np.array_equal(a, b) if task == "classification"
@@ -98,12 +99,16 @@ def bench_fleet(
         for a, b in zip(preds_warm, preds_pipe)
     )
 
-    # sequential baseline: one fused per-user launch per request
-    hyd = {u: store.hydrate(u) for u in set(u for u, _ in requests)}
+    # sequential baseline: one fused per-user launch per request (each
+    # user held as a one-forest session over their hydrated artifact)
+    hyd = {
+        u: ForestServer.from_forest(store.hydrate(u))
+        for u in set(u for u, _ in requests)
+    }
     for u, x in requests[:2]:
-        serve_compressed_forest(hyd[u], x)  # warm
+        hyd[u].predict(x)  # warm
     t0 = time.time()
-    seq = [serve_compressed_forest(hyd[u], x) for u, x in requests]
+    seq = [hyd[u].predict(x) for u, x in requests]
     t_seq = time.time() - t0
 
     exact = 0

@@ -14,13 +14,77 @@ Primitives:
   raw bytes;
 * ``write_u16`` / ``read_u16``, ``write_u32`` / ``read_u32`` — bare
   little-endian scalars (codebook generations, element counts).
+
+Integrity (ISSUE 6): every read is bounds-checked against the remaining
+buffer — a corrupted or truncated length field raises a typed
+``TruncatedFrameError`` / ``IntegrityError`` instead of attempting an
+unbounded allocation or returning silently-short data — and every
+top-level frame writer appends a CRC32 trailer (``with_crc``) that
+``check_crc`` verifies and strips on read.  CRC-less frames written
+before the trailer existed still parse (``docs/format.md`` §8).
 """
 from __future__ import annotations
 
 import io
 import struct
+import zlib
 
 import numpy as np
+
+
+class FramingError(ValueError):
+    """Base for every typed framing fault (subclasses ``ValueError`` so
+    pre-existing ``except ValueError`` callers keep working)."""
+
+
+class TruncatedFrameError(FramingError):
+    """A length field points past the end of the frame, or the frame ends
+    mid-record — the payload cannot be read in full."""
+
+
+class IntegrityError(FramingError):
+    """The frame's bytes are internally inconsistent: CRC mismatch, bad
+    magic, an impossible dtype tag, or a shape that contradicts the
+    element count."""
+
+
+#: CRC trailer layout: this magic + u32 CRC32 of every preceding byte.
+CRC_MAGIC = b"CRC1"
+
+#: Upper bound on ARR ndim — anything larger is a corrupted header, not a
+#: real tensor (the codec never writes past 2 dimensions).
+_MAX_NDIM = 8
+
+
+def _read_exact(inp: io.BytesIO, n: int, what: str) -> bytes:
+    """Read exactly ``n`` bytes or raise ``TruncatedFrameError`` — never
+    return a silent short read."""
+    b = inp.read(n)
+    if len(b) != n:
+        raise TruncatedFrameError(
+            f"truncated frame: wanted {n} bytes for {what}, got {len(b)}"
+        )
+    return b
+
+
+def _remaining(inp: io.BytesIO) -> int | None:
+    """Bytes left in the buffer, or ``None`` for non-seekable streams."""
+    try:
+        return len(inp.getbuffer()) - inp.tell()
+    except (AttributeError, io.UnsupportedOperation):
+        return None
+
+
+def _check_length(inp: io.BytesIO, nbytes: int, what: str) -> None:
+    """Clamp an untrusted length field against the remaining buffer BEFORE
+    allocating — a flipped bit in a u32 length must not turn into a
+    multi-gigabyte allocation attempt."""
+    rem = _remaining(inp)
+    if rem is not None and nbytes > rem:
+        raise TruncatedFrameError(
+            f"truncated frame: {what} claims {nbytes} bytes but only "
+            f"{rem} remain"
+        )
 
 
 def write_u16(out: io.BytesIO, v: int) -> None:
@@ -30,7 +94,7 @@ def write_u16(out: io.BytesIO, v: int) -> None:
 
 def read_u16(inp: io.BytesIO) -> int:
     """Read one little-endian uint16 scalar."""
-    return struct.unpack("<H", inp.read(2))[0]
+    return struct.unpack("<H", _read_exact(inp, 2, "u16"))[0]
 
 
 def write_u32(out: io.BytesIO, v: int) -> None:
@@ -40,7 +104,14 @@ def write_u32(out: io.BytesIO, v: int) -> None:
 
 def read_u32(inp: io.BytesIO) -> int:
     """Read one little-endian uint32 scalar."""
-    return struct.unpack("<I", inp.read(4))[0]
+    return struct.unpack("<I", _read_exact(inp, 4, "u32"))[0]
+
+
+def read_struct(inp: io.BytesIO, fmt: str, what: str) -> tuple:
+    """Read one packed struct with bounds checking — frame parsers use
+    this instead of bare ``struct.unpack(fmt, inp.read(n))`` so a
+    truncated header raises ``TruncatedFrameError``, not ``struct.error``."""
+    return struct.unpack(fmt, _read_exact(inp, struct.calcsize(fmt), what))
 
 
 def write_arr(out: io.BytesIO, a: np.ndarray) -> None:
@@ -58,12 +129,35 @@ def write_arr(out: io.BytesIO, a: np.ndarray) -> None:
 
 
 def read_arr(inp: io.BytesIO) -> np.ndarray:
-    """Read one ARR record written by ``write_arr``."""
-    (dl,) = struct.unpack("<B", inp.read(1))
-    dt = np.dtype(inp.read(dl).decode())
-    ndim, size = struct.unpack("<BI", inp.read(5))
-    shape = tuple(struct.unpack("<I", inp.read(4))[0] for _ in range(ndim))
-    return np.frombuffer(inp.read(size * dt.itemsize), dtype=dt).reshape(shape)
+    """Read one ARR record written by ``write_arr``.
+
+    Every field is validated before use: the dtype tag must parse, ndim
+    must be plausible, the per-axis sizes must multiply to the element
+    count, and the payload length is clamped against the remaining buffer
+    — corrupted headers raise ``IntegrityError`` /
+    ``TruncatedFrameError`` instead of allocating from garbage."""
+    (dl,) = struct.unpack("<B", _read_exact(inp, 1, "ARR dtype-tag length"))
+    tag = _read_exact(inp, dl, "ARR dtype tag")
+    try:
+        dt = np.dtype(tag.decode("ascii"))
+    except (UnicodeDecodeError, TypeError, ValueError) as e:
+        raise IntegrityError(f"ARR record has invalid dtype tag {tag!r}") \
+            from e
+    ndim, size = struct.unpack("<BI", _read_exact(inp, 5, "ARR header"))
+    if ndim > _MAX_NDIM:
+        raise IntegrityError(f"ARR record claims ndim={ndim} (max {_MAX_NDIM})")
+    shape = tuple(
+        struct.unpack("<I", _read_exact(inp, 4, "ARR shape"))[0]
+        for _ in range(ndim)
+    )
+    if int(np.prod(shape, dtype=np.int64)) != size:
+        raise IntegrityError(
+            f"ARR record shape {shape} does not match element count {size}"
+        )
+    nbytes = size * dt.itemsize
+    _check_length(inp, nbytes, "ARR payload")
+    raw = _read_exact(inp, nbytes, "ARR payload")
+    return np.frombuffer(raw, dtype=dt).reshape(shape)
 
 
 def write_bytes(out: io.BytesIO, b: bytes) -> None:
@@ -73,6 +167,51 @@ def write_bytes(out: io.BytesIO, b: bytes) -> None:
 
 
 def read_bytes(inp: io.BytesIO) -> bytes:
-    """Read one BYTES record written by ``write_bytes``."""
-    (n,) = struct.unpack("<I", inp.read(4))
-    return inp.read(n)
+    """Read one BYTES record written by ``write_bytes``.  The length prefix
+    is clamped against the remaining buffer; a short payload raises
+    ``TruncatedFrameError`` instead of returning silently-short bytes."""
+    (n,) = struct.unpack("<I", _read_exact(inp, 4, "BYTES length"))
+    _check_length(inp, n, "BYTES payload")
+    return _read_exact(inp, n, "BYTES payload")
+
+
+# ---------------------------------------------------------------------------
+# frame-level integrity: CRC32 trailers + typed magic checks
+# ---------------------------------------------------------------------------
+
+def with_crc(payload: bytes) -> bytes:
+    """Append the CRC trailer (``CRC1`` magic + u32 CRC32 of ``payload``)
+    — what every frame writer emits since ISSUE 6."""
+    crc = zlib.crc32(payload) & 0xFFFFFFFF
+    return payload + CRC_MAGIC + struct.pack("<I", crc)
+
+
+def check_crc(data: bytes, what: str = "frame") -> bytes:
+    """Verify and strip a frame's CRC trailer, returning the bare payload.
+
+    Backward compatible: frames written before the trailer existed (no
+    ``CRC1`` magic at the end) pass through unchanged — but when a trailer
+    IS present, a mismatch raises ``IntegrityError`` (the frame was
+    corrupted in storage or transit, and decoding it would yield a
+    silently wrong artifact)."""
+    if len(data) >= 8 and data[-8:-4] == CRC_MAGIC:
+        payload = data[:-8]
+        (want,) = struct.unpack("<I", data[-4:])
+        got = zlib.crc32(payload) & 0xFFFFFFFF
+        if got != want:
+            raise IntegrityError(
+                f"{what}: CRC mismatch (stored 0x{want:08x}, computed "
+                f"0x{got:08x}) — the frame is corrupted"
+            )
+        return payload
+    return data
+
+
+def expect_magic(inp: io.BytesIO, magic: bytes, what: str) -> None:
+    """Read and verify a frame's magic; a mismatch is a typed
+    ``IntegrityError`` instead of a bare ``AssertionError``."""
+    got = _read_exact(inp, len(magic), f"{what} magic")
+    if got != magic:
+        raise IntegrityError(
+            f"{what}: bad magic {got!r} (expected {magic!r})"
+        )

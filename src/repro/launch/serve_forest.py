@@ -1,19 +1,14 @@
-"""DEPRECATED single-forest serving driver (PR 1), now a thin shim over
-the unified session API (ISSUE 4).
+"""Single-forest serving benchmark driver.
 
-``serve_compressed_forest`` delegates to a one-user
-``repro.serving.ForestServer`` session memoized on the ``CompressedForest``
-instance (the same memo pattern as ``predict_compressed``'s stacked
-forest): the first call decodes + admits the forest's tiles into the
-session's device arena, and every later call is an index-gather + one
-kernel launch through the plan/execute IR.  New code should hold the
-session directly:
+Serving goes through the unified session API (ISSUE 4):
 
     from repro.serving import ForestServer
     server = ForestServer.from_forest(comp)
     pred = server.predict(x_binned)
 
-The heap packing helpers (``tree_to_heap`` / ``iter_heap_tiles``) moved to
+(The PR 1 ``serve_compressed_forest`` shim that bridged callers to this
+API has been removed — its deprecation window closed.)  The heap packing
+helpers (``tree_to_heap`` / ``iter_heap_tiles``) moved to
 ``repro.serving.pack`` and are re-exported here for compatibility.
 
     PYTHONPATH=src python -m repro.launch.serve_forest --trees 100 \
@@ -23,7 +18,6 @@ from __future__ import annotations
 
 import argparse
 import time
-import warnings
 
 import numpy as np
 
@@ -31,44 +25,7 @@ from ..core.compressed_predict import predict_compressed
 from ..core.forest_codec import CompressedForest
 from ..serving.pack import iter_heap_tiles, tree_to_heap  # noqa: F401
 
-__all__ = ["iter_heap_tiles", "serve_compressed_forest", "tree_to_heap"]
-
-
-def serve_compressed_forest(
-    comp: CompressedForest,
-    x_binned: np.ndarray,
-    block_trees: int = 32,
-    interpret: bool | None = None,
-) -> np.ndarray:
-    """Deprecated: use ``repro.serving.ForestServer.from_forest``.
-
-    Predicts for (n, d) binned observations straight from the compressed
-    format through the session API.  Returns (n,) predictions (majority
-    vote / ensemble mean), matching ``predict_compressed`` (vote counts
-    are integer-exact; the regression mean accumulates in float32).
-
-    NOTE the session trade-off vs the deleted PR 1 streaming path: the
-    forest's fused tiles stay DEVICE-RESIDENT in the session's arena for
-    the comp's lifetime (warm calls are an index-gather + one launch)
-    instead of streaming O(one tile) per call.  Callers serving many
-    forests under tight device memory should hold explicit
-    ``ForestServer.from_forest(..., arena_capacity_trees=...)`` sessions
-    and drop them when done."""
-    warnings.warn(
-        "serve_compressed_forest is deprecated; use "
-        "repro.serving.ForestServer.from_forest(comp).predict(x)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    from ..serving import ForestServer
-
-    server = getattr(comp, "_serve_session", None)
-    if server is None:
-        server = ForestServer.from_forest(comp)
-        comp._serve_session = server  # type: ignore[attr-defined]
-    return server.predict(
-        x_binned, block_trees=block_trees, interpret=interpret
-    )
+__all__ = ["iter_heap_tiles", "tree_to_heap"]
 
 
 def main() -> None:

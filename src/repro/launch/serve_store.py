@@ -1,22 +1,20 @@
-"""DEPRECATED ragged multi-tenant serving driver (PR 2/3), now a thin
-shim over the unified session API (ISSUE 4).
+"""Ragged multi-tenant serving driver and the PR 3 pipelined STAGE
+helpers.
 
-``serve_store_batch`` delegates to a per-store ``repro.serving.ForestServer``
-session (memoized on the store object), so every call now flows through
-the plan/execute IR and benefits from the cross-batch plan cache; the
-``engine=`` string kwarg maps onto the session's explicit engine override.
-New code should hold a session directly:
+Serving goes through the unified session API (ISSUE 4):
 
     from repro.serving import ForestServer
     server = ForestServer(store)
     plan = server.plan(requests)     # grouping + cost-model engine choice
     preds = server.execute(plan, [x for _, x in requests])
 
-The PR 3 pipelined STAGE helpers (``pack_pipelined_batch`` /
-``run_pipelined_kernel`` / ``finalize_pipelined_batch``) are kept verbatim
-below: they are the un-memoized baseline ``benchmarks/serve_pipeline.py``
-times stage-by-stage and ``benchmarks/serve_session.py`` compares the
-session's warm path against.
+(The PR 2 ``serve_store_batch`` shim that bridged callers to this API has
+been removed — its deprecation window closed.)  The PR 3 pipelined STAGE
+helpers (``pack_pipelined_batch`` / ``run_pipelined_kernel`` /
+``finalize_pipelined_batch``) are kept verbatim below: they are the
+un-memoized baseline ``benchmarks/serve_pipeline.py`` times
+stage-by-stage and ``benchmarks/serve_session.py`` compares the session's
+warm path against.
 
     PYTHONPATH=src python -m repro.launch.serve_store --users 40 \
         --requests 64 --rows 256 --engine pipelined
@@ -25,7 +23,6 @@ from __future__ import annotations
 
 import argparse
 import time
-import warnings
 from typing import NamedTuple, Sequence
 
 import numpy as np
@@ -35,23 +32,9 @@ from ..serving.pack import (
     pad_heap_width as _pad_heap_width,  # canonical home: serving.pack
     pack_host_tiles,
 )
-from ..serving.plan import ENGINE_BLOCKS as _ENGINE_BLOCKS
 from ..store.runtime import ForestStore
 
 Request = tuple[str, np.ndarray]
-
-
-def _session_for(store: ForestStore):
-    """Memoize one ForestServer per store so repeated legacy calls share
-    the session's plan cache (same pattern as predict_compressed's
-    stacked-forest memo)."""
-    server = getattr(store, "_serve_session", None)
-    if server is None:
-        from ..serving import ForestServer
-
-        server = ForestServer(store)
-        store._serve_session = server  # type: ignore[attr-defined]
-    return server
 
 
 def pack_request_batch(
@@ -184,44 +167,6 @@ def serve_pipelined_uncached(
         return _empty_preds(requests)
     out = run_pipelined_kernel(store, pb, interpret)
     return finalize_pipelined_batch(store, requests, pb, out)
-
-
-# ---------------------------------------------------------------------------
-# the deprecated public entry point
-# ---------------------------------------------------------------------------
-
-def serve_store_batch(
-    store: ForestStore,
-    requests: Sequence[Request],
-    block_trees: int | None = None,
-    block_obs: int | None = None,
-    interpret: bool | None = None,
-    engine: str | None = None,
-) -> list[np.ndarray]:
-    """Deprecated: use ``repro.serving.ForestServer``.
-
-    Serves a mixed-user request batch through the session API (one
-    memoized session per store).  Results are identical to
-    ``ForestServer.serve``: one prediction array per request, matching
-    per-user ``predict_compressed``.  ``engine=None`` now asks the
-    session's cost model instead of the old "sharded iff multi-device"
-    rule."""
-    warnings.warn(
-        "serve_store_batch is deprecated; use repro.serving.ForestServer "
-        "(plan/execute session API)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    if not requests:
-        return []
-    server = _session_for(store)
-    plan = server.plan(
-        requests, engine=engine,
-        block_trees=block_trees, block_obs=block_obs,
-    )
-    return server.execute(
-        plan, [x for _, x in requests], interpret=interpret
-    )
 
 
 def main() -> None:

@@ -1,5 +1,15 @@
-"""repro.runtime — fault tolerance: restart, preemption, stragglers."""
+"""repro.runtime — fault tolerance: restart, preemption, stragglers,
+plus the deterministic fault-injection harness (``runtime.chaos``)."""
 
+from .chaos import (
+    CrashSchedule,
+    InjectedCrash,
+    TransientError,
+    TransientFaults,
+    flip_bit,
+    flip_bits,
+    truncate,
+)
 from .fault_tolerance import (
     Preemption,
     PreemptionSchedule,
@@ -8,8 +18,15 @@ from .fault_tolerance import (
 )
 
 __all__ = [
+    "CrashSchedule",
+    "InjectedCrash",
     "Preemption",
     "PreemptionSchedule",
     "StragglerMonitor",
     "TrainLoop",
+    "TransientError",
+    "TransientFaults",
+    "flip_bit",
+    "flip_bits",
+    "truncate",
 ]

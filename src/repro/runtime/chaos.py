@@ -1,0 +1,184 @@
+"""Deterministic fault-injection harness (ISSUE 6 tentpole piece 4).
+
+Everything the fault-tolerance tests and ``benchmarks/chaos_bench.py``
+need to break the system ON PURPOSE, reproducibly:
+
+* **Corruption** — seeded bit flips (``flip_bit`` / ``flip_bits``) and
+  truncations (``truncate``) of serialized RFS1/RFD1/RFT1/RFM1 frames,
+  for exercising the integrity-checked framing (``core.framing``);
+* **Crashes** — ``CrashSchedule``, modeled on the training runtime's
+  ``PreemptionSchedule``: a step hook the recluster journal calls at
+  every named step, raising ``InjectedCrash`` at a chosen step name or
+  index.  Run once with an empty schedule to RECORD the step list, then
+  replay crashing at each recorded step in turn ("crash at every journal
+  step");
+* **Transient faults** — ``TransientFaults``, a callable that fails its
+  first N invocations with ``TransientError`` (what the serving session's
+  bounded retry-with-backoff is tested against, standing in for arena
+  admission failures under memory pressure).
+
+Everything here is seed-deterministic: the same seed produces the same
+flipped bits, the same truncation points, the same crash steps — so every
+chaos test is replayable bit-for-bit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class InjectedCrash(Exception):
+    """Raised by ``CrashSchedule`` to simulate a process crash mid-step."""
+
+
+class TransientError(Exception):
+    """A retryable fault (simulated memory pressure, a busy device): the
+    serving session's bounded retry-with-backoff handles these; anything
+    else propagates."""
+
+
+# ---------------------------------------------------------------------------
+# corruption
+# ---------------------------------------------------------------------------
+
+def flip_bit(data: bytes, bit: int) -> bytes:
+    """Return a copy of ``data`` with one bit flipped (``bit`` indexes the
+    whole payload, LSB-first within each byte)."""
+    if not 0 <= bit < 8 * len(data):
+        raise ValueError(f"bit {bit} out of range for {len(data)} bytes")
+    buf = bytearray(data)
+    buf[bit // 8] ^= 1 << (bit % 8)
+    return bytes(buf)
+
+
+def flip_bits(data: bytes, seed: int, n: int = 1) -> tuple[bytes, list[int]]:
+    """Flip ``n`` distinct seeded-random bits; returns the corrupted copy
+    and the flipped bit positions (for reproduction in failure reports)."""
+    rng = np.random.default_rng(seed)
+    total = 8 * len(data)
+    if total == 0:
+        return data, []
+    n = min(n, total)
+    positions = sorted(
+        int(p) for p in rng.choice(total, size=n, replace=False)
+    )
+    out = data
+    for p in positions:
+        out = flip_bit(out, p)
+    return out, positions
+
+
+def truncate(data: bytes, keep: int) -> bytes:
+    """Return the first ``keep`` bytes of ``data`` (a torn write / partial
+    download)."""
+    if not 0 <= keep <= len(data):
+        raise ValueError(f"keep={keep} out of range for {len(data)} bytes")
+    return data[:keep]
+
+
+def seeded_truncation(data: bytes, seed: int) -> tuple[bytes, int]:
+    """Truncate at a seeded-random point strictly inside the payload."""
+    rng = np.random.default_rng(seed)
+    keep = int(rng.integers(0, max(len(data), 1)))
+    return truncate(data, keep), keep
+
+
+class PoisonedDelta:
+    """Stand-in for a user delta whose bytes fail integrity checks at
+    decode time: every attribute access beyond the generation stamp
+    raises ``core.framing.IntegrityError``, so any decode path
+    (``hydrate`` / ``tiles`` / ``reconstruct``) faults exactly where a
+    CRC-failing delta loaded lazily from storage would."""
+
+    def __init__(self, generation: int, reason: str) -> None:
+        self.codebook_generation = generation
+        self._reason = reason
+
+    def __getattr__(self, name: str):
+        from ..core.framing import IntegrityError
+
+        raise IntegrityError(self._reason)
+
+
+def poison_user(
+    store, user_id: str, reason: str = "injected delta corruption"
+) -> None:
+    """Deterministically corrupt one user in a ``ForestStore``: their
+    delta is replaced with a ``PoisonedDelta`` and every cached decode
+    artifact for them is dropped, so the next decode attempt raises a
+    typed ``IntegrityError`` — the fault ``ForestServer.serve_safe``
+    quarantines."""
+    if user_id not in store._deltas:
+        raise KeyError(f"unknown user {user_id!r}")
+    gen = store._deltas[user_id].codebook_generation
+    store._deltas[user_id] = PoisonedDelta(gen, reason)
+    store._hydrated.pop(user_id, None)
+    store._tile_counts = {
+        k: v for k, v in store._tile_counts.items() if k[0] != user_id
+    }
+    store.cache.invalidate_user(user_id)
+    if store.arena is not None:
+        store.arena.invalidate(user_id)
+    store.version += 1
+    store._user_versions[user_id] = store.version
+
+
+# ---------------------------------------------------------------------------
+# crash injection
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CrashSchedule:
+    """Deterministic crash injector for journaled operations.
+
+    Pass an instance as the ``on_step`` hook of ``lifecycle.recluster`` /
+    ``resume_recluster``; each call records the step name in ``steps`` and
+    raises ``InjectedCrash`` when the step's NAME or 0-based INDEX appears
+    in ``fail_at`` (each trigger fires once, so a resumed run sails past
+    the crash point it already took)."""
+
+    fail_at: tuple = ()
+    steps: list = field(default_factory=list)
+    _fired: set = field(default_factory=set)
+
+    def __call__(self, name: str) -> None:
+        idx = len(self.steps)
+        self.steps.append(name)
+        for key in (name, idx):
+            if key in self.fail_at and key not in self._fired:
+                self._fired.add(key)
+                raise InjectedCrash(
+                    f"injected crash at step {idx} ({name})"
+                )
+
+
+def record_steps(run) -> list[str]:
+    """Run ``run(on_step)`` with a no-crash schedule and return the step
+    names it took — the crash points a crash-at-every-step sweep replays."""
+    sched = CrashSchedule()
+    run(sched)
+    return list(sched.steps)
+
+
+# ---------------------------------------------------------------------------
+# transient faults
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TransientFaults:
+    """Callable that raises ``TransientError`` on its first ``fail_first``
+    invocations, then succeeds forever — install as
+    ``TileArena.admission_fault`` to simulate admission failures under
+    memory pressure and exercise the serving session's bounded
+    retry-with-backoff."""
+
+    fail_first: int = 1
+    calls: int = 0
+
+    def __call__(self, *_args) -> None:
+        self.calls += 1
+        if self.calls <= self.fail_first:
+            raise TransientError(
+                f"injected transient fault ({self.calls}/{self.fail_first})"
+            )

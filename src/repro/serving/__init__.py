@@ -10,22 +10,25 @@ request batch into an explicit plan/execute IR —
     preds = server.execute(plan, X)       # pack -> gather -> kernel ->
                                           # finalize
 
-The legacy entry points (``launch.serve_forest.serve_compressed_forest``,
-``launch.serve_store.serve_store_batch``) are deprecated shims over this
-API; ``core.compressed_predict.predict_compressed`` remains the pure
+``serve_safe`` is the fault-isolating variant (ISSUE 6): per-request
+typed statuses, quarantine of integrity-failing users, bounded retry +
+degradation on transient arena faults.  The PR 1-3 legacy entry points
+(``serve_compressed_forest``, ``serve_store_batch``) have been removed;
+``core.compressed_predict.predict_compressed`` remains the pure
 decode-side reference oracle every engine is verified against.
 """
 
 from .cache import PlanCache
 from .pack import iter_heap_tiles, pad_heap_width, tree_to_heap
 from .plan import ENGINE_BLOCKS, EngineChoice, ServePlan, choose_engine
-from .server import ForestServer, SingleForestStore
+from .server import ForestServer, RequestStatus, SingleForestStore
 
 __all__ = [
     "ENGINE_BLOCKS",
     "EngineChoice",
     "ForestServer",
     "PlanCache",
+    "RequestStatus",
     "ServePlan",
     "SingleForestStore",
     "choose_engine",

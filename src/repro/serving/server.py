@@ -3,8 +3,8 @@ tentpole).
 
 One public API replaces the three divergent entry points PR 1-3 grew
 (``predict_compressed`` stays as the pure decode-side reference oracle;
-``serve_compressed_forest`` / ``serve_store_batch`` become deprecated
-shims over this class):
+the ``serve_compressed_forest`` / ``serve_store_batch`` shims that
+bridged PR 1-3 callers have since been removed):
 
     server = ForestServer(store)            # fleet session
     plan = server.plan(requests)            # host-only: grouping, sort,
@@ -12,6 +12,8 @@ shims over this class):
     preds = server.execute(plan, X)         # pack -> gather -> kernel ->
                                             # finalize
     server.serve(requests)                  # plan + execute convenience
+    server.serve_safe(requests)             # fault-isolating serve:
+                                            # per-user typed statuses
 
 The session owns the store, its device ``TileArena``, the decoded
 ``TileCache``, and a ``PlanCache`` that memoizes plans AND arena-gathered
@@ -22,10 +24,20 @@ covers, so re-registering, migrating, or evicting user A drops only the
 entries containing A; a warm session crossing a codebook migration keeps
 serving untouched users from cache.  Single-forest serving is a one-user
 session (``ForestServer.from_forest(...)``).
+
+Graceful degradation (ISSUE 6): ``serve_safe`` QUARANTINES users whose
+deltas fail integrity checks or entropy decode (typed per-user status,
+healthy users in the same batch still served), retries transient arena
+admission faults with bounded exponential backoff, and — when retries
+exhaust — degrades the batch to the arena-free ``simple`` engine instead
+of failing it.  ``stats()["health"]`` surfaces the quarantine set,
+failure counters, and the store's recluster-journal state.
 """
 from __future__ import annotations
 
+import time
 from collections import Counter
+from dataclasses import dataclass
 from typing import Sequence
 
 import numpy as np
@@ -33,9 +45,27 @@ import numpy as np
 from ..store.runtime import ForestStore, TileCache, make_schema_arena
 from . import engines
 from .cache import PlanCache
-from .plan import ServePlan, build_plan
+from .plan import ENGINE_BLOCKS, ServePlan, build_plan
 
 Request = tuple[str, np.ndarray]
+
+
+@dataclass
+class RequestStatus:
+    """Per-request outcome of a fault-isolating ``serve_safe`` batch.
+
+    ``status`` is ``"ok"`` (``prediction`` holds the result, identical to
+    what ``serve`` would return) or ``"quarantined"`` (``prediction`` is
+    ``None`` and ``detail`` carries the decode/integrity failure that
+    sidelined the user).  ``degraded`` is True when the batch fell back
+    to the arena-free simple engine after transient-fault retries
+    exhausted — the prediction is still exact, only slower."""
+
+    user_id: str
+    status: str
+    prediction: np.ndarray | None = None
+    detail: str = ""
+    degraded: bool = False
 
 
 class SingleForestStore(ForestStore):
@@ -109,7 +139,7 @@ class SingleForestStore(ForestStore):
         self._check(user_id)
         return self.version
 
-    def drift_stats(self) -> dict | None:
+    def drift_stats(self, exclude: tuple = ()) -> dict | None:
         """No fleet codebook, hence no codebook lifecycle to monitor."""
         return None
 
@@ -134,11 +164,22 @@ class ForestServer:
         store: ForestStore,
         plan_cache_size: int = 64,
         interpret: bool | None = None,
+        max_retries: int = 3,
+        retry_backoff_s: float = 0.01,
     ) -> None:
         self.store = store
         self.plan_cache = PlanCache(plan_cache_size)
         self.interpret = interpret
         self.engine_counts: Counter[str] = Counter()
+        # graceful degradation (ISSUE 6): quarantine registry + retry
+        # policy + health counters, surfaced via stats()["health"]
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        # user -> {"reason", "user_version": version at quarantine time}
+        self._quarantined: dict[str, dict] = {}
+        self.integrity_failures = 0
+        self.transient_retries = 0
+        self.degraded_batches = 0
 
     @classmethod
     def from_forest(
@@ -320,8 +361,8 @@ class ForestServer:
         block_obs: int | None = None,
         interpret: bool | None = None,
     ) -> list[np.ndarray]:
-        """plan + execute in one call (what the deprecated shims route
-        through)."""
+        """plan + execute in one call.  Raises on any per-user fault —
+        ``serve_safe`` is the fault-isolating variant."""
         if not requests:
             return []
         plan = self.plan(
@@ -331,6 +372,145 @@ class ForestServer:
         return self.execute(
             plan, [x for _, x in requests], interpret=interpret
         )
+
+    # ---------------- graceful degradation (ISSUE 6) ----------------------
+    @property
+    def quarantined_users(self) -> list[str]:
+        """Users currently sidelined by ``serve_safe`` (sorted)."""
+        return sorted(self._quarantined)
+
+    def release_quarantine(self, user_id: str) -> bool:
+        """Manually lift a user's quarantine (e.g. after repairing their
+        delta out of band).  Returns True if the user was quarantined.
+        ``serve_safe`` re-probes them on the next batch."""
+        return self._quarantined.pop(user_id, None) is not None
+
+    def _quarantine(self, user_id: str, exc: Exception) -> None:
+        from ..core.framing import FramingError
+
+        self.integrity_failures += 1
+        self._quarantined[user_id] = {
+            "reason": f"{type(exc).__name__}: {exc}",
+            "kind": (
+                "integrity" if isinstance(exc, FramingError) else "decode"
+            ),
+            "user_version": self.store.user_version(user_id),
+        }
+
+    def _refresh_quarantine(self) -> None:
+        """Release quarantined users whose delta changed since quarantine
+        — a re-registered or migrated delta may be healthy again, and the
+        next ``serve_safe`` batch re-probes it."""
+        for u in list(self._quarantined):
+            if u not in self.store:
+                del self._quarantined[u]
+            elif (
+                self.store.user_version(u)
+                != self._quarantined[u]["user_version"]
+            ):
+                del self._quarantined[u]
+
+    def _probe_block_trees(self, engine: str | None) -> int:
+        """Tree-block size the health probe decodes with — matched to the
+        engine the batch will run under, so the probe's decoded tiles land
+        in the same ``TileCache`` entries the engine reads (the probe is
+        then warm-up, not extra work)."""
+        name = engine or (
+            "simple" if self.store.arena is None else "pipelined"
+        )
+        return ENGINE_BLOCKS.get(name, (8, 128))[0]
+
+    def _probe_user(self, user_id: str, block_trees: int) -> Exception | None:
+        """Decode one user's tiles end to end (entropy decode included);
+        returns the exception on failure.  ``KeyError`` (unknown user) is
+        a caller bug, not a data fault, and propagates."""
+        try:
+            self.store.tiles(user_id, block_trees)
+            return None
+        except KeyError:
+            raise
+        except Exception as e:  # noqa: BLE001 — any decode fault
+            # quarantines (FramingError, EOF in entropy decode, shape
+            # mismatches from logically-corrupt streams, ...)
+            return e
+
+    def _serve_with_retry(
+        self, requests: Sequence[Request], **kwargs
+    ) -> tuple[list[np.ndarray], bool]:
+        """``serve`` with bounded exponential backoff on transient arena
+        admission faults; when retries exhaust, degrade the batch to the
+        arena-free ``simple`` engine (exact result, no device residency)
+        rather than failing it.  Returns ``(predictions, degraded)``."""
+        from ..runtime.chaos import TransientError
+
+        for attempt in range(self.max_retries + 1):
+            try:
+                return self.serve(requests, **kwargs), False
+            except TransientError:
+                self.transient_retries += 1
+                if attempt < self.max_retries:
+                    time.sleep(self.retry_backoff_s * (2 ** attempt))
+        self.degraded_batches += 1
+        kwargs = dict(kwargs)
+        kwargs["engine"] = "simple"
+        return self.serve(requests, **kwargs), True
+
+    def serve_safe(
+        self,
+        requests: Sequence[Request],
+        engine: str | None = None,
+        block_trees: int | None = None,
+        block_obs: int | None = None,
+        interpret: bool | None = None,
+    ) -> list[RequestStatus]:
+        """Fault-isolating ``serve``: one typed ``RequestStatus`` per
+        request, in request order.
+
+        Users whose deltas fail integrity checks or entropy decode are
+        QUARANTINED — their requests come back ``status="quarantined"``
+        with the failure in ``detail``, while every healthy user in the
+        batch is served normally (one bad delta must not fail the
+        batch).  Quarantine is sticky across batches until the user's
+        delta changes (re-registration or migration bumps their registry
+        version, triggering a re-probe) or ``release_quarantine``.
+        Transient arena admission faults are retried with exponential
+        backoff; if they persist, the batch degrades to the arena-free
+        simple engine (exact predictions, no device residency) instead
+        of failing."""
+        if not requests:
+            return []
+        self._refresh_quarantine()
+        probe_bt = block_trees or self._probe_block_trees(engine)
+        for u in dict.fromkeys(u for u, _ in requests):
+            if u in self._quarantined:
+                continue
+            exc = self._probe_user(u, probe_bt)
+            if exc is not None:
+                self._quarantine(u, exc)
+        healthy = [
+            (u, x) for u, x in requests if u not in self._quarantined
+        ]
+        preds: list[np.ndarray] = []
+        degraded = False
+        if healthy:
+            preds, degraded = self._serve_with_retry(
+                healthy, engine=engine, block_trees=block_trees,
+                block_obs=block_obs, interpret=interpret,
+            )
+        it = iter(preds)
+        out: list[RequestStatus] = []
+        for u, _ in requests:
+            if u in self._quarantined:
+                out.append(RequestStatus(
+                    user_id=u, status="quarantined",
+                    detail=self._quarantined[u]["reason"],
+                ))
+            else:
+                out.append(RequestStatus(
+                    user_id=u, status="ok", prediction=next(it),
+                    degraded=degraded,
+                ))
+        return out
 
     def predict(
         self, x_binned: np.ndarray, user_id: str | None = None, **kwargs
@@ -351,14 +531,38 @@ class ForestServer:
         """One dict for admission-control dashboards: arena occupancy,
         tile-cache per-user hit rates, plan-cache hit/miss counts, engine
         usage, the store's codebook-lifecycle drift summary (generation +
-        fallback-cluster fraction — ``None`` for single-forest sessions),
-        and the store's lossy report when quantization is on."""
+        fallback-cluster fraction — ``None`` for single-forest sessions;
+        quarantined users are EXCLUDED from drift accounting, not counted
+        as fallback users), the store's lossy report when quantization is
+        on, and the ``health`` section: quarantine set, integrity/retry/
+        degradation counters, and the recluster journal state when a
+        journaled lifecycle operation has run."""
         arena = self.store.arena
+        journal = getattr(self.store, "journal", None)
         return {
             "engine_counts": dict(self.engine_counts),
             "plan_cache": self.plan_cache.stats(),
             "tile_cache": self.store.cache.stats(),
             "arena": arena.stats() if arena is not None else None,
-            "store": self.store.drift_stats(),
+            "store": self.store.drift_stats(
+                exclude=tuple(sorted(self._quarantined))
+            ),
             "lossy": getattr(self.store, "lossy", None),
+            "health": {
+                "n_quarantined": len(self._quarantined),
+                "quarantined": {
+                    u: {
+                        "reason": info["reason"], "kind": info["kind"],
+                    }
+                    for u, info in sorted(self._quarantined.items())
+                },
+                "integrity_failures": self.integrity_failures,
+                "transient_retries": self.transient_retries,
+                "degraded_batches": self.degraded_batches,
+                "max_retries": self.max_retries,
+                "retry_backoff_s": self.retry_backoff_s,
+                "journal": (
+                    journal.summary() if journal is not None else None
+                ),
+            },
         }

@@ -19,17 +19,20 @@ from .codebook import SharedCodebook, SharedComponent, build_shared_codebook
 from .delta import UserDelta, encode_user_delta, hydrate, reconstruct_user
 from .fleet import make_drifted_fleet, make_request_batch, make_synthetic_fleet
 from .lifecycle import (
+    MigrationJournal,
     ReclusterResult,
     RemapTable,
     drift_report,
     migrate_user,
     migrate_users,
     recluster,
+    resume_recluster,
 )
 from .runtime import ForestStore, TileCache, build_store
 
 __all__ = [
     "ForestStore",
+    "MigrationJournal",
     "ReclusterResult",
     "RemapTable",
     "SharedCodebook",
@@ -49,4 +52,5 @@ __all__ = [
     "migrate_users",
     "recluster",
     "reconstruct_user",
+    "resume_recluster",
 ]

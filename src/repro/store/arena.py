@@ -97,6 +97,10 @@ class TileArena:
         self.evictions = 0
         self.gathers = 0
         self.epoch = 0  # bumped on any structural change (see module doc)
+        # fault-injection hook: when set, called with the cold users'
+        # ids at the top of admit_many, BEFORE any state mutates — see
+        # runtime.chaos.TransientFaults and ForestServer's retry path
+        self.admission_fault = None
 
     # ---------------- bookkeeping -----------------------------------------
     def __contains__(self, user_id: str) -> bool:
@@ -215,6 +219,12 @@ class TileArena:
         just touched."""
         import jax.numpy as jnp
 
+        if self.admission_fault is not None:
+            # fault-injection hook (runtime.chaos.TransientFaults): raises
+            # TransientError BEFORE any arena state mutates, modeling a
+            # failed device upload — the serving retry path depends on
+            # admission being all-or-nothing
+            self.admission_fault([u for u, _, _ in items])
         fused: list[tuple[str, np.ndarray, np.ndarray, int]] = []
         for user_id, tiles, max_depth in items:
             if user_id in self._runs:

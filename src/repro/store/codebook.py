@@ -41,7 +41,14 @@ from ..core.stats import (
     var_name_counts,
 )
 from ..core.tree import Forest, ForestMeta
-from ..core.framing import read_arr, write_arr
+from ..core.framing import (
+    check_crc,
+    expect_magic,
+    read_arr,
+    read_struct,
+    with_crc,
+    write_arr,
+)
 
 _MAGIC = b"RFS1"
 
@@ -164,23 +171,25 @@ class SharedCodebook:
             _write_component(out, c)
         _write_component(out, self.fits_comp)
         write_arr(out, self.fleet_fit_values.astype(np.float64))
-        return out.getvalue()
+        return with_crc(out.getvalue())
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "SharedCodebook":
-        """Parse one RFS1 frame (normative spec: docs/format.md)."""
-        inp = io.BytesIO(data)
-        assert inp.read(4) == _MAGIC, "bad shared-codebook magic"
-        gen, d, is_reg, n_classes, t_max, n_obs = struct.unpack(
-            "<HIBHHI", inp.read(15)
+        """Parse one RFS1 frame (normative spec: docs/format.md).  The
+        CRC32 trailer is verified when present; corruption raises a typed
+        ``core.framing.IntegrityError`` / ``TruncatedFrameError``."""
+        inp = io.BytesIO(check_crc(data, "RFS1 shared codebook"))
+        expect_magic(inp, _MAGIC, "RFS1 shared codebook")
+        gen, d, is_reg, n_classes, t_max, n_obs = read_struct(
+            inp, "<HIBHHI", "RFS1 header"
         )
         n_bins = read_arr(inp).astype(np.int32)
         categorical = read_arr(inp).astype(bool)
         vars_comp = _read_component(inp)
-        (ns,) = struct.unpack("<H", inp.read(2))
+        (ns,) = read_struct(inp, "<H", "RFS1 split-component count")
         splits_comp = {}
         for _ in range(ns):
-            (v,) = struct.unpack("<H", inp.read(2))
+            (v,) = read_struct(inp, "<H", "RFS1 split variable id")
             splits_comp[v] = _read_component(inp)
         fits_comp = _read_component(inp)
         fleet_fit_values = read_arr(inp).astype(np.float64)
@@ -217,7 +226,9 @@ def _write_component(out: io.BytesIO, c: SharedComponent) -> None:
 
 
 def _read_component(inp: io.BytesIO) -> SharedComponent:
-    is_arith, nk, alphabet = struct.unpack("<BHI", inp.read(7))
+    is_arith, nk, alphabet = read_struct(
+        inp, "<BHI", "RFS1 component header"
+    )
     comp = SharedComponent(
         "arithmetic" if is_arith else "huffman", alphabet
     )

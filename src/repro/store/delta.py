@@ -50,7 +50,16 @@ from ..core.stats import (
     split_counts,
     var_name_counts,
 )
-from ..core.framing import read_arr, read_bytes, write_arr, write_bytes
+from ..core.framing import (
+    check_crc,
+    expect_magic,
+    read_arr,
+    read_bytes,
+    read_struct,
+    with_crc,
+    write_arr,
+    write_bytes,
+)
 from ..core.tree import Forest
 from ..core.zaks import zaks_encode
 from .codebook import (
@@ -135,23 +144,25 @@ class UserDelta:
         _write_delta_component(out, self.fits_dc)
         write_arr(out, self.fit_map.astype(np.int32))
         write_arr(out, self.extra_fit_values.astype(np.float64))
-        return out.getvalue()
+        return with_crc(out.getvalue())
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "UserDelta":
-        """Parse one RFD1 frame (normative spec: docs/format.md)."""
-        inp = io.BytesIO(data)
-        assert inp.read(4) == _MAGIC, "bad user-delta magic"
-        gen, n_trees, max_depth, n_obs, zbits = struct.unpack(
-            "<HIHII", inp.read(16)
+        """Parse one RFD1 frame (normative spec: docs/format.md).  The
+        CRC32 trailer is verified when present; corruption raises a typed
+        ``core.framing.IntegrityError`` / ``TruncatedFrameError``."""
+        inp = io.BytesIO(check_crc(data, "RFD1 user delta"))
+        expect_magic(inp, _MAGIC, "RFD1 user delta")
+        gen, n_trees, max_depth, n_obs, zbits = read_struct(
+            inp, "<HIHII", "RFD1 header"
         )
         zaks_lengths = read_arr(inp).astype(np.int32)
         zaks_payload = read_bytes(inp)
         vars_dc = _read_delta_component(inp)
-        (ns,) = struct.unpack("<H", inp.read(2))
+        (ns,) = read_struct(inp, "<H", "RFD1 split-component count")
         splits_dc = {}
         for _ in range(ns):
-            (v,) = struct.unpack("<H", inp.read(2))
+            (v,) = read_struct(inp, "<H", "RFD1 split variable id")
             splits_dc[v] = _read_delta_component(inp)
         fits_dc = _read_delta_component(inp)
         fit_map = read_arr(inp).astype(np.int64)
@@ -182,10 +193,10 @@ def _write_delta_component(out: io.BytesIO, c: DeltaComponent) -> None:
 
 
 def _read_delta_component(inp: io.BytesIO) -> DeltaComponent:
-    (is_arith,) = struct.unpack("<B", inp.read(1))
+    (is_arith,) = read_struct(inp, "<B", "RFD1 component coder tag")
     coder = "arithmetic" if is_arith else "huffman"
     kid_to_ref = read_arr(inp).astype(np.int16)
-    (nl,) = struct.unpack("<H", inp.read(2))
+    (nl,) = read_struct(inp, "<H", "RFD1 local-cluster count")
     local_lengths, local_freqs = [], []
     for _ in range(nl):
         tab = read_arr(inp)
@@ -193,10 +204,10 @@ def _read_delta_component(inp: io.BytesIO) -> DeltaComponent:
             local_freqs.append(tab.astype(np.int64))
         else:
             local_lengths.append(tab.astype(np.int32))
-    (nstr,) = struct.unpack("<H", inp.read(2))
+    (nstr,) = read_struct(inp, "<H", "RFD1 stream count")
     refs, n_symbols, streams = [], [], []
     for _ in range(nstr):
-        ref, n = struct.unpack("<hI", inp.read(6))
+        ref, n = read_struct(inp, "<hI", "RFD1 stream header")
         refs.append(ref)
         n_symbols.append(n)
         streams.append(read_bytes(inp))

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import io
+import os
 import struct
 import time
 from dataclasses import dataclass, field
@@ -48,10 +49,19 @@ from typing import Sequence
 import numpy as np
 
 from ..core.framing import (
+    IntegrityError,
+    check_crc,
+    expect_magic,
     read_arr,
+    read_bytes,
+    read_struct,
     read_u16,
+    read_u32,
+    with_crc,
     write_arr,
+    write_bytes,
     write_u16,
+    write_u32,
 )
 from ..core.stats import (
     alpha_fits,
@@ -135,7 +145,9 @@ def user_fallback_report(store: ForestStore, user_id: str) -> dict:
 
 
 def drift_report(
-    store: ForestStore, recluster_threshold: float = 0.2
+    store: ForestStore,
+    recluster_threshold: float = 0.2,
+    exclude: Sequence[str] = (),
 ) -> dict:
     """The codebook drift monitor: how far the fleet has moved from the
     codebook it was clustered for.
@@ -144,8 +156,15 @@ def drift_report(
     the delta bytes those fallbacks cost against the fleet-codebook
     baseline (``fallback_overhead_fraction`` of all delta bytes), and
     ``recommend_recluster`` once the fallback user fraction crosses
-    ``recluster_threshold``."""
-    users = store.user_ids
+    ``recluster_threshold``.
+
+    ``exclude`` names users to leave out of the accounting entirely —
+    the serving layer passes its quarantined users here, since a delta
+    that fails integrity checks cannot be decoded for fallback
+    accounting (they are counted in ``n_excluded_users``, not treated as
+    fallback users)."""
+    excluded = {u for u in exclude if u in store.user_ids}
+    users = [u for u in store.user_ids if u not in excluded]
     per_user = {u: user_fallback_report(store, u) for u in users}
     delta_bytes = {u: len(store.delta(u).to_bytes()) for u in users}
     n_fallback = sum(1 for r in per_user.values() if r["uses_fallback"])
@@ -159,6 +178,7 @@ def drift_report(
     frac = n_fallback / len(users) if users else 0.0
     return {
         "n_users": len(users),
+        "n_excluded_users": len(excluded),
         "codebook_generation": current,
         "generations": store.generations,
         "n_pending_migration": pending,
@@ -225,16 +245,18 @@ class RemapTable:
             write_u16(out, v)
             write_arr(out, m.astype(np.int32))
         write_arr(out, self.fits_map.astype(np.int32))
-        return out.getvalue()
+        return with_crc(out.getvalue())
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "RemapTable":
-        """Parse one RFM1 frame (normative spec: docs/format.md)."""
-        inp = io.BytesIO(data)
-        assert inp.read(4) == _REMAP_MAGIC, "bad remap-table magic"
+        """Parse one RFM1 frame (normative spec: docs/format.md).  The
+        CRC32 trailer is verified when present; corruption raises a typed
+        ``core.framing.IntegrityError`` / ``TruncatedFrameError``."""
+        inp = io.BytesIO(check_crc(data, "RFM1 remap table"))
+        expect_magic(inp, _REMAP_MAGIC, "RFM1 remap table")
         old_gen = read_u16(inp)
         new_gen = read_u16(inp)
-        (prefix,) = struct.unpack("<B", inp.read(1))
+        (prefix,) = read_struct(inp, "<B", "RFM1 fit-table-prefix flag")
         vars_map = read_arr(inp).astype(np.int32)
         splits_map = {}
         for _ in range(read_u16(inp)):
@@ -675,6 +697,188 @@ def migrate_users(
 
 
 # ---------------------------------------------------------------------------
+# crash-safe migration journal (ISSUE 6 tentpole)
+# ---------------------------------------------------------------------------
+
+_JOURNAL_MAGIC = b"RFJ1"
+
+#: journal state machine: ``idle`` (nothing logged) -> ``built``
+#: (successor codebook + remap constructed and serialized into the
+#: journal) -> ``installed`` (codebook installed in the store; per-user
+#: migration in flight) -> ``committed`` (every user migrated; GC safe).
+_JOURNAL_STATES = ("idle", "built", "installed", "committed")
+
+
+@dataclass
+class MigrationJournal:
+    """Write-ahead journal making ``recluster`` crash-safe.
+
+    Every state transition of a recluster run is logged BEFORE the store
+    mutation it describes takes effect, so a crash at any point leaves
+    enough information to finish (roll forward) or undo (roll back) the
+    run via ``resume_recluster``:
+
+    * ``log_built`` serializes the successor codebook and remap table
+      into the journal — a crash after build never repeats the expensive
+      fleet-scale clustering.
+    * ``log_migrate_intent`` records a user's PRE-migration delta bytes
+      before their delta is replaced — a crash mid-migration rolls the
+      user back to those exact bytes, then re-migrates.
+    * ``log_migrate_commit`` marks the user durably migrated.
+    * ``log_committed`` marks the whole run complete; only after this may
+      superseded codebook generations be garbage-collected.
+
+    With ``path`` set, every transition atomically rewrites the journal
+    file (write-to-temp + ``os.replace``), so the journal survives
+    process crashes, not just injected ones.  Serializes as one RFJ1
+    frame with a CRC32 trailer (docs/format.md §8).
+    """
+
+    state: str = "idle"
+    mode: str = ""
+    old_generation: int = 0
+    new_generation: int = 0
+    codebook_bytes: bytes = b""
+    remap_bytes: bytes = b""
+    #: user -> {"intent": pre-migration delta bytes, "committed": bool,
+    #:          "status": migrate_user status once committed}
+    entries: dict[str, dict] = field(default_factory=dict)
+    path: str | None = None
+
+    # -- state transitions -------------------------------------------------
+
+    def log_built(
+        self, mode: str, codebook: SharedCodebook, remap: RemapTable
+    ) -> None:
+        self.mode = mode
+        self.old_generation = remap.old_generation
+        self.new_generation = remap.new_generation
+        self.codebook_bytes = codebook.to_bytes()
+        self.remap_bytes = remap.to_bytes()
+        self.state = "built"
+        self._persist()
+
+    def log_installed(self) -> None:
+        self.state = "installed"
+        self._persist()
+
+    def log_migrate_intent(self, user_id: str, delta_bytes: bytes) -> None:
+        e = self.entries.get(user_id)
+        if e is not None and e["committed"]:
+            return  # already durably migrated — keep the commit record
+        self.entries[user_id] = {
+            "intent": delta_bytes, "committed": False, "status": "",
+        }
+        self._persist()
+
+    def log_migrate_commit(self, user_id: str, status: str) -> None:
+        self.entries[user_id]["committed"] = True
+        self.entries[user_id]["status"] = status
+        self._persist()
+
+    def log_committed(self) -> None:
+        self.state = "committed"
+        self._persist()
+
+    @property
+    def uncommitted_users(self) -> list[str]:
+        """Users whose migration intent was logged but never committed —
+        the ones ``resume_recluster`` rolls back before re-migrating."""
+        return sorted(
+            u for u, e in self.entries.items() if not e["committed"]
+        )
+
+    def summary(self) -> dict:
+        """Compact journal status for ``ForestServer.stats()["health"]``."""
+        return {
+            "state": self.state,
+            "mode": self.mode,
+            "old_generation": self.old_generation,
+            "new_generation": self.new_generation,
+            "n_entries": len(self.entries),
+            "n_committed": sum(
+                1 for e in self.entries.values() if e["committed"]
+            ),
+            "uncommitted_users": self.uncommitted_users,
+        }
+
+    # -- persistence -------------------------------------------------------
+
+    def _persist(self) -> None:
+        if self.path is None:
+            return
+        tmp = f"{self.path}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(self.to_bytes())
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)
+
+    @classmethod
+    def load(cls, path: str) -> "MigrationJournal":
+        """Load a persisted journal; the loaded journal keeps persisting
+        to the same path."""
+        with open(path, "rb") as f:
+            j = cls.from_bytes(f.read())
+        j.path = path
+        return j
+
+    def to_bytes(self) -> bytes:
+        """Serialize as one RFJ1 frame (normative spec: docs/format.md)."""
+        out = io.BytesIO()
+        out.write(_JOURNAL_MAGIC)
+        out.write(struct.pack("<B", _JOURNAL_STATES.index(self.state)))
+        write_bytes(out, self.mode.encode("utf-8"))
+        write_u16(out, self.old_generation)
+        write_u16(out, self.new_generation)
+        write_bytes(out, self.codebook_bytes)
+        write_bytes(out, self.remap_bytes)
+        write_u32(out, len(self.entries))
+        for u, e in sorted(self.entries.items()):
+            write_bytes(out, u.encode("utf-8"))
+            out.write(struct.pack("<B", 1 if e["committed"] else 0))
+            write_bytes(out, e["status"].encode("utf-8"))
+            write_bytes(out, e["intent"])
+        return with_crc(out.getvalue())
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "MigrationJournal":
+        """Parse one RFJ1 frame (normative spec: docs/format.md)."""
+        inp = io.BytesIO(check_crc(data, "RFJ1 migration journal"))
+        expect_magic(inp, _JOURNAL_MAGIC, "RFJ1 migration journal")
+        (state_i,) = read_struct(inp, "<B", "RFJ1 state")
+        if state_i >= len(_JOURNAL_STATES):
+            raise IntegrityError(
+                f"RFJ1 journal has unknown state code {state_i}"
+            )
+        mode = read_bytes(inp).decode("utf-8")
+        old_gen = read_u16(inp)
+        new_gen = read_u16(inp)
+        codebook_bytes = read_bytes(inp)
+        remap_bytes = read_bytes(inp)
+        entries: dict[str, dict] = {}
+        for _ in range(read_u32(inp)):
+            u = read_bytes(inp).decode("utf-8")
+            (committed,) = read_struct(inp, "<B", "RFJ1 entry flag")
+            status = read_bytes(inp).decode("utf-8")
+            intent = read_bytes(inp)
+            entries[u] = {
+                "intent": intent,
+                "committed": bool(committed),
+                "status": status,
+            }
+        return cls(
+            state=_JOURNAL_STATES[state_i],
+            mode=mode,
+            old_generation=old_gen,
+            new_generation=new_gen,
+            codebook_bytes=codebook_bytes,
+            remap_bytes=remap_bytes,
+            entries=entries,
+        )
+
+
+# ---------------------------------------------------------------------------
 # the lifecycle operation
 # ---------------------------------------------------------------------------
 
@@ -697,6 +901,74 @@ class ReclusterResult:
     per_user: dict[str, dict]
 
 
+def _migrate_journaled(
+    store: ForestStore,
+    remap: RemapTable,
+    journal: MigrationJournal,
+    step,
+    seed: int,
+    verify: bool,
+) -> dict[str, dict]:
+    """The journaled per-user migration loop shared by ``recluster`` and
+    ``resume_recluster``: intent is logged BEFORE each user's delta is
+    replaced, commit AFTER — and superseded-generation GC happens only
+    once the whole run is journal-committed (never mid-flight, unlike
+    ``migrate_users``)."""
+    per_user: dict[str, dict] = {}
+    for u in store.user_ids:
+        already = journal.entries.get(u)
+        if already is not None and already["committed"]:
+            # durably migrated by a previous (crashed) attempt
+            n = len(store.delta(u).to_bytes())
+            per_user[u] = {
+                "status": already["status"] or "current",
+                "bytes_before": n,
+                "bytes": n,
+            }
+            continue
+        journal.log_migrate_intent(u, store.delta(u).to_bytes())
+        step(f"migrate:{u}")
+        per_user[u] = migrate_user(store, u, remap, seed=seed, verify=verify)
+        step(f"migrated:{u}")
+        journal.log_migrate_commit(u, per_user[u]["status"])
+    step("commit")
+    journal.log_committed()
+    step("gc")
+    store.drop_unreferenced_codebooks()
+    return per_user
+
+
+def _recluster_result(
+    store: ForestStore,
+    mode: str,
+    remap: RemapTable,
+    per_user: dict[str, dict],
+    bytes_before: int,
+    verified: bool,
+    t0: float,
+) -> ReclusterResult:
+    statuses = [r["status"] for r in per_user.values()]
+    n_pending = sum(
+        1 for u in store.user_ids
+        if store.delta(u).codebook_generation != remap.new_generation
+    )
+    return ReclusterResult(
+        mode=mode,
+        old_generation=remap.old_generation,
+        new_generation=remap.new_generation,
+        n_users=len(store.user_ids),
+        n_relabeled=statuses.count("relabeled"),
+        n_reencoded=statuses.count("reencoded"),
+        n_pending=n_pending,
+        bytes_before=bytes_before,
+        bytes_after=store.size_report()["total_bytes"],
+        verified_bit_exact=verified,
+        wall_time_s=time.perf_counter() - t0,
+        remap=remap,
+        per_user=per_user,
+    )
+
+
 def recluster(
     store: ForestStore,
     mode: str = "extend",
@@ -706,6 +978,8 @@ def recluster(
     chunk_size: int = 65536,
     migrate: bool = True,
     verify: bool = True,
+    journal: MigrationJournal | None = None,
+    on_step=None,
 ) -> ReclusterResult:
     """Re-run fleet-scale clustering and migrate the store onto the
     successor codebook generation, bit-exactly.
@@ -717,7 +991,18 @@ def recluster(
     ``migrate=False`` only the successor codebook is installed — call
     ``migrate_users`` to move deltas over incrementally; the old
     generation stays resident (and serialized) until its last delta
-    migrates."""
+    migrates.
+
+    Crash safety (ISSUE 6): every phase is logged to ``journal`` (a fresh
+    in-memory ``MigrationJournal`` when not given) before the store
+    mutation it describes, and superseded codebook generations are
+    garbage-collected strictly AFTER the journal commits — a crash at any
+    point leaves the old generation resident and ``resume_recluster``
+    able to roll the run forward (or roll uncommitted per-user
+    migrations back) to a bit-exact store.  ``on_step(name)`` is called
+    at each phase boundary (``build``, ``install``, ``migrate:<user>``,
+    ``migrated:<user>``, ``commit``, ``gc``) — the fault-injection
+    harness (``runtime.chaos.CrashSchedule``) hooks in here."""
     if mode not in ("extend", "full"):
         raise ValueError(f"unknown recluster mode {mode!r}")
     pending = {
@@ -733,36 +1018,102 @@ def recluster(
             "migration (lifecycle.migrate_users) before re-clustering "
             "again"
         )
+    step = on_step if on_step is not None else (lambda name: None)
+    if journal is None:
+        journal = MigrationJournal()
+    store.journal = journal
     t0 = time.perf_counter()
-    rep_before = store.size_report()
+    bytes_before = store.size_report()["total_bytes"]
     build = extend_codebook if mode == "extend" else rebuild_codebook
+    step("build")
     new, remap = build(
         store, k_max=k_max, seed=seed, engine=engine, chunk_size=chunk_size
     )
+    journal.log_built(mode, new, remap)
+    step("install")
     store.install_codebook(new)
+    journal.log_installed()
     per_user: dict[str, dict] = {}
     if migrate:
-        per_user = migrate_users(
-            store, store.user_ids, remap, seed=seed, verify=verify
+        per_user = _migrate_journaled(
+            store, remap, journal, step, seed, verify
         )
-    n_pending = sum(
-        1 for u in store.user_ids
-        if store.delta(u).codebook_generation != new.generation
+    return _recluster_result(
+        store, mode, remap, per_user, bytes_before,
+        bool(verify and migrate), t0,
     )
-    rep_after = store.size_report()
-    statuses = [r["status"] for r in per_user.values()]
-    return ReclusterResult(
-        mode=mode,
-        old_generation=remap.old_generation,
-        new_generation=new.generation,
-        n_users=len(store.user_ids),
-        n_relabeled=statuses.count("relabeled"),
-        n_reencoded=statuses.count("reencoded"),
-        n_pending=n_pending,
-        bytes_before=rep_before["total_bytes"],
-        bytes_after=rep_after["total_bytes"],
-        verified_bit_exact=bool(verify and migrate),
-        wall_time_s=time.perf_counter() - t0,
-        remap=remap,
-        per_user=per_user,
+
+
+def resume_recluster(
+    store: ForestStore,
+    journal: MigrationJournal,
+    seed: int = 0,
+    verify: bool = True,
+    on_step=None,
+) -> ReclusterResult:
+    """Finish (or undo) a recluster run that crashed mid-flight, from its
+    journal.  Idempotent: safe to call again after a crash DURING
+    resumption, and a no-op on an already-committed journal.
+
+    * state ``committed`` — the run finished; re-run the (idempotent)
+      superseded-generation GC and return.
+    * state ``built`` — the successor codebook and remap were journaled
+      but never installed: deserialize them from the journal (the
+      expensive clustering is NOT repeated), install, and migrate.
+    * state ``installed`` — migration was in flight: every user whose
+      intent was logged but never committed is ROLLED BACK to the exact
+      pre-migration delta bytes recorded in the journal (the old
+      codebook generation is guaranteed resident, because GC is deferred
+      until commit), then migration re-runs; already-committed users are
+      skipped via their journal record.
+    * state ``idle`` — nothing was logged before the crash; the run never
+      mutated the store, so there is nothing to resume (re-run
+      ``recluster``, passing the same journal).
+    """
+    step = on_step if on_step is not None else (lambda name: None)
+    store.journal = journal
+    t0 = time.perf_counter()
+    bytes_before = store.size_report()["total_bytes"]
+    if journal.state == "idle":
+        raise ValueError(
+            "journal is empty — the crashed run never mutated the store; "
+            "re-run recluster() instead of resuming"
+        )
+    remap = RemapTable.from_bytes(journal.remap_bytes)
+    if journal.state == "committed":
+        step("gc")
+        store.drop_unreferenced_codebooks()
+        per_user = {
+            u: {"status": e["status"] or "current"}
+            for u, e in journal.entries.items()
+        }
+        for u, r in per_user.items():
+            if u in store.user_ids:
+                n = len(store.delta(u).to_bytes())
+                r["bytes_before"] = n
+                r["bytes"] = n
+        return _recluster_result(
+            store, journal.mode, remap, per_user, bytes_before, False, t0
+        )
+    if journal.state == "built":
+        # crashed between build and install — roll the install forward
+        # from the journaled codebook bytes
+        if store.generation < journal.new_generation:
+            step("install")
+            store.install_codebook(
+                SharedCodebook.from_bytes(journal.codebook_bytes)
+            )
+        journal.log_installed()
+    # state == "installed": roll back every uncommitted migration to the
+    # exact pre-migration bytes, then re-migrate
+    for u in journal.uncommitted_users:
+        if u not in store.user_ids:
+            continue
+        intent = journal.entries[u]["intent"]
+        if store.delta(u).to_bytes() != intent:
+            step(f"rollback:{u}")
+            store.add_delta(u, UserDelta.from_bytes(intent))
+    per_user = _migrate_journaled(store, remap, journal, step, seed, verify)
+    return _recluster_result(
+        store, journal.mode, remap, per_user, bytes_before, verify, t0
     )

@@ -29,9 +29,13 @@ import numpy as np
 
 from ..core.forest_codec import CompressedForest
 from ..core.framing import (
+    IntegrityError,
+    check_crc,
+    expect_magic,
     read_bytes,
     read_u16,
     read_u32,
+    with_crc,
     write_bytes,
     write_u16,
     write_u32,
@@ -214,6 +218,9 @@ class ForestStore:
         self._user_versions: dict[str, int] = {}
         # store-level lossy report (set by build_store(lossy=...))
         self.lossy: dict | None = None
+        # crash-safe recluster journal (set by lifecycle.recluster /
+        # resume_recluster); surfaced through ForestServer.stats()["health"]
+        self.journal = None
         # device-resident fused-tile arena for the pipelined serving path;
         # None when the schema's fused code word would overflow 2**24 (the
         # serving driver then falls back to engine="simple")
@@ -430,28 +437,32 @@ class ForestStore:
             )
 
     # ---------------- drift observability ---------------------------------
-    def drift_stats(self) -> dict:
+    def drift_stats(self, exclude: tuple = ()) -> dict:
         """Codebook-lifecycle drift summary (generation, fallback-cluster
         fraction, fallback byte overhead) for dashboards —
         ``ForestServer.stats()`` surfaces this without reaching into store
-        internals.  Memoized per registry version: the underlying
-        ``drift_report`` re-serializes every delta, which a polling
-        dashboard must not pay per call.  Full report:
-        ``store.lifecycle.drift_report``."""
+        internals.  Memoized per (registry version, exclude set): the
+        underlying ``drift_report`` re-serializes every delta, which a
+        polling dashboard must not pay per call.  ``exclude`` names users
+        to drop from the accounting (the serving layer passes its
+        quarantined users — their deltas cannot be decoded).  Full
+        report: ``store.lifecycle.drift_report``."""
+        exclude = tuple(sorted(exclude))
         cached = getattr(self, "_drift_stats_cache", None)
-        if cached is not None and cached[0] == self.version:
+        if cached is not None and cached[0] == (self.version, exclude):
             return cached[1]
         from .lifecycle import drift_report
 
-        rep = drift_report(self)
+        rep = drift_report(self, exclude=exclude)
         stats = {
             "codebook_generation": rep["codebook_generation"],
             "generations": rep["generations"],
             "n_users": rep["n_users"],
+            "n_excluded_users": rep["n_excluded_users"],
             "fallback_user_fraction": rep["fallback_user_fraction"],
             "fallback_overhead_fraction": rep["fallback_overhead_fraction"],
         }
-        self._drift_stats_cache = (self.version, stats)
+        self._drift_stats_cache = ((self.version, exclude), stats)
         return stats
 
     # ---------------- sizes + serialization -------------------------------
@@ -494,17 +505,22 @@ class ForestStore:
         for user_id, delta in sorted(self._deltas.items()):
             write_bytes(out, user_id.encode("utf-8"))
             write_bytes(out, delta.to_bytes())
-        return out.getvalue()
+        return with_crc(out.getvalue())
 
     @classmethod
     def from_bytes(
         cls, data: bytes, tile_cache_trees: int = 4096
     ) -> "ForestStore":
-        """Parse one RFT1 frame (normative spec: docs/format.md)."""
-        inp = io.BytesIO(data)
-        assert inp.read(4) == _MAGIC, "bad store magic"
+        """Parse one RFT1 frame (normative spec: docs/format.md).  The
+        CRC32 trailer is verified when present; corruption raises a typed
+        ``core.framing.IntegrityError`` / ``TruncatedFrameError``."""
+        inp = io.BytesIO(check_crc(data, "RFT1 store"))
+        expect_magic(inp, _MAGIC, "RFT1 store")
         n_cb = read_u16(inp)
-        assert n_cb >= 1, "store frame must carry at least one codebook"
+        if n_cb < 1:
+            raise IntegrityError(
+                "RFT1 store frame must carry at least one codebook"
+            )
         codebooks = [
             SharedCodebook.from_bytes(read_bytes(inp)) for _ in range(n_cb)
         ]

@@ -302,14 +302,14 @@ class TestFusedAggregationKernel:
 
 class TestServeDriver:
     @pytest.mark.parametrize("task", ["classification", "regression"])
-    def test_streamed_serve_matches_predict_compressed(self, rng, task):
-        from repro.launch.serve_forest import serve_compressed_forest
+    def test_session_serve_matches_predict_compressed(self, rng, task):
+        from repro.serving import ForestServer
 
         forest = random_forest(seed=13, n_trees=13, max_depth=6, task=task)
         comp = compress_forest(forest)
         x = rng.integers(0, 16, size=(120, 5))
         ref = predict_compressed(comp, x)
-        got = serve_compressed_forest(comp, x, block_trees=5)
+        got = ForestServer.from_forest(comp).predict(x, block_trees=5)
         if task == "classification":
             assert np.array_equal(got, ref)  # integer votes: exact
         else:

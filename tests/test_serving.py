@@ -263,38 +263,15 @@ class TestPlanCacheInvalidation:
         assert stats["pack_hit_rate"] > 0
 
 
-class TestShimParity:
-    @pytest.mark.parametrize("engine", ["simple", "pipelined", "sharded"])
-    def test_serve_store_batch_deprecated_and_bit_exact(self, rng, engine):
-        from repro.launch.serve_store import serve_store_batch
+class TestShimsRemoved:
+    def test_legacy_entry_points_are_gone(self):
+        """The PR 4 deprecation shims' removal timeline has elapsed — the
+        names must no longer exist (stale callers should fail loudly at
+        import, not silently re-grow a second serving path)."""
+        from repro.launch import serve_forest, serve_store
 
-        store = build_store(small_fleet(n_users=4))
-        reqs = fleet_requests(store, rng, 5)
-        server = ForestServer(store)
-        want = server.serve(reqs, engine=engine)
-        with pytest.warns(DeprecationWarning, match="ForestServer"):
-            got = serve_store_batch(store, reqs, engine=engine)
-        for a, b in zip(want, got):
-            assert np.array_equal(a, b)  # bit-exact vs the session API
-
-    @pytest.mark.parametrize("task", ["classification", "regression"])
-    def test_serve_compressed_forest_deprecated_and_bit_exact(
-        self, rng, task
-    ):
-        from repro.launch.serve_forest import serve_compressed_forest
-
-        forest = random_forest(seed=5, n_trees=11, max_depth=5, task=task)
-        comp = compress_forest(forest)
-        x = rng.integers(0, 16, (40, 5)).astype(np.int32)
-        want = ForestServer.from_forest(comp).predict(x, block_trees=5)
-        with pytest.warns(DeprecationWarning, match="ForestServer"):
-            got = serve_compressed_forest(comp, x, block_trees=5)
-        assert np.array_equal(want, got)
-        ref = predict_compressed(comp, x)
-        if task == "classification":
-            assert np.array_equal(got, ref)
-        else:
-            np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+        assert not hasattr(serve_forest, "serve_compressed_forest")
+        assert not hasattr(serve_store, "serve_store_batch")
 
 
 class TestSingleForestSession:
@@ -371,7 +348,7 @@ class TestStatsAndPack:
         stats = server.stats()
         assert set(stats) == {
             "engine_counts", "plan_cache", "tile_cache", "arena", "store",
-            "lossy",
+            "lossy", "health",
         }
         assert sum(stats["engine_counts"].values()) == 2
         assert stats["plan_cache"]["pack_hit_rate"] > 0
@@ -380,6 +357,12 @@ class TestStatsAndPack:
         # ISSUE 5: drift is observable without reaching into the store
         assert stats["store"]["codebook_generation"] == 1
         assert stats["store"]["fallback_user_fraction"] == 0.0
+        # ISSUE 6: fault-tolerance counters, all quiet on a healthy fleet
+        health = stats["health"]
+        assert health["n_quarantined"] == 0
+        assert health["integrity_failures"] == 0
+        assert health["degraded_batches"] == 0
+        assert health["journal"] is None
 
     def test_canonical_pad_helper(self):
         from repro.launch.serve_store import _pad_heap_width

@@ -310,7 +310,7 @@ class TestSegmentedServing:
 
     @pytest.mark.parametrize("task", ["classification", "regression"])
     def test_ragged_batch_matches_per_user_predict(self, rng, task):
-        from repro.launch.serve_store import serve_store_batch
+        from repro.serving import ForestServer
 
         fleet = small_fleet(task, n_users=5)
         store = build_store(fleet)
@@ -319,7 +319,7 @@ class TestSegmentedServing:
             (users[i % len(users)], rng.integers(0, 12, (30 + 7 * i, 5)))
             for i in range(7)
         ]
-        preds = serve_store_batch(store, requests, block_trees=6)
+        preds = ForestServer(store).serve(requests, block_trees=6)
         assert len(preds) == len(requests)
         for (u, x), p in zip(requests, preds):
             ref = store.predict(u, x)
@@ -331,23 +331,22 @@ class TestSegmentedServing:
     def test_empty_batch(self):
         fleet = small_fleet(n_users=2)
         store = build_store(fleet)
-        from repro.launch.serve_store import serve_store_batch
+        from repro.serving import ForestServer
 
-        assert serve_store_batch(store, []) == []
+        assert ForestServer(store).serve([]) == []
 
     @pytest.mark.parametrize("task", ["classification", "regression"])
     def test_zero_row_requests(self, rng, task):
         """Zero-row requests (mid-batch AND batch-final) must come back as
         empty predictions without disturbing their neighbours."""
-        from repro.launch.serve_store import serve_store_batch
+        from repro.serving import ForestServer
 
         fleet = small_fleet(task, n_users=3)
         store = build_store(fleet)
         u = store.user_ids
         x = rng.integers(0, 12, (20, 5)).astype(np.int32)
         empty = np.zeros((0, 5), np.int32)
-        preds = serve_store_batch(
-            store,
+        preds = ForestServer(store).serve(
             [(u[0], x), (u[1], empty), (u[2], x), (u[0], empty)],
             block_trees=4,
         )
@@ -522,7 +521,7 @@ class TestServingEngines:
     @pytest.mark.parametrize("task", ["classification", "regression"])
     @pytest.mark.parametrize("engine", ["pipelined", "sharded"])
     def test_engines_match_simple_and_reference(self, rng, task, engine):
-        from repro.launch.serve_store import serve_store_batch
+        from repro.serving import ForestServer
 
         fleet = small_fleet(task, n_users=5)
         store = build_store(fleet)
@@ -531,8 +530,8 @@ class TestServingEngines:
             (users[i % len(users)], rng.integers(0, 12, (30 + 7 * i, 5)))
             for i in range(7)
         ]
-        got = serve_store_batch(store, requests, engine=engine)
-        ref = serve_store_batch(store, requests, engine="simple")
+        got = ForestServer(store).serve(requests, engine=engine)
+        ref = ForestServer(store).serve(requests, engine="simple")
         for (u, x), p, q in zip(requests, got, ref):
             exact = store.predict(u, x)
             if task == "classification":
@@ -544,15 +543,14 @@ class TestServingEngines:
 
     @pytest.mark.parametrize("engine", ["pipelined", "sharded"])
     def test_zero_row_requests_new_engines(self, rng, engine):
-        from repro.launch.serve_store import serve_store_batch
+        from repro.serving import ForestServer
 
         fleet = small_fleet(n_users=3)
         store = build_store(fleet)
         u = store.user_ids
         x = rng.integers(0, 12, (20, 5)).astype(np.int32)
         empty = np.zeros((0, 5), np.int32)
-        preds = serve_store_batch(
-            store,
+        preds = ForestServer(store).serve(
             [(u[0], x), (u[1], empty), (u[2], x), (u[0], empty)],
             engine=engine,
         )
@@ -561,13 +559,13 @@ class TestServingEngines:
             assert np.array_equal(preds[idx], store.predict(user, x))
 
     def test_unknown_engine_raises(self):
-        from repro.launch.serve_store import serve_store_batch
+        from repro.serving import ForestServer
 
         fleet = small_fleet(n_users=2)
         store = build_store(fleet)
         with pytest.raises(ValueError, match="engine"):
-            serve_store_batch(
-                store, [(store.user_ids[0], np.zeros((1, 5), np.int32))],
+            ForestServer(store).serve(
+                [(store.user_ids[0], np.zeros((1, 5), np.int32))],
                 engine="nope",
             )
 
@@ -656,12 +654,12 @@ class TestMixedDepthSharding:
         code_b, *_ = store.arena_pack(["deep"], block_trees=4)
         assert code_a.shape[1] == code_b.shape[1] == store.arena.h
 
-        from repro.launch.serve_store import serve_store_batch
+        from repro.serving import ForestServer
 
         x = rng.integers(0, 12, (15, 5)).astype(np.int32)
         reqs = [("shallow", x), ("deep", x)]
         for engine in ("pipelined", "sharded"):
-            preds = serve_store_batch(store, reqs, engine=engine)
+            preds = ForestServer(store).serve(reqs, engine=engine)
             for (u, xi), p in zip(reqs, preds):
                 assert np.array_equal(p, store.predict(u, xi)), engine
 
@@ -690,11 +688,11 @@ class TestArenaWidthShrink:
         assert store.arena.h < h_wide
         assert store.arena.max_depth == 3
         # surviving users still serve correctly at the shrunk width
-        from repro.launch.serve_store import serve_store_batch
+        from repro.serving import ForestServer
 
         x = rng.integers(0, 12, (12, 5)).astype(np.int32)
         reqs = [(u, x) for u in shallow]
-        for (u, xi), p in zip(reqs, serve_store_batch(
-            store, reqs, engine="pipelined"
+        for (u, xi), p in zip(reqs, ForestServer(store).serve(
+            reqs, engine="pipelined"
         )):
             assert np.array_equal(p, store.predict(u, xi))
