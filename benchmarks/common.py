@@ -2,6 +2,8 @@
 from __future__ import annotations
 
 import time
+from dataclasses import dataclass
+from typing import Sequence
 
 import numpy as np
 
@@ -65,3 +67,85 @@ def compression_row(forest) -> dict:
 
 def fmt_mb(b: float) -> str:
     return f"{b / 1e6:.3f}"
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant request traces (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TraceEvent:
+    """One arrival in a synthetic serving trace: which tenant asks for a
+    prediction batch of ``n_rows`` rows at absolute time ``t``."""
+
+    t: float
+    user_id: str
+    n_rows: int
+
+
+def poisson_trace(
+    user_ids: Sequence[str],
+    duration_s: float,
+    rate_per_s: float,
+    *,
+    rows_choices: Sequence[int] = (16, 32, 64),
+    popularity_skew: float = 1.1,
+    burst_factor: float = 1.0,
+    burst_period_s: float = 2.0,
+    burst_duty: float = 0.25,
+    seed: int = 0,
+) -> list[TraceEvent]:
+    """Seeded multi-tenant Poisson arrival trace for the scheduler
+    benchmarks — pure function of its arguments (no wall clock, no global
+    RNG), so two calls with the same seed replay the identical workload.
+
+    Arrivals are an (in)homogeneous Poisson process at ``rate_per_s``
+    mean arrivals/second, sampled by THINNING: candidates are drawn at
+    the peak rate and kept with probability rate(t)/peak.  With
+    ``burst_factor`` > 1 the rate alternates between a burst plateau
+    (``burst_factor`` × base, for ``burst_duty`` of each
+    ``burst_period_s`` window) and a complementary trough, keeping the
+    mean at ``rate_per_s`` — the bursty open-loop load SLO tests need.
+
+    Tenants are drawn Zipf-like: tenant rank r gets weight
+    r^-``popularity_skew`` (0 = uniform), matching the skewed popularity
+    that makes plan-cache reuse matter.  Row counts are drawn uniformly
+    from ``rows_choices``.
+    """
+    if not user_ids:
+        raise ValueError("poisson_trace needs at least one user id")
+    if rate_per_s <= 0 or duration_s <= 0:
+        return []
+    rng = np.random.default_rng(seed)
+    weights = np.arange(1, len(user_ids) + 1, dtype=np.float64) \
+        ** -float(popularity_skew)
+    weights /= weights.sum()
+    # burst plateau rate and trough rate with the same mean
+    bf = max(float(burst_factor), 1.0)
+    duty = min(max(float(burst_duty), 0.0), 1.0)
+    hi = rate_per_s * bf
+    lo = (
+        rate_per_s * (1.0 - bf * duty) / (1.0 - duty)
+        if duty < 1.0 else rate_per_s
+    )
+    lo = max(lo, 0.0)
+
+    def rate_at(t: float) -> float:
+        if bf <= 1.0 or duty in (0.0, 1.0):
+            return rate_per_s
+        return hi if (t % burst_period_s) < duty * burst_period_s else lo
+
+    events: list[TraceEvent] = []
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / hi)
+        if t >= duration_s:
+            break
+        if rng.random() * hi > rate_at(t):
+            continue  # thinned: candidate falls in the trough
+        events.append(TraceEvent(
+            t=t,
+            user_id=user_ids[int(rng.choice(len(user_ids), p=weights))],
+            n_rows=int(rng.choice(rows_choices)),
+        ))
+    return events

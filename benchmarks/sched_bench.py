@@ -1,0 +1,397 @@
+"""Continuous-batching scheduler benchmark (ISSUE 7 acceptance
+measurement).
+
+Three phases on a 100-user synthetic fleet:
+
+* **throughput** — a seeded Poisson trace is run through the scheduler
+  once to RECORD the micro-batches it forms; then the same batches are
+  timed through (a) the scheduler (submit + flush, pipelined executor,
+  plan overlap on) and (b) direct ``ForestServer.serve`` calls, one per
+  recorded batch — equal batch sizes by construction.  Acceptance:
+  scheduled serving sustains at least the PR 4 session rows/s
+  (``sched_vs_direct >= 1`` up to timer noise — the scheduler adds
+  queueing + batching bookkeeping, the overlap gives it back);
+* **latency** — the same trace replayed OPEN-LOOP under the wall clock
+  (arrivals paced, deadline trigger live): arrival-to-completion p50 /
+  p99 and the fraction of requests inside the SLO;
+* **lifecycle** — a drifted fleet served under the VIRTUAL clock while
+  an attached ``LifecycleDriver`` autonomously reclusters and migrates
+  rate-limited; every response is then checked bit-exact against
+  per-user ``predict_compressed`` (``silent_wrong_total`` must be 0,
+  ``n_reclusters`` must be >= 1).
+
+``--smoke`` (the CI gate) shrinks the trace, keeps the 100-user fleet,
+and ASSERTS: every scheduled prediction bit-exact vs direct
+``ForestServer.serve``, and plan-cache hit rate > 0 across the replayed
+trace.
+
+Writes machine-readable results to BENCH_sched.json (repo root).
+
+    PYTHONPATH=src python benchmarks/sched_bench.py [--smoke] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from common import poisson_trace
+
+
+def build_fleet_server(n_users, task, seed, drift=False):
+    from repro.serving import ForestServer
+    from repro.store import build_store, make_synthetic_fleet
+    from repro.store.fleet import make_drifted_fleet
+
+    if drift:
+        initial, late = make_drifted_fleet(
+            n_users, late_fraction=0.3, task=task,
+            n_trees=(4, 8), max_depth=4, seed=seed,
+        )
+        store = build_store(initial)
+        for u, f in late.items():
+            store.add_user(u, f)
+        fleet = {**initial, **late}
+    else:
+        fleet = make_synthetic_fleet(
+            n_users, task, n_trees=(4, 8), max_depth=4, seed=seed
+        )
+        store = build_store(fleet)
+    return ForestServer(store), store, sorted(fleet)
+
+
+def trace_rows(store, ev, seed):
+    """Deterministic row block for one trace event."""
+    rng = np.random.default_rng((seed, int(ev.t * 1e6), ev.n_rows))
+    return rng.integers(
+        0, 64, size=(ev.n_rows, store.shared.n_features), dtype=np.int32
+    )
+
+
+def record_batches(server, store, trace, seed, max_rows):
+    """Replay the trace through a virtual-clock scheduler once and return
+    the micro-batch request lists it forms — the equal-batch-size basis
+    for the scheduled-vs-direct comparison."""
+    from repro.sched import MicroBatcher, Scheduler, VirtualClock
+
+    clock = VirtualClock()
+    sched = Scheduler(
+        server, clock=clock, batcher=MicroBatcher(max_rows=max_rows),
+        safe=False,
+    )
+    submitted = []
+    for ev in trace:
+        if clock.now() < ev.t:
+            clock.advance(ev.t - clock.now())
+        submitted.append(
+            (ev.user_id, sched.submit(ev.user_id, trace_rows(store, ev, seed)))
+        )
+        sched.pump()
+    sched.flush()
+    sched.close()
+    by_batch: dict[int, list] = {}
+    for u, t in submitted:
+        by_batch.setdefault(t.batch_seq, []).append((u, t.rows))
+    return [by_batch[k] for k in sorted(by_batch)]
+
+
+def best_of(fn, repeats):
+    """Best-of-N wall time: the box throttles on shared cores, so the MIN
+    is the reproducible number (mean folds in scheduler noise)."""
+    best, result = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.time()
+        result = fn()
+        best = min(best, time.time() - t0)
+    return best, result
+
+
+def bench_throughput(server, store, batches, repeats):
+    """Scheduled (submit+flush, overlap on) vs direct serve on the SAME
+    recorded micro-batches, two regimes:
+
+    * **warm** — plan cache hot on both sides, the steady state a
+      long-lived session actually serves from.  This is the headline
+      ``sched_vs_direct`` acceptance ratio: the scheduler's queueing +
+      ticket bookkeeping (~12 us/request) must be paid back by the
+      submit-thread/worker overlap, so >= 1 means scheduled serving
+      sustains direct-session throughput at equal batch sizes;
+    * **cold-plan** — the plan cache is cleared at the start of each
+      run: direct serving pays plan + execute SERIALLY per batch, while
+      the scheduler pre-plans batch k+1 on the submit thread during
+      batch k's device time.  On a single-CPU jax device both stages
+      contend for the GIL, so this secondary ratio is reported for
+      observability, not gated.
+    """
+    from repro.sched import MicroBatcher, Scheduler
+
+    n_rows = sum(len(x) for b in batches for _, x in b)
+
+    def run_direct(cold=False):
+        if cold:
+            server.plan_cache.clear()
+        return [server.serve(b) for b in batches]
+
+    # one long-lived scheduler session, as production would run it — the
+    # direct side likewise reuses the server, so neither run is charged
+    # for construction (thread spawn, cache warmup)
+    sched = Scheduler(
+        server, batcher=MicroBatcher(max_rows=1 << 30), safe=False,
+    )
+
+    def run_scheduled(cold=False):
+        if cold:
+            server.plan_cache.clear()
+        tickets = []
+        for b in batches:
+            for u, x in b:
+                tickets.append(sched.submit(u, x))
+            sched.flush(drain=False)  # one micro-batch per recorded batch
+        sched.executor.drain()
+        return tickets
+
+    run_direct()       # compile + warm plan/pack caches
+    run_scheduled()
+    # interleave the timed runs so box-level drift (thermal, neighbors)
+    # hits both sides equally
+    t_direct = t_sched = t_direct_cold = t_sched_cold = float("inf")
+    tickets = None
+    for _ in range(repeats):
+        t, _ = best_of(run_direct, 1)
+        t_direct = min(t_direct, t)
+        t, tk = best_of(run_scheduled, 1)
+        if t < t_sched:
+            t_sched, tickets = t, tk
+        t, _ = best_of(lambda: run_direct(cold=True), 1)
+        t_direct_cold = min(t_direct_cold, t)
+        t, _ = best_of(lambda: run_scheduled(cold=True), 1)
+        t_sched_cold = min(t_sched_cold, t)
+    sched.close()
+    direct_preds = run_direct()
+    silent_wrong = 0
+    it = iter(tickets)
+    for preds in direct_preds:
+        for p in preds:
+            t = next(it)
+            if t.status != "ok" or not np.array_equal(t.prediction, p):
+                silent_wrong += 1
+    return {
+        "n_batches": len(batches),
+        "n_rows": n_rows,
+        "direct_warm_ms": round(t_direct * 1e3, 2),
+        "direct_rows_per_s": round(n_rows / t_direct, 1),
+        "sched_warm_ms": round(t_sched * 1e3, 2),
+        "sched_rows_per_s": round(n_rows / t_sched, 1),
+        "sched_vs_direct": round(t_direct / t_sched, 3),
+        "direct_coldplan_ms": round(t_direct_cold * 1e3, 2),
+        "sched_coldplan_ms": round(t_sched_cold * 1e3, 2),
+        "sched_coldplan_rows_per_s": round(n_rows / t_sched_cold, 1),
+        "sched_vs_direct_coldplan": round(t_direct_cold / t_sched_cold, 3),
+        "mismatches_vs_direct": silent_wrong,
+    }
+
+
+def bench_latency(server, store, trace, seed, max_rows, slo_s):
+    """Open-loop wall-clock replay: arrivals paced, deadline trigger
+    live, per-request latency measured end to end.
+
+    The measured pass runs WARM: the trace's micro-batches are first
+    recorded under the virtual clock and direct-served once (compiling
+    this workload's kernel shapes — batch boundaries are row-trigger
+    crossings of the same arrival sequence, so the paced run forms the
+    same batches), then a full paced dress rehearsal runs, and the
+    second paced pass is reported.  A 1-2s jit compile mid-trace
+    otherwise cascades: the queue backs up behind it and every following
+    request misses its deadline — a cold-start artifact, not a
+    steady-state property."""
+    from repro.sched import MicroBatcher, RequestQueue, Scheduler
+
+    for b in record_batches(server, store, trace, seed, max_rows):
+        server.serve(b)
+    sched = None
+    for _pass in range(2):
+        sched = Scheduler(
+            server, queue=RequestQueue(slo_s=slo_s),
+            batcher=MicroBatcher(max_rows=max_rows),
+        )
+        start = time.monotonic()
+        for ev in trace:
+            lag = ev.t - (time.monotonic() - start)
+            if lag > 0:
+                time.sleep(lag)
+            sched.submit(ev.user_id, trace_rows(store, ev, seed))
+            sched.pump()
+        sched.close()
+    lat = sched.latency_stats()
+    lat_slack = sched.latency_stats(slack_s=slo_s)  # 2x SLO budget
+    stats = sched.stats()
+    return {
+        "n_requests": len(trace),
+        "slo_s": slo_s,
+        "p50_ms": lat["p50_ms"],
+        "p99_ms": lat["p99_ms"],
+        "slo_attainment": lat["slo_attainment"],
+        "slo_attainment_2x": lat_slack["slo_attainment"],
+        "trigger_counts": stats["batcher"]["trigger_counts"],
+        "plan_hit_rate": server.plan_cache.stats()["plan_hit_rate"],
+    }
+
+
+def bench_lifecycle(n_users, task, seed, n_requests, slo_s):
+    """Drifted fleet under the virtual clock with an attached
+    LifecycleDriver: autonomous recluster + rate-limited migration while
+    serving; every response verified bit-exact afterwards."""
+    from repro.core.compressed_predict import predict_compressed
+    from repro.sched import (
+        LifecycleDriver,
+        MicroBatcher,
+        RequestQueue,
+        Scheduler,
+        VirtualClock,
+    )
+
+    server, store, users = build_fleet_server(
+        n_users, task, seed, drift=True
+    )
+    clock = VirtualClock()
+    driver = LifecycleDriver(
+        server, clock, poll_interval_s=0.2, low_load_rows=256,
+        migrate_users_per_s=20.0, max_users_per_tick=2,
+    )
+    sched = Scheduler(
+        server, clock=clock, queue=RequestQueue(slo_s=slo_s),
+        batcher=MicroBatcher(max_rows=128), lifecycle=driver,
+    )
+    rng = np.random.default_rng(seed + 9)
+    gen0 = store.generation
+    tickets = []
+    served_mid_migration = 0
+    for _ in range(n_requests):
+        u = users[int(rng.integers(len(users)))]
+        rows = rng.integers(
+            0, 64, size=(8, store.shared.n_features), dtype=np.int32
+        )
+        tickets.append((u, rows, sched.submit(u, rows)))
+        clock.advance(0.05)
+        sched.pump()
+        if driver.state == "migrating":
+            served_mid_migration += 1
+    while driver.state == "migrating":
+        clock.advance(0.1)
+        sched.pump()
+    sched.close()
+    silent_wrong = 0
+    for u, rows, t in tickets:
+        ref = predict_compressed(store.hydrate(u), rows)
+        if t.status != "ok" or not np.array_equal(t.prediction, ref):
+            silent_wrong += 1
+    lat = sched.latency_stats(slack_s=slo_s)
+    dstats = driver.stats()
+    return {
+        "n_users": n_users,
+        "n_requests": len(tickets),
+        "generation": [gen0, store.generation],
+        "n_reclusters": dstats["n_reclusters"],
+        "n_migrated": dstats["n_migrated"],
+        "n_migration_ticks": dstats["n_migration_ticks"],
+        "served_mid_migration": served_mid_migration,
+        "journal_state": (
+            dstats["journal"]["state"] if dstats["journal"] else None
+        ),
+        "silent_wrong_total": silent_wrong,
+        "deadline_misses_beyond_slack": lat["deadline_misses"],
+        "fallback_user_fraction_after": drift_fraction(store),
+    }
+
+
+def drift_fraction(store):
+    from repro.store.lifecycle import drift_report
+
+    return drift_report(store)["fallback_user_fraction"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: short trace, hard assertions")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--users", type=int, default=100)
+    ap.add_argument("--duration", type=float, default=4.0)
+    ap.add_argument("--rate", type=float, default=150.0)
+    ap.add_argument("--max-rows", type=int, default=512)
+    ap.add_argument("--tp-max-rows", type=int, default=2048)
+    ap.add_argument("--slo", type=float, default=0.25)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--lifecycle-requests", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.smoke:
+        args.duration, args.rate = 1.5, 80.0
+        args.repeats, args.lifecycle_requests = 5, 120
+        args.slo = 0.5  # CI boxes are noisy; the smoke gate is exactness
+    out_path = pathlib.Path(
+        args.out
+        or pathlib.Path(__file__).resolve().parent.parent
+        / "BENCH_sched.json"
+    )
+
+    server, store, users = build_fleet_server(
+        args.users, "classification", args.seed
+    )
+    # throughput trace: bulk-sized requests so device time dominates
+    # (that is where plan/execute overlap pays); latency trace:
+    # interactive-sized requests under the SLO deadline trigger
+    tp_trace = poisson_trace(
+        users, args.duration, args.rate, rows_choices=(64, 128, 256),
+        popularity_skew=1.1, burst_factor=2.0, seed=args.seed,
+    )
+    batches = record_batches(
+        server, store, tp_trace, args.seed, args.tp_max_rows
+    )
+    throughput = bench_throughput(server, store, batches, args.repeats)
+    trace = poisson_trace(
+        users, args.duration, args.rate,
+        popularity_skew=1.1, burst_factor=2.0, seed=args.seed,
+    )
+    latency = bench_latency(
+        server, store, trace, args.seed, args.max_rows, args.slo
+    )
+    lifecycle = bench_lifecycle(
+        min(args.users // 5, 20), "classification", args.seed,
+        args.lifecycle_requests, args.slo,
+    )
+
+    results = {
+        "benchmark": "sched",
+        "smoke": bool(args.smoke),
+        "n_users": args.users,
+        "trace": {
+            "n_events": len(trace),
+            "duration_s": args.duration,
+            "rate_per_s": args.rate,
+            "burst_factor": 2.0,
+            "popularity_skew": 1.1,
+        },
+        "throughput": throughput,
+        "latency": latency,
+        "lifecycle": lifecycle,
+    }
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(json.dumps(results, indent=2))
+    print(f"\nwrote {out_path}")
+
+    if args.smoke:
+        assert throughput["mismatches_vs_direct"] == 0, \
+            "scheduled serving must be bit-exact vs direct serve"
+        assert latency["plan_hit_rate"] > 0, \
+            "recurring trace must hit the plan cache"
+        assert lifecycle["n_reclusters"] >= 1
+        assert lifecycle["silent_wrong_total"] == 0
+        print("smoke assertions passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,7 @@
 plus the deterministic fault-injection harness (``runtime.chaos``)."""
 
 from .chaos import (
+    BatchFaults,
     CrashSchedule,
     InjectedCrash,
     TransientError,
@@ -18,6 +19,7 @@ from .fault_tolerance import (
 )
 
 __all__ = [
+    "BatchFaults",
     "CrashSchedule",
     "InjectedCrash",
     "Preemption",

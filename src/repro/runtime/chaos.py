@@ -182,3 +182,26 @@ class TransientFaults:
             raise TransientError(
                 f"injected transient fault ({self.calls}/{self.fail_first})"
             )
+
+
+@dataclass
+class BatchFaults:
+    """Scheduler-level fault injector (ISSUE 7): install as the
+    ``fault_hook`` of ``sched.PipelinedExecutor`` / ``sched.Scheduler``
+    and it raises on the micro-batches whose ``seq`` appears in
+    ``fail_batches`` — exercising the executor's batch-level isolation
+    (the poisoned batch resolves ``status="failed"``, the scheduler loop
+    keeps serving).  ``transient=True`` raises ``TransientError`` (a
+    retryable device fault) instead of ``InjectedCrash``."""
+
+    fail_batches: tuple = ()
+    transient: bool = False
+    calls: int = 0
+    seen: list = field(default_factory=list)
+
+    def __call__(self, batch) -> None:
+        self.calls += 1
+        self.seen.append(batch.seq)
+        if batch.seq in self.fail_batches:
+            exc = TransientError if self.transient else InjectedCrash
+            raise exc(f"injected batch fault at micro-batch {batch.seq}")

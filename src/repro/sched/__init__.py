@@ -1,0 +1,37 @@
+"""Continuous-batching request scheduler + self-driving codebook
+lifecycle (ISSUE 7).
+
+The package layers an ONLINE front onto the PR 4 serving session and
+the PR 5/6 lifecycle machinery:
+
+* :mod:`repro.sched.clock` — wall/virtual clock injection; everything
+  below reads time through it, so tests are bit-deterministic.
+* :mod:`repro.sched.queue` — per-tenant FIFO with bounded admission.
+* :mod:`repro.sched.batcher` — dual-trigger (rows budget / SLO
+  deadline) micro-batch formation, tenant-coherent and plan-cache
+  friendly.
+* :mod:`repro.sched.executor` — plan(k+1)/execute(k) overlap with
+  ``serve_safe`` per-request semantics and batch-level fault isolation.
+* :mod:`repro.sched.driver` — autonomous drift-poll -> journaled
+  recluster -> rate-limited migration loop.
+* :mod:`repro.sched.scheduler` — the facade tying them together.
+"""
+from .batcher import MicroBatch, MicroBatcher
+from .clock import VirtualClock, WallClock
+from .driver import LifecycleDriver
+from .executor import PipelinedExecutor
+from .queue import AdmissionError, RequestQueue, SchedRequest
+from .scheduler import Scheduler
+
+__all__ = [
+    "AdmissionError",
+    "LifecycleDriver",
+    "MicroBatch",
+    "MicroBatcher",
+    "PipelinedExecutor",
+    "RequestQueue",
+    "SchedRequest",
+    "Scheduler",
+    "VirtualClock",
+    "WallClock",
+]

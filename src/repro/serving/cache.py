@@ -22,9 +22,15 @@ derives from the users the entry covers:
 A hot repeated batch therefore skips grouping, the argsort, the device
 index-gather, and the chunk-range computation — it pays only the row
 upload, the kernel, and the finalize.
+
+The cache is THREAD-SAFE (one lock around every map operation): the
+scheduler's pipelined executor (ISSUE 7) pre-plans batch *k+1* on the
+submit thread while the worker thread plans/executes batch *k*, and both
+paths go through this memo.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Any, Callable
 
@@ -36,6 +42,7 @@ class PlanCache:
 
     def __init__(self, capacity: int = 64) -> None:
         self.capacity = capacity
+        self._lock = threading.Lock()
         # signature -> (token, plan)
         self._plans: OrderedDict[tuple, tuple[tuple, Any]] = OrderedDict()
         # signature -> (users, token, pack)
@@ -56,24 +63,26 @@ class PlanCache:
         """The memoized plan under ``key``, provided its per-user token
         still matches; a mismatch drops the entry (counted as an
         invalidation) and misses."""
-        entry = self._plans.get(key)
-        if entry is not None and entry[0] != token:
-            del self._plans[key]
-            self.invalidations += 1
-            entry = None
-        if entry is None:
-            self.plan_misses += 1
-            return None
-        self._plans.move_to_end(key)
-        self.plan_hits += 1
-        return entry[1]
+        with self._lock:
+            entry = self._plans.get(key)
+            if entry is not None and entry[0] != token:
+                del self._plans[key]
+                self.invalidations += 1
+                entry = None
+            if entry is None:
+                self.plan_misses += 1
+                return None
+            self._plans.move_to_end(key)
+            self.plan_hits += 1
+            return entry[1]
 
     def put_plan(self, key: tuple, token: tuple, plan) -> None:
         """Memoize ``plan`` under ``key`` with its validity ``token``."""
-        self._plans[key] = (token, plan)
-        self._plans.move_to_end(key)
-        while len(self._plans) > self.capacity:
-            self._plans.popitem(last=False)
+        with self._lock:
+            self._plans[key] = (token, plan)
+            self._plans.move_to_end(key)
+            while len(self._plans) > self.capacity:
+                self._plans.popitem(last=False)
 
     # ---------------- gathered packs --------------------------------------
     def sweep_packs(
@@ -85,45 +94,49 @@ class PlanCache:
         surviving as hidden copies, which would defeat the arena's
         capacity bound — but packs whose users are untouched stay put
         (partial invalidation)."""
-        stale = [
-            k for k, (users, token, _) in self._packs.items()
-            if current_token_of(users) != token
-        ]
-        for k in stale:
-            del self._packs[k]
-        self.invalidations += len(stale)
+        with self._lock:
+            stale = [
+                k for k, (users, token, _) in self._packs.items()
+                if current_token_of(users) != token
+            ]
+            for k in stale:
+                del self._packs[k]
+            self.invalidations += len(stale)
 
     def get_pack(self, key: tuple, token: tuple):
         """The memoized gathered pack under ``key``, provided its per-user
         token still matches (callers sweep first; the token check here
         guards the queried entry itself)."""
-        entry = self._packs.get(key)
-        if entry is not None and entry[1] != token:
-            del self._packs[key]
-            self.invalidations += 1
-            entry = None
-        if entry is None:
-            self.pack_misses += 1
-            return None
-        self._packs.move_to_end(key)
-        self.pack_hits += 1
-        return entry[2]
+        with self._lock:
+            entry = self._packs.get(key)
+            if entry is not None and entry[1] != token:
+                del self._packs[key]
+                self.invalidations += 1
+                entry = None
+            if entry is None:
+                self.pack_misses += 1
+                return None
+            self._packs.move_to_end(key)
+            self.pack_hits += 1
+            return entry[2]
 
     def put_pack(
         self, key: tuple, users: tuple, token: tuple, pack
     ) -> None:
         """Memoize a gathered ``pack`` for ``users`` under ``key`` with
         its per-user validity ``token``."""
-        self._packs[key] = (users, token, pack)
-        self._packs.move_to_end(key)
-        while len(self._packs) > self.capacity:
-            self._packs.popitem(last=False)
+        with self._lock:
+            self._packs[key] = (users, token, pack)
+            self._packs.move_to_end(key)
+            while len(self._packs) > self.capacity:
+                self._packs.popitem(last=False)
 
     # ---------------- maintenance -----------------------------------------
     def clear(self) -> None:
         """Drop every memoized plan and pack."""
-        self._plans.clear()
-        self._packs.clear()
+        with self._lock:
+            self._plans.clear()
+            self._packs.clear()
 
     def stats(self) -> dict:
         """Hit/miss/invalidation counters for dashboards."""

@@ -36,7 +36,7 @@ failure counters, and the store's recluster-journal state.
 from __future__ import annotations
 
 import time
-from collections import Counter
+from collections import Counter, deque
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -171,6 +171,10 @@ class ForestServer:
         self.plan_cache = PlanCache(plan_cache_size)
         self.interpret = interpret
         self.engine_counts: Counter[str] = Counter()
+        # per-engine execute wall-times (bounded window per engine),
+        # surfaced as stats()["engine_timings"] for SLO dashboards
+        self._engine_times: dict[str, deque[float]] = {}
+        self.timing_window = 1024
         # graceful degradation (ISSUE 6): quarantine registry + retry
         # policy + health counters, surfaced via stats()["health"]
         self.max_retries = max_retries
@@ -296,6 +300,7 @@ class ForestServer:
             interpret = self.interpret
         name = plan.engine.name
         self.engine_counts[name] += 1
+        t0 = time.perf_counter()
         if name == "simple":
             total = engines.run_simple(self.store, plan, xb, interpret)
         else:
@@ -305,7 +310,34 @@ class ForestServer:
                 else engines.run_sharded
             )
             total = run(self.store, plan, pack, xb, interpret)
-        return self._finalize(plan, total)
+        out = self._finalize(plan, total)
+        self._record_timing(name, time.perf_counter() - t0)
+        return out
+
+    def _record_timing(self, engine: str, elapsed_s: float) -> None:
+        times = self._engine_times.get(engine)
+        if times is None:
+            times = self._engine_times[engine] = deque(
+                maxlen=self.timing_window
+            )
+        times.append(elapsed_s)
+
+    def engine_timings(self) -> dict:
+        """Per-engine execute wall-time summary over the last
+        ``timing_window`` executions: count (lifetime), mean/p50/p99/max
+        in milliseconds over the window."""
+        out: dict[str, dict] = {}
+        for name, times in self._engine_times.items():
+            arr = np.array(times)
+            out[name] = {
+                "count": int(self.engine_counts[name]),
+                "window": len(arr),
+                "mean_ms": round(float(arr.mean()) * 1e3, 4),
+                "p50_ms": round(float(np.percentile(arr, 50)) * 1e3, 4),
+                "p99_ms": round(float(np.percentile(arr, 99)) * 1e3, 4),
+                "max_ms": round(float(arr.max()) * 1e3, 4),
+            }
+        return out
 
     def _gathered_pack(self, plan: ServePlan):
         """Cross-batch gather memoization: reuse the arena-gathered pack
@@ -541,6 +573,7 @@ class ForestServer:
         journal = getattr(self.store, "journal", None)
         return {
             "engine_counts": dict(self.engine_counts),
+            "engine_timings": self.engine_timings(),
             "plan_cache": self.plan_cache.stats(),
             "tile_cache": self.store.cache.stats(),
             "arena": arena.stats() if arena is not None else None,

@@ -162,11 +162,46 @@ def drift_report(
     the serving layer passes its quarantined users here, since a delta
     that fails integrity checks cannot be decoded for fallback
     accounting (they are counted in ``n_excluded_users``, not treated as
-    fallback users)."""
+    fallback users).
+
+    The whole report is memoized on ``store.version`` (plus the
+    threshold/exclude arguments), and the per-user fallback accounting —
+    the expensive part: a full delta decode + re-serialize per user — is
+    memoized per user on ``(user_version, codebook_generation)``.  The
+    per-user key matters: a relabel migration rewrites the delta WITHOUT
+    bumping the user's registry version (relabeled bytes decode
+    identically), but it does change ``codebook_generation``, which the
+    report must see.  An unchanged fleet therefore polls for free, and a
+    mid-migration fleet recomputes only the users that moved — what lets
+    the scheduler's ``LifecycleDriver`` poll aggressively."""
+    memo_key = (store.version, recluster_threshold, tuple(sorted(exclude)))
+    memo = getattr(store, "_drift_report_cache", None)
+    if memo is not None and memo[0] == memo_key:
+        return memo[1]
+    user_cache = getattr(store, "_fallback_report_cache", None)
+    if user_cache is None:
+        user_cache = store._fallback_report_cache = {}
     excluded = {u for u in exclude if u in store.user_ids}
     users = [u for u in store.user_ids if u not in excluded]
-    per_user = {u: user_fallback_report(store, u) for u in users}
-    delta_bytes = {u: len(store.delta(u).to_bytes()) for u in users}
+    per_user = {}
+    delta_bytes = {}
+    for u in users:
+        key = (
+            store.user_version(u), store.delta(u).codebook_generation
+        )
+        hit = user_cache.get(u)
+        if hit is None or hit[0] != key:
+            hit = (
+                key,
+                user_fallback_report(store, u),
+                len(store.delta(u).to_bytes()),
+            )
+            user_cache[u] = hit
+        per_user[u] = hit[1]
+        delta_bytes[u] = hit[2]
+    for u in list(user_cache):
+        if u not in store.user_ids:
+            del user_cache[u]
     n_fallback = sum(1 for r in per_user.values() if r["uses_fallback"])
     fallback_bytes = sum(r["fallback_bytes"] for r in per_user.values())
     total_delta_bytes = sum(delta_bytes.values())
@@ -176,7 +211,7 @@ def drift_report(
         if r["codebook_generation"] != current
     )
     frac = n_fallback / len(users) if users else 0.0
-    return {
+    report = {
         "n_users": len(users),
         "n_excluded_users": len(excluded),
         "codebook_generation": current,
@@ -193,6 +228,8 @@ def drift_report(
         "recommend_recluster": frac >= recluster_threshold and n_fallback > 0,
         "per_user": per_user,
     }
+    store._drift_report_cache = (memo_key, report)
+    return report
 
 
 # ---------------------------------------------------------------------------

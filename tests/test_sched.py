@@ -1,0 +1,464 @@
+"""Continuous-batching scheduler + self-driving lifecycle (ISSUE 7).
+
+Everything here runs under the VirtualClock: batching decisions,
+deadline accounting, lifecycle polling, and migration pacing are pure
+functions of (submissions, clock advances), so every assertion is
+deterministic and bit-exact.
+"""
+import numpy as np
+import pytest
+
+from repro.core.compressed_predict import predict_compressed
+from repro.runtime.chaos import BatchFaults, poison_user
+from repro.sched import (
+    AdmissionError,
+    LifecycleDriver,
+    MicroBatcher,
+    PipelinedExecutor,
+    RequestQueue,
+    Scheduler,
+    VirtualClock,
+    WallClock,
+)
+from repro.serving.server import ForestServer
+from repro.store.fleet import make_drifted_fleet, make_synthetic_fleet
+from repro.store.lifecycle import drift_report
+from repro.store.runtime import build_store
+
+
+def fleet_server(n_users=6, task="classification", seed=0):
+    forests = make_synthetic_fleet(
+        n_users, task, n_trees=(4, 8), max_depth=4, seed=seed
+    )
+    store = build_store(forests)
+    return ForestServer(store), store, sorted(forests)
+
+
+def drifted_server(n_users=10, late_fraction=0.3, seed=0):
+    initial, late = make_drifted_fleet(
+        n_users, late_fraction=late_fraction, task="classification",
+        n_trees=(4, 8), max_depth=4, seed=seed,
+    )
+    store = build_store(initial)
+    for u, f in late.items():
+        store.add_user(u, f)
+    return ForestServer(store), store, sorted({**initial, **late})
+
+
+def make_rows(rng, store, n):
+    return rng.integers(
+        0, 64, size=(n, store.shared.n_features), dtype=np.int32
+    )
+
+
+# ---------------------------------------------------------------------------
+# clock
+# ---------------------------------------------------------------------------
+
+class TestClocks:
+    def test_virtual_clock_advances(self):
+        c = VirtualClock(start=10.0)
+        assert c.now() == 10.0
+        c.advance(2.5)
+        c.sleep(0.5)
+        assert c.now() == 13.0
+
+    def test_virtual_clock_rejects_negative(self):
+        with pytest.raises(ValueError):
+            VirtualClock().advance(-1.0)
+
+    def test_wall_clock_monotonic(self):
+        c = WallClock()
+        assert c.now() <= c.now()
+
+
+# ---------------------------------------------------------------------------
+# queue
+# ---------------------------------------------------------------------------
+
+class TestRequestQueue:
+    def test_fifo_and_deadlines(self):
+        q = RequestQueue(slo_s=0.25)
+        r1 = q.submit("a", np.zeros((4, 3), np.int32), now=1.0)
+        r2 = q.submit("a", np.zeros((2, 3), np.int32), now=2.0)
+        r3 = q.submit("b", np.zeros((8, 3), np.int32), now=1.5)
+        assert (r1.deadline, r2.deadline, r3.deadline) == (1.25, 2.25, 1.75)
+        assert q.n_pending == 3 and q.pending_rows == 14
+        # head deadlines per tenant; earliest servable across tenants
+        assert q.head_deadlines() == {"a": 1.25, "b": 1.75}
+        assert q.oldest_head_deadline() == 1.25
+        assert q.pop("a") is r1
+        assert q.oldest_head_deadline() == 1.75
+
+    def test_admission_bounds(self):
+        q = RequestQueue(
+            max_pending_requests=2, max_pending_rows=100,
+            max_pending_per_tenant=1,
+        )
+        q.submit("a", np.zeros((4, 3), np.int32), now=0.0)
+        with pytest.raises(AdmissionError):  # per-tenant bound
+            q.submit("a", np.zeros((4, 3), np.int32), now=0.0)
+        q.submit("b", np.zeros((4, 3), np.int32), now=0.0)
+        with pytest.raises(AdmissionError):  # global request bound
+            q.submit("c", np.zeros((4, 3), np.int32), now=0.0)
+        q.pop("a")
+        with pytest.raises(AdmissionError):  # global row bound
+            q.submit("c", np.zeros((99, 3), np.int32), now=0.0)
+        assert q.stats()["n_rejected"] == 3
+
+    def test_rejects_non_2d_rows(self):
+        with pytest.raises(ValueError):
+            RequestQueue().submit("a", np.zeros(4, np.int32), now=0.0)
+
+
+# ---------------------------------------------------------------------------
+# batcher
+# ---------------------------------------------------------------------------
+
+class TestMicroBatcher:
+    def test_rows_trigger(self):
+        q = RequestQueue(slo_s=10.0)
+        b = MicroBatcher(max_rows=16)
+        q.submit("a", np.zeros((8, 3), np.int32), now=0.0)
+        assert b.due(q, 0.0) is None
+        q.submit("b", np.zeros((8, 3), np.int32), now=0.0)
+        assert b.due(q, 0.0) == "rows"
+        batch = b.form(q, 0.0)
+        assert batch.trigger == "rows" and batch.n_rows == 16
+        assert q.n_pending == 0
+
+    def test_deadline_trigger_fires_at_headroom(self):
+        q = RequestQueue(slo_s=1.0)
+        b = MicroBatcher(max_rows=1 << 20, plan_headroom_s=0.1)
+        q.submit("a", np.zeros((4, 3), np.int32), now=0.0)  # deadline 1.0
+        assert b.due(q, 0.85) is None
+        assert b.due(q, 0.9) == "deadline"
+        batch = b.form(q, 0.9)
+        assert batch.trigger == "deadline" and batch.n_requests == 1
+
+    def test_tenant_coherent_urgency_order_canonical_sort(self):
+        q = RequestQueue(slo_s=1.0)
+        b = MicroBatcher(max_rows=16)
+        # b is more urgent (earlier deadline) than a, but batch order is
+        # canonical (user_id, seq); a's two requests ride in one batch
+        ra2 = q.submit("a", np.zeros((4, 3), np.int32), now=0.5)
+        ra1 = q.submit("a", np.zeros((4, 3), np.int32), now=0.6)
+        rb = q.submit("b", np.zeros((8, 3), np.int32), now=0.0)
+        batch = b.form(q, 2.0)
+        assert batch.requests == [ra2, ra1, rb]
+        assert batch.users == ["a", "b"]
+
+    def test_budget_leaves_tail_queued(self):
+        q = RequestQueue(slo_s=1.0)
+        b = MicroBatcher(max_rows=8)
+        q.submit("a", np.zeros((8, 3), np.int32), now=0.0)
+        q.submit("a", np.zeros((8, 3), np.int32), now=0.0)
+        batch = b.form(q, 10.0)
+        assert batch.n_requests == 1 and q.n_pending == 1
+
+    def test_oversized_first_request_not_starved(self):
+        q = RequestQueue(slo_s=1.0)
+        b = MicroBatcher(max_rows=8)
+        q.submit("a", np.zeros((32, 3), np.int32), now=0.0)
+        batch = b.form(q, 10.0)
+        assert batch.n_rows == 32
+
+    def test_no_trigger_no_batch(self):
+        q = RequestQueue(slo_s=10.0)
+        b = MicroBatcher(max_rows=1 << 20)
+        q.submit("a", np.zeros((4, 3), np.int32), now=0.0)
+        assert b.form(q, 0.0) is None
+        assert b.form(q, 0.0, flush=True) is not None
+
+
+# ---------------------------------------------------------------------------
+# scheduler end-to-end (virtual clock, inline executor)
+# ---------------------------------------------------------------------------
+
+class TestSchedulerEndToEnd:
+    def test_bit_exact_vs_predict_compressed_and_slo(self):
+        server, store, users = fleet_server()
+        clock = VirtualClock()
+        sched = Scheduler(
+            server, clock=clock, queue=RequestQueue(slo_s=0.5),
+            batcher=MicroBatcher(max_rows=64),
+        )
+        rng = np.random.default_rng(1)
+        tickets = []
+        for i in range(40):
+            u = users[int(rng.integers(len(users)))]
+            rows = make_rows(rng, store, int(rng.integers(4, 24)))
+            tickets.append((u, rows, sched.submit(u, rows)))
+            clock.advance(0.02)
+            sched.pump()
+        sched.close()
+        for u, rows, t in tickets:
+            assert t.done and t.status == "ok"
+            ref = predict_compressed(store.hydrate(u), rows)
+            assert np.array_equal(t.prediction, ref)
+        lat = sched.latency_stats()
+        assert lat["n_completed"] == 40
+        assert lat["deadline_misses"] == 0  # virtual clock: batching
+        # delay is bounded by the deadline trigger by construction
+        assert set(sched.batcher.stats()["trigger_counts"]) <= {
+            "rows", "deadline", "flush"
+        }
+
+    def test_overlap_matches_inline(self):
+        # same seeded trace through the threaded and the inline
+        # executor -> identical predictions
+        results = []
+        for overlap in (False, True):
+            server, store, users = fleet_server(seed=5)
+            sched = Scheduler(
+                server, clock=VirtualClock() if not overlap else WallClock(),
+                batcher=MicroBatcher(max_rows=32), overlap=overlap,
+            )
+            rng = np.random.default_rng(7)  # re-seeded: same trace twice
+            tickets = []
+            for _ in range(12):
+                u = users[int(rng.integers(len(users)))]
+                tickets.append(sched.submit(u, make_rows(rng, store, 8)))
+                sched.pump()
+            sched.close()
+            assert sched.executor.overlap is overlap
+            results.append([t.prediction for t in tickets])
+        for a, b in zip(*results):
+            assert np.array_equal(a, b)
+
+    def test_plan_cache_hits_on_recurring_trace(self):
+        server, store, users = fleet_server()
+        clock = VirtualClock()
+        sched = Scheduler(
+            server, clock=clock, batcher=MicroBatcher(max_rows=64),
+        )
+        rng = np.random.default_rng(3)
+        # run the identical batch signature twice: deterministic batching
+        # means the second pass hits the cross-batch PlanCache
+        for _ in range(2):
+            for u in users[:4]:
+                sched.submit(u, make_rows(rng, store, 16))
+            sched.flush()
+        sched.close()
+        assert server.plan_cache.stats()["plan_hits"] > 0
+
+    def test_quarantine_preserved_through_scheduler(self):
+        server, store, users = fleet_server()
+        clock = VirtualClock()
+        sched = Scheduler(server, clock=clock)
+        rng = np.random.default_rng(4)
+        poison_user(store, users[0])
+        t_bad = sched.submit(users[0], make_rows(rng, store, 8))
+        t_ok = sched.submit(users[1], make_rows(rng, store, 8))
+        sched.flush()
+        sched.close()
+        assert t_bad.status == "quarantined" and t_bad.prediction is None
+        assert "IntegrityError" in t_bad.detail
+        assert t_ok.status == "ok"
+        assert users[0] in server.quarantined_users
+
+    def test_batch_fault_isolation(self):
+        server, store, users = fleet_server()
+        clock = VirtualClock()
+        faults = BatchFaults(fail_batches=(0,))
+        sched = Scheduler(server, clock=clock, fault_hook=faults)
+        rng = np.random.default_rng(5)
+        t0 = sched.submit(users[0], make_rows(rng, store, 8))
+        sched.flush()
+        t1 = sched.submit(users[1], make_rows(rng, store, 8))
+        sched.flush()
+        sched.close()
+        assert t0.status == "failed" and "InjectedCrash" in t0.detail
+        assert t1.status == "ok"  # scheduler survived the poisoned batch
+        assert sched.executor.stats()["n_failed_batches"] == 1
+
+    def test_engine_timings_surface(self):
+        server, store, users = fleet_server()
+        sched = Scheduler(server, clock=VirtualClock())
+        rng = np.random.default_rng(6)
+        sched.submit(users[0], make_rows(rng, store, 8))
+        sched.flush()
+        sched.close()
+        timings = server.stats()["engine_timings"]
+        assert timings, "execute() must record at least one engine"
+        for summary in timings.values():
+            assert summary["count"] >= 1
+            assert summary["p99_ms"] >= summary["p50_ms"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# lifecycle driver
+# ---------------------------------------------------------------------------
+
+class TestLifecycleDriver:
+    def test_load_aware_poll_window(self):
+        server, store, users = fleet_server()
+        clock = VirtualClock()
+        d = LifecycleDriver(
+            server, clock, poll_interval_s=1.0, max_poll_interval_s=4.0,
+            low_load_rows=100,
+        )
+        d.tick(0.0, pending_rows=0)
+        assert d.n_polls == 1 and d._next_poll == 1.0
+        d.tick(0.5, pending_rows=0)  # inside window: no poll
+        assert d.n_polls == 1
+        d.tick(1.0, pending_rows=100)  # loaded: window stretches 2x
+        assert d.n_polls == 2 and d._next_poll == 3.0
+        d.tick(3.0, pending_rows=10**9)  # stretch is capped
+        assert d._next_poll == 7.0
+
+    def test_autonomous_recluster_waits_for_low_load(self):
+        server, store, users = drifted_server()
+        clock = VirtualClock()
+        d = LifecycleDriver(
+            server, clock, poll_interval_s=1.0, low_load_rows=64,
+            migrate_users_per_s=1000.0, max_users_per_tick=1000,
+        )
+        assert drift_report(store)["recommend_recluster"]
+        gen0 = store.generation
+        d.tick(0.0, pending_rows=1000)  # high load: polls, defers
+        assert d.n_polls == 1 and d.n_reclusters == 0
+        assert store.generation == gen0
+        d.tick(10.0, pending_rows=0)  # low-load gap: recluster fires
+        assert d.n_reclusters == 1 and store.generation == gen0 + 1
+        # migration budget was huge: done in one pass, journal committed
+        while d.state == "migrating":
+            clock.advance(1.0)
+            d.tick(clock.now(), pending_rows=0)
+        assert d.stats()["journal"]["state"] == "committed"
+        assert drift_report(store)["n_pending_migration"] == 0
+        assert not drift_report(store)["recommend_recluster"]
+
+    def test_migration_rate_limit(self):
+        server, store, users = drifted_server(n_users=12, late_fraction=0.5)
+        clock = VirtualClock()
+        d = LifecycleDriver(
+            server, clock, poll_interval_s=0.1, low_load_rows=64,
+            migrate_users_per_s=2.0, max_users_per_tick=1,
+        )
+        d.tick(0.0, pending_rows=0)
+        assert d.state == "migrating"
+        n_pending = d.stats()["n_pending_migration"]
+        assert n_pending > 2
+        # 1 second at 2 users/s but 1 user/tick cap, ticking every 0.5s
+        d.tick(0.5, pending_rows=0)
+        d.tick(1.0, pending_rows=0)
+        assert d.n_migrated == 2  # rate limit respected, not all at once
+        while d.state == "migrating":
+            clock.advance(0.5)
+            d.tick(clock.now(), pending_rows=0)
+        assert d.n_migrated == n_pending
+
+    def test_mixed_generation_serving_under_load(self):
+        # the ISSUE 7 satellite test: stream requests through the
+        # scheduler WHILE the driver reclusters and migrates; every
+        # response must be bit-exact and no deadline blown beyond slack
+        server, store, users = drifted_server()
+        clock = VirtualClock()
+        driver = LifecycleDriver(
+            server, clock, poll_interval_s=0.2, low_load_rows=256,
+            migrate_users_per_s=10.0, max_users_per_tick=1,
+        )
+        sched = Scheduler(
+            server, clock=clock, queue=RequestQueue(slo_s=0.5),
+            batcher=MicroBatcher(max_rows=128), lifecycle=driver,
+        )
+        rng = np.random.default_rng(8)
+        gen0 = store.generation
+        tickets = []
+        saw_mixed = False
+        for i in range(150):
+            u = users[int(rng.integers(len(users)))]
+            rows = make_rows(rng, store, 8)
+            tickets.append((u, rows, sched.submit(u, rows)))
+            clock.advance(0.05)
+            sched.pump()
+            if driver.state == "migrating":
+                saw_mixed = True
+        while driver.state == "migrating":
+            clock.advance(0.1)
+            sched.pump()
+        sched.close()
+        assert store.generation == gen0 + 1  # autonomous recluster ran
+        assert saw_mixed  # requests were served MID-migration
+        assert driver.n_migrated > 0
+        silent_wrong = 0
+        for u, rows, t in tickets:
+            assert t.status == "ok", (t.status, t.detail)
+            ref = predict_compressed(store.hydrate(u), rows)
+            if not np.array_equal(t.prediction, ref):
+                silent_wrong += 1
+        assert silent_wrong == 0
+        lat = sched.latency_stats(slack_s=0.25)
+        assert lat["deadline_misses"] == 0
+
+    def test_driver_excludes_quarantined_users(self):
+        server, store, users = drifted_server()
+        poison_user(store, users[0])
+        server.serve_safe([(users[0], np.zeros(
+            (1, store.shared.n_features), np.int32
+        ))])
+        assert users[0] in server.quarantined_users
+        clock = VirtualClock()
+        d = LifecycleDriver(server, clock, low_load_rows=64)
+        d.tick(0.0, pending_rows=0)  # must not crash decoding the
+        # poisoned delta; quarantined users sit out the accounting
+        assert d.last_report["n_users"] == len(users) - 1
+        # and a recluster is DEFERRED while anyone is quarantined — a
+        # quarantined delta cannot be decoded, hence cannot be migrated
+        assert d.n_reclusters == 0 and d.n_deferred == 1
+        # repair the user (re-register a fresh forest, which also lifts
+        # the quarantine via the version bump) and the next poll reclusters
+        fixed = make_synthetic_fleet(
+            1, "classification", n_trees=(4, 8), max_depth=4, seed=77
+        )
+        store.add_user(users[0], next(iter(fixed.values())))
+        clock.advance(10.0)
+        d.tick(clock.now(), pending_rows=0)
+        assert d.n_reclusters == 1
+
+
+# ---------------------------------------------------------------------------
+# drift-report caching (the satellite bugfix)
+# ---------------------------------------------------------------------------
+
+class TestDriftReportCache:
+    def test_memoized_on_store_version(self):
+        server, store, users = drifted_server()
+        r1 = drift_report(store)
+        r2 = drift_report(store)
+        assert r2 is r1  # identical object: full-report memo hit
+        store.add_user(
+            "fresh", make_synthetic_fleet(
+                1, "classification", n_trees=(4, 8), max_depth=4, seed=42
+            ).popitem()[1],
+        )
+        r3 = drift_report(store)
+        assert r3 is not r1 and r3["n_users"] == r1["n_users"] + 1
+
+    def test_distinct_args_not_conflated(self):
+        server, store, users = drifted_server()
+        r1 = drift_report(store, recluster_threshold=0.2)
+        r2 = drift_report(store, recluster_threshold=0.9)
+        assert r2 is not r1
+        r3 = drift_report(store, exclude=(users[0],))
+        assert r3["n_users"] == r1["n_users"] - 1
+
+    def test_per_user_cache_sees_relabel_migration(self):
+        # replace_delta_relabeled does NOT bump user_version — the
+        # per-user memo must still notice the generation change
+        from repro.store.lifecycle import recluster
+
+        server, store, users = drifted_server()
+        before = drift_report(store)
+        assert before["fallback_user_fraction"] > 0
+        recluster(store, mode="extend", seed=0)
+        after = drift_report(store)
+        assert after["codebook_generation"] == store.generation
+        assert after["n_pending_migration"] == 0
+        assert after["fallback_user_fraction"] == 0.0
+        for u in users:
+            assert (
+                after["per_user"][u]["codebook_generation"]
+                == store.generation
+            )

@@ -347,10 +347,14 @@ class TestStatsAndPack:
         server.serve(reqs)
         stats = server.stats()
         assert set(stats) == {
-            "engine_counts", "plan_cache", "tile_cache", "arena", "store",
-            "lossy", "health",
+            "engine_counts", "engine_timings", "plan_cache", "tile_cache",
+            "arena", "store", "lossy", "health",
         }
         assert sum(stats["engine_counts"].values()) == 2
+        for name, t in stats["engine_timings"].items():
+            assert name in stats["engine_counts"]
+            assert t["count"] == stats["engine_counts"][name]
+            assert t["p99_ms"] >= t["p50_ms"] >= 0
         assert stats["plan_cache"]["pack_hit_rate"] > 0
         assert stats["arena"]["resident_users"] > 0
         assert "per_user" in stats["tile_cache"]
