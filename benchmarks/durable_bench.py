@@ -1,0 +1,406 @@
+"""Durable shard-store benchmark (ISSUE 8 acceptance measurement).
+
+Puts numbers on the durability tentpole, and in ``--smoke`` mode ASSERTS
+its acceptance criteria (the CI `durable` job runs exactly that):
+
+* **open latency vs fleet size** — ``DurableStore.open`` +
+  ``load_store`` lazy vs eager: the lazy path reads only the manifest +
+  codebooks, so its cost must stay flat as the fleet grows (the first
+  rung of the disk -> host RAM -> HBM residency ladder);
+* **crash sweep** — a commit (replace + add + remove users) and a
+  compaction are killed at EVERY write step (``InjectedCrash`` via
+  ``CrashSchedule``); each crash point must reopen to a bit-exact fleet
+  (pre- or post-commit, never torn) and a retried run must converge to
+  the post state;
+* **scrub + repair** — ``Scrubber`` throughput over a healthy fleet
+  (MB/s), then one injected single-shard corruption per slab: every one
+  must repair from parity bit-exactly, with per-repair wall time;
+* **serving auto-repair** — ``serve_safe`` + ``attach_auto_repair`` over
+  a corrupted-on-disk user: served ``ok`` with predictions bit-equal to
+  a clean fleet's; a double-faulted user stays quarantined.  The silent-
+  wrong count across every section must be 0.
+
+Writes machine-readable results to BENCH_durable.json (repo root).
+
+    PYTHONPATH=src python benchmarks/durable_bench.py [--smoke|--quick] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.framing import IntegrityError, UnrepairableError
+from repro.runtime.chaos import (
+    CrashSchedule,
+    DiskFaults,
+    InjectedCrash,
+    record_steps,
+)
+from repro.serving import ForestServer
+from repro.store import (
+    DurableStore,
+    Scrubber,
+    attach_auto_repair,
+    build_store,
+    make_request_batch,
+    make_synthetic_fleet,
+)
+
+
+def _build(n_users: int, seed: int):
+    fleet = make_synthetic_fleet(
+        n_users=n_users, d=6, n_bins=12, seed=seed, n_trees=(4, 8),
+        max_depth=4,
+    )
+    return build_store(fleet, seed=0)
+
+
+def _ref_bytes(store) -> dict:
+    return {u: store.delta(u).to_bytes() for u in store.user_ids}
+
+
+def _fleet_bit_exact(durable, ref: dict) -> bool:
+    loaded = durable.load_store(lazy=False)
+    if set(loaded.user_ids) != set(ref):
+        return False
+    return all(loaded.delta(u).to_bytes() == ref[u] for u in ref)
+
+
+# ---------------------------------------------------------------------------
+# open latency vs fleet size
+# ---------------------------------------------------------------------------
+
+def bench_open_latency(fleet_sizes: list[int], seed: int = 3) -> list[dict]:
+    out = []
+    for n in fleet_sizes:
+        store = _build(n, seed)
+        ref = _ref_bytes(store)
+        root = tempfile.mkdtemp(prefix="durable_bench_")
+        try:
+            base = f"{root}/fleet"
+            t0 = time.time()
+            durable = DurableStore.create(base, store)
+            create_ms = (time.time() - t0) * 1e3
+
+            t0 = time.time()
+            lazy = DurableStore.open(base).load_store(lazy=True)
+            open_lazy_ms = (time.time() - t0) * 1e3
+            u0 = sorted(ref)[0]
+            t0 = time.time()
+            first = lazy.delta(u0)
+            first_touch_ms = (time.time() - t0) * 1e3
+            lazy_exact = first.to_bytes() == ref[u0]
+
+            t0 = time.time()
+            eager = DurableStore.open(base).load_store(lazy=False)
+            open_eager_ms = (time.time() - t0) * 1e3
+            eager_exact = all(
+                eager.delta(u).to_bytes() == ref[u] for u in ref
+            )
+            stats = durable.stats()
+            out.append({
+                "n_users": n,
+                "live_bytes": stats["live_bytes"],
+                "n_slabs": stats["n_slabs"],
+                "create_ms": round(create_ms, 2),
+                "open_lazy_ms": round(open_lazy_ms, 2),
+                "open_eager_ms": round(open_eager_ms, 2),
+                "first_touch_ms": round(first_touch_ms, 3),
+                "lazy_bit_exact": bool(lazy_exact),
+                "eager_bit_exact": bool(eager_exact),
+            })
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# crash sweep: kill at every write / compaction step
+# ---------------------------------------------------------------------------
+
+def bench_crash_sweep(n_users: int, seed: int = 5) -> dict:
+    store = _build(n_users, seed)
+    ref = _ref_bytes(store)
+    users = sorted(ref)
+    root = tempfile.mkdtemp(prefix="durable_bench_")
+    try:
+        base = f"{root}/fleet"
+        # small slabs so commits span several slab+parity write steps
+        d0 = DurableStore.create(base, store, slab_shards=4)
+        # pre-seed garbage for the compaction sweep
+        d0.put_delta(users[0], store.delta(users[0]))
+        d0.remove_user(users[-1])
+        d0.commit()
+        pre = dict(ref)
+        del pre[users[-1]]
+        post = dict(pre)
+        post["late_user"] = ref[users[1]]
+
+        def commit_op(on_step):
+            d = DurableStore.open(base)
+            d.put_delta_bytes("late_user", ref[users[1]],
+                              store.delta(users[1]).codebook_generation)
+            d.commit(on_step=on_step)
+
+        def compact_op(on_step):
+            DurableStore.open(base).compact(on_step=on_step)
+
+        snap = f"{root}/snap"
+        shutil.copytree(base, snap)
+        results = {}
+        for op_name, op, pre_state, post_state in (
+            ("commit", commit_op, pre, post),
+            ("compact", compact_op, pre, pre),
+        ):
+            shutil.rmtree(base)
+            shutil.copytree(snap, base)
+            steps = record_steps(op)
+            points = []
+            all_exact = True
+            for i, name in enumerate(steps):
+                shutil.rmtree(base)
+                shutil.copytree(snap, base)
+                crashed = False
+                try:
+                    op(CrashSchedule(fail_at=(i,)))
+                except InjectedCrash:
+                    crashed = True
+                t0 = time.time()
+                d = DurableStore.open(base)
+                recover_ms = (time.time() - t0) * 1e3
+                is_pre = _fleet_bit_exact(d, pre_state)
+                is_post = _fleet_bit_exact(d, post_state)
+                exact = is_pre or is_post
+                # retrying the op after recovery must converge to POST
+                op(lambda _s: None)
+                converged = _fleet_bit_exact(DurableStore.open(base),
+                                             post_state)
+                all_exact = all_exact and crashed and exact and converged
+                points.append({
+                    "step": name,
+                    "state": "post" if is_post else
+                             ("pre" if is_pre else "TORN"),
+                    "recover_ms": round(recover_ms, 2),
+                    "bit_exact": bool(exact),
+                    "retry_converges": bool(converged),
+                })
+            results[op_name] = {
+                "n_steps": len(steps),
+                "steps": steps,
+                "all_crash_points_bit_exact": bool(all_exact),
+                "crash_points": points,
+            }
+        return results
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# scrub throughput + parity repair
+# ---------------------------------------------------------------------------
+
+def bench_scrub_repair(n_users: int, seed: int = 7) -> dict:
+    store = _build(n_users, seed)
+    ref = _ref_bytes(store)
+    root = tempfile.mkdtemp(prefix="durable_bench_")
+    try:
+        base = f"{root}/fleet"
+        durable = DurableStore.create(base, store)
+
+        # clean-scrub throughput
+        scrubber = Scrubber(durable)
+        t0 = time.time()
+        clean = scrubber.scrub_all()
+        dt = time.time() - t0
+        scrub_mb_per_s = (scrubber.bytes_scanned / 1e6) / max(dt, 1e-9)
+
+        # one injected single-shard corruption per slab; each must repair
+        faults = DiskFaults(seed=seed)
+        victims = []
+        for slab in durable.manifest.slabs:
+            entry = max(slab.shards, key=lambda e: e.length)
+            path, off, length = durable.shard_location(entry.shard_id)
+            faults.corrupt_region(path, off, min(length, 64))
+            victims.append(entry.shard_id)
+        repair_ms = []
+        for sid in victims:
+            t0 = time.time()
+            durable.read_shard(sid, repair=True)
+            repair_ms.append((time.time() - t0) * 1e3)
+        bit_exact_after = _fleet_bit_exact(durable, ref)
+
+        # a residual scrub pass must now find a healthy fleet
+        residual = Scrubber(durable).scrub_all()
+        return {
+            "n_users": n_users,
+            "bytes_scanned": scrubber.bytes_scanned,
+            "clean_pass": clean,
+            "scrub_mb_per_s": round(scrub_mb_per_s, 2),
+            "n_injected": len(victims),
+            "n_repaired": durable.n_repairs,
+            "repair_ms_mean": round(float(np.mean(repair_ms)), 3),
+            "repair_ms_max": round(float(np.max(repair_ms)), 3),
+            "bit_exact_after_repair": bool(bit_exact_after),
+            "residual_pass": residual,
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# serving auto-repair (quarantine -> repair -> verify -> release)
+# ---------------------------------------------------------------------------
+
+def bench_serve_repair(n_users: int, rows: int, seed: int = 9) -> dict:
+    store = _build(n_users, seed)
+    users = sorted(store.user_ids)
+    root = tempfile.mkdtemp(prefix="durable_bench_")
+    try:
+        base = f"{root}/fleet"
+        # small slabs so the fleet spans several parity groups — the
+        # repairable single fault and the unrepairable double fault must
+        # live in DIFFERENT groups
+        durable = DurableStore.create(base, store, slab_shards=4)
+
+        # corrupt one user's shard on disk (single fault: repairable)
+        victim = users[0]
+        entry = durable.shard_for_user(victim)
+        victim_slab = next(
+            s.slab_id for s in durable.manifest.slabs
+            if any(e.shard_id == entry.shard_id for e in s.shards)
+        )
+        path, off, length = durable.shard_location(entry.shard_id)
+        DiskFaults(seed=seed).corrupt_region(path, off, min(length, 64))
+        # double-fault a pair of users in another slab group
+        # (unrepairable: must stay quarantined)
+        doomed = []
+        for slab in durable.manifest.slabs:
+            if slab.slab_id == victim_slab:
+                continue
+            delta_shards = [e for e in slab.shards if e.name]
+            if len(delta_shards) >= 2:
+                for e in delta_shards[:2]:
+                    p, o, ln = durable.shard_location(e.shard_id)
+                    DiskFaults(seed=seed).corrupt_region(p, o, min(ln, 64))
+                    doomed.append(e.name)
+                break
+
+        server = ForestServer(durable.load_store(lazy=True))
+        attach_auto_repair(server, durable)
+        clean = ForestServer(store)
+        requests = make_request_batch(store, n_requests=2 * n_users,
+                                      rows_per_request=rows, seed=seed)
+        t0 = time.time()
+        statuses = server.serve_safe(requests, engine="simple")
+        serve_ms = (time.time() - t0) * 1e3
+        silent_wrong = parity_exact = n_ok = n_quarantined = 0
+        for s, (u, x) in zip(statuses, requests):
+            if s.status == "ok":
+                n_ok += 1
+                want = clean.serve([(u, x)], engine="simple")[0]
+                if np.array_equal(s.prediction, want):
+                    parity_exact += 1
+                else:
+                    silent_wrong += 1
+            else:
+                n_quarantined += 1
+                if s.user_id not in doomed:
+                    silent_wrong += 1  # repairable user not released
+        health = server.stats()["health"]
+        return {
+            "n_users": n_users,
+            "n_requests": len(requests),
+            "victim_repaired": health["repairs"] >= 1,
+            "doomed_users": sorted(set(doomed)),
+            "n_ok": n_ok,
+            "n_quarantined": n_quarantined,
+            "quarantined_users": server.quarantined_users,
+            "parity_exact_requests": parity_exact,
+            "serve_ms": round(serve_ms, 2),
+            "repair_attempts": health["repair_attempts"],
+            "repairs": health["repairs"],
+            "last_repair_error": health["last_repair_error"],
+            "silent_wrong": silent_wrong,
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _assert_smoke(results: dict) -> None:
+    """The CI acceptance gate (ISSUE 8): every crash point recovers
+    bit-exact, scrub repairs every injected corruption, and the silent-
+    wrong count across all sections is 0."""
+    for op_name, sweep in results["crash_sweep"].items():
+        assert sweep["n_steps"] > 0, op_name
+        assert sweep["all_crash_points_bit_exact"], (op_name, sweep)
+    scrub = results["scrub_repair"]
+    assert scrub["n_injected"] > 0
+    assert scrub["n_repaired"] == scrub["n_injected"], scrub
+    assert scrub["bit_exact_after_repair"], scrub
+    assert scrub["clean_pass"]["unrepairable"] == 0, scrub
+    for f in results["open_latency"]:
+        assert f["lazy_bit_exact"] and f["eager_bit_exact"], f
+    serve = results["serve_repair"]
+    assert serve["victim_repaired"], serve
+    assert set(serve["quarantined_users"]) == set(serve["doomed_users"]), serve
+    assert results["silent_wrong_total"] == 0, results
+    print("durable smoke ok")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fleets + hard acceptance asserts (CI)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small fleets, no asserts")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.smoke or args.quick:
+        fleet_sizes, crash_users, scrub_users, serve_users, rows = \
+            [6, 16], 5, 8, 6, 32
+    else:
+        fleet_sizes, crash_users, scrub_users, serve_users, rows = \
+            [10, 40, 120], 10, 40, 12, 128
+
+    results: dict = {
+        "benchmark": "durable",
+        "quick": bool(args.smoke or args.quick),
+        "open_latency": bench_open_latency(fleet_sizes),
+        "crash_sweep": bench_crash_sweep(crash_users),
+        "scrub_repair": bench_scrub_repair(scrub_users),
+        "serve_repair": bench_serve_repair(serve_users, rows),
+    }
+    results["silent_wrong_total"] = (
+        results["serve_repair"]["silent_wrong"]
+        + sum(
+            0 if p["bit_exact"] else 1
+            for sweep in results["crash_sweep"].values()
+            for p in sweep["crash_points"]
+        )
+        + (0 if results["scrub_repair"]["bit_exact_after_repair"] else 1)
+    )
+    if args.smoke:
+        _assert_smoke(results)
+
+    out_path = pathlib.Path(
+        args.out
+        or pathlib.Path(__file__).resolve().parent.parent
+        / "BENCH_durable.json"
+    )
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(json.dumps(results, indent=2))
+    print(f"\nwrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ before the trailer existed still parse (``docs/format.md`` §8).
 from __future__ import annotations
 
 import io
+import os
 import struct
 import zlib
 
@@ -46,6 +47,15 @@ class IntegrityError(FramingError):
     """The frame's bytes are internally inconsistent: CRC mismatch, bad
     magic, an impossible dtype tag, or a shape that contradicts the
     element count."""
+
+
+class UnrepairableError(IntegrityError):
+    """Corruption was DETECTED but could not be REPAIRED: more than one
+    shard of a parity group is corrupt or missing, so XOR reconstruction
+    cannot recover the bytes (``store.durable``).  Subclasses
+    ``IntegrityError`` so every quarantine/rejection path that handles
+    detected corruption handles the unrepairable case identically —
+    never a silent wrong artifact."""
 
 
 #: CRC trailer layout: this magic + u32 CRC32 of every preceding byte.
@@ -215,3 +225,39 @@ def expect_magic(inp: io.BytesIO, magic: bytes, what: str) -> None:
         raise IntegrityError(
             f"{what}: bad magic {got!r} (expected {magic!r})"
         )
+
+
+# ---------------------------------------------------------------------------
+# durable writes: the one atomic-write helper every on-disk frame shares
+# ---------------------------------------------------------------------------
+
+def fsync_dir(path: str) -> None:
+    """fsync a DIRECTORY so a rename into it survives power loss.  POSIX
+    makes the rename itself atomic but not durable: until the directory
+    inode is flushed, a crash can forget the new name entirely.  No-op on
+    platforms whose directories refuse ``os.open`` (e.g. Windows)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def atomic_write_bytes(path: str, data: bytes) -> None:
+    """Write ``data`` to ``path`` atomically AND durably: write to a
+    same-directory temp file, flush + fsync the file, ``os.replace`` onto
+    the final name, then fsync the containing directory.  After a crash at
+    any instant the path holds either the complete old bytes or the
+    complete new bytes — never a prefix (the durable store's whole
+    recovery story rests on this; the migration journal shares it)."""
+    directory = os.path.dirname(os.path.abspath(path))
+    tmp = f"{path}.tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    fsync_dir(directory)

@@ -23,6 +23,8 @@ chaos test is replayable bit-for-bit.
 """
 from __future__ import annotations
 
+import errno
+import os
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -122,6 +124,99 @@ def poison_user(
         store.arena.invalidate(user_id)
     store.version += 1
     store._user_versions[user_id] = store.version
+
+
+# ---------------------------------------------------------------------------
+# disk faults (ISSUE 8): what the durable shard store is tested against
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DiskFaults:
+    """Seeded disk-fault injector for the durable shard store
+    (``store.durable``).
+
+    Two kinds of surface, both deterministic under ``seed``:
+
+    * **File mutators** — corrupt on-disk state directly, the way a dying
+      disk or torn write would: ``torn_write`` truncates a file at a byte
+      offset, ``bit_rot_file`` flips seeded bits in place, ``missing``
+      deletes a file, and ``corrupt_region`` zeroes a byte range (a
+      trashed sector inside a slab).  Each returns/records where it
+      struck so failures replay bit-for-bit.
+    * **I/O hooks** — install ``on_read`` as ``DurableStore.read_fault``
+      to bit-rot the shards named in ``rot_shards`` as they are read
+      (latent corruption surfacing at access time), and ``on_write`` as
+      ``DurableStore.write_fault`` to raise ``OSError(ENOSPC)`` once
+      ``enospc_after`` writes have succeeded (a full disk mid-commit).
+    """
+
+    seed: int = 0
+    rot_shards: tuple = ()
+    enospc_after: int | None = None
+    reads: int = 0
+    writes: int = 0
+    rotted: list = field(default_factory=list)
+
+    # -- I/O hooks ----------------------------------------------------------
+
+    def on_read(self, shard_id: int, data: bytes) -> bytes:
+        """``DurableStore.read_fault`` hook: flip one seeded bit in the
+        shards listed in ``rot_shards`` (every read, so repair-then-reread
+        still sees clean bytes only from the healed file, not this hook —
+        remove the shard from ``rot_shards`` to model a one-shot rot)."""
+        self.reads += 1
+        if shard_id in self.rot_shards and data:
+            rng = np.random.default_rng(self.seed + shard_id)
+            bit = int(rng.integers(0, 8 * len(data)))
+            self.rotted.append((shard_id, bit))
+            return flip_bit(data, bit)
+        return data
+
+    def on_write(self, path: str, nbytes: int) -> None:
+        """``DurableStore.write_fault`` hook: allow ``enospc_after``
+        writes, then fail every subsequent one with ``ENOSPC``."""
+        self.writes += 1
+        if self.enospc_after is not None and self.writes > self.enospc_after:
+            raise OSError(
+                errno.ENOSPC,
+                f"injected ENOSPC on write {self.writes} ({nbytes} bytes)",
+                path,
+            )
+
+    # -- file mutators ------------------------------------------------------
+
+    def torn_write(self, path: str, offset: int | None = None) -> int:
+        """Truncate ``path`` at ``offset`` (seeded-random strictly inside
+        the file when omitted) — the on-disk shape of a write that died
+        partway.  Returns the offset used."""
+        size = os.path.getsize(path)
+        if offset is None:
+            rng = np.random.default_rng(self.seed ^ len(path))
+            offset = int(rng.integers(0, size)) if size else 0
+        os.truncate(path, offset)
+        return offset
+
+    def bit_rot_file(self, path: str, n: int = 1) -> list[int]:
+        """Flip ``n`` seeded bits of ``path`` in place (deliberately NOT
+        an atomic write — this IS the corruption).  Returns bit positions."""
+        with open(path, "rb") as f:
+            data = f.read()
+        out, positions = flip_bits(data, self.seed ^ (len(path) << 8), n)
+        with open(path, "wb") as f:
+            f.write(out)
+        return positions
+
+    def corrupt_region(self, path: str, offset: int, length: int) -> None:
+        """Zero ``length`` bytes of ``path`` at ``offset`` — a trashed
+        sector; how the tests corrupt ONE shard inside a multi-shard slab
+        without touching its siblings."""
+        with open(path, "r+b") as f:
+            f.seek(offset)
+            f.write(b"\x00" * length)
+
+    def missing(self, path: str) -> None:
+        """Delete a file (a lost shard / parity file)."""
+        os.remove(path)
 
 
 # ---------------------------------------------------------------------------

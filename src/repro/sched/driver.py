@@ -56,6 +56,9 @@ class LifecycleDriver:
         seed: int = 0,
         verify: bool = True,
         journal_path: str | None = None,
+        scrubber=None,
+        scrub_interval_s: float = 2.0,
+        scrub_shards_per_tick: int = 64,
     ) -> None:
         self.server = server
         self.clock = clock
@@ -69,6 +72,13 @@ class LifecycleDriver:
         self.seed = seed
         self.verify = verify
         self.journal_path = journal_path
+        # background scrubbing (ISSUE 8): a ``store.durable.Scrubber``
+        # ticked in the same low-load gaps as recluster — durability work
+        # must not tax a loaded queue
+        self.scrubber = scrubber
+        self.scrub_interval_s = float(scrub_interval_s)
+        self.scrub_shards_per_tick = int(scrub_shards_per_tick)
+        self._next_scrub: float | None = None
         # state machine: "watching" -> "migrating" -> "watching"
         self.state = "watching"
         self._next_poll: float | None = None
@@ -84,6 +94,8 @@ class LifecycleDriver:
         self.n_migration_ticks = 0
         self.n_deferred = 0
         self.n_recluster_failures = 0
+        self.n_scrub_ticks = 0
+        self.n_scrub_failures = 0
         self.last_report: dict | None = None
         self.last_error: str | None = None
 
@@ -98,6 +110,7 @@ class LifecycleDriver:
         if self.state == "migrating":
             self._migrate_some(now)
             return
+        self._maybe_scrub(now, pending_rows)
         if self._next_poll is not None and now < self._next_poll:
             return
         # load-aware window: a loaded queue stretches the poll interval
@@ -143,6 +156,25 @@ class LifecycleDriver:
                 self.last_error = f"{type(e).__name__}: {e}"
                 self.state = "watching"
                 self._pending = []
+
+    def _maybe_scrub(self, now: float, pending_rows: int) -> None:
+        """One bounded scrub tick when the queue is in a low-load gap and
+        the scrub interval elapsed.  A scrubber fault is counted, never
+        propagated — durability maintenance must not take down the pump
+        loop."""
+        if (
+            self.scrubber is None
+            or pending_rows > self.low_load_rows
+            or (self._next_scrub is not None and now < self._next_scrub)
+        ):
+            return
+        self._next_scrub = now + self.scrub_interval_s
+        try:
+            self.scrubber.tick(self.scrub_shards_per_tick)
+            self.n_scrub_ticks += 1
+        except Exception as e:  # noqa: BLE001 — keep the pump loop alive
+            self.n_scrub_failures += 1
+            self.last_error = f"{type(e).__name__}: {e}"
 
     # ---------------- recluster + rate-limited migration ------------------
     def _start_recluster(self, now: float) -> None:
@@ -217,6 +249,12 @@ class LifecycleDriver:
             "n_pending_migration": len(self._pending),
             "migrate_users_per_s": self.migrate_users_per_s,
             "mode": self.mode,
+            "n_scrub_ticks": self.n_scrub_ticks,
+            "n_scrub_failures": self.n_scrub_failures,
+            "scrub": (
+                self.scrubber.stats() if self.scrubber is not None
+                else None
+            ),
             "last_report": self.last_report,
             "journal": (
                 self._journal.summary() if self._journal is not None

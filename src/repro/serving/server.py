@@ -38,7 +38,7 @@ from __future__ import annotations
 import time
 from collections import Counter, deque
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -166,6 +166,7 @@ class ForestServer:
         interpret: bool | None = None,
         max_retries: int = 3,
         retry_backoff_s: float = 0.01,
+        repairer: "Callable[[str], bool] | None" = None,
     ) -> None:
         self.store = store
         self.plan_cache = PlanCache(plan_cache_size)
@@ -184,6 +185,16 @@ class ForestServer:
         self.integrity_failures = 0
         self.transient_retries = 0
         self.degraded_batches = 0
+        # auto-repair (ISSUE 8): optional hook called for a user whose
+        # delta fails integrity — returns True after repairing + re-
+        # registering the delta (``store.durable.attach_auto_repair``
+        # wires it to parity reconstruction).  A failed repair is
+        # remembered per quarantine entry, so an unrepairable user costs
+        # one attempt, not one per batch.
+        self.repairer = repairer
+        self.repair_attempts = 0
+        self.repairs = 0
+        self.last_repair_error: str | None = None
 
     @classmethod
     def from_forest(
@@ -442,6 +453,39 @@ class ForestServer:
             ):
                 del self._quarantined[u]
 
+    def attach_repairer(self, repairer: Callable[[str], bool]) -> None:
+        """Install the auto-repair hook (see ``__init__``) and forget
+        past repair failures — newly repairable faults get a fresh
+        attempt."""
+        self.repairer = repairer
+        for info in self._quarantined.values():
+            info.pop("repair_failed", None)
+
+    def _try_repair(self, user_id: str) -> bool:
+        """Attempt auto-repair of one user's delta.  True = the repairer
+        repaired AND re-registered the delta (caller re-probes before
+        serving — release is verified, never assumed).  A raise or False
+        from the repairer marks the user's quarantine entry
+        ``repair_failed`` so the attempt is not repeated every batch."""
+        if self.repairer is None:
+            return False
+        info = self._quarantined.get(user_id)
+        if info is not None and info.get("repair_failed"):
+            return False
+        self.repair_attempts += 1
+        try:
+            ok = bool(self.repairer(user_id))
+        except Exception as exc:  # noqa: BLE001 — typed UnrepairableError
+            # and any unexpected repairer fault both mean "not repaired"
+            self.last_repair_error = f"{type(exc).__name__}: {exc}"
+            ok = False
+        if ok:
+            self.repairs += 1
+            self._quarantined.pop(user_id, None)
+        elif info is not None:
+            info["repair_failed"] = True
+        return ok
+
     def _probe_block_trees(self, engine: str | None) -> int:
         """Tree-block size the health probe decodes with — matched to the
         engine the batch will run under, so the probe's decoded tiles land
@@ -515,10 +559,22 @@ class ForestServer:
         probe_bt = block_trees or self._probe_block_trees(engine)
         for u in dict.fromkeys(u for u, _ in requests):
             if u in self._quarantined:
-                continue
+                # quarantine -> repair -> verify -> release (ISSUE 8):
+                # a successful repair re-registers the delta; the probe
+                # below then re-verifies the decode end to end before
+                # the user is served again
+                if not self._try_repair(u):
+                    continue
             exc = self._probe_user(u, probe_bt)
+            if exc is not None and self._try_repair(u):
+                exc = self._probe_user(u, probe_bt)
             if exc is not None:
+                was_attempted = self.repairer is not None
                 self._quarantine(u, exc)
+                if was_attempted:
+                    # repair already failed (or did not survive the
+                    # re-probe) — don't retry it every batch
+                    self._quarantined[u]["repair_failed"] = True
         healthy = [
             (u, x) for u, x in requests if u not in self._quarantined
         ]
@@ -592,6 +648,9 @@ class ForestServer:
                 "integrity_failures": self.integrity_failures,
                 "transient_retries": self.transient_retries,
                 "degraded_batches": self.degraded_batches,
+                "repair_attempts": self.repair_attempts,
+                "repairs": self.repairs,
+                "last_repair_error": self.last_repair_error,
                 "max_retries": self.max_retries,
                 "retry_backoff_s": self.retry_backoff_s,
                 "journal": (

@@ -9,14 +9,22 @@ tile arena for the pipelined serving path, and a codebook LIFECYCLE
 and online re-clustering that migrates user deltas bit-exactly onto a
 successor codebook.
 
+Durability (``store.durable``): the fleet's on-disk tier — parity-
+protected slab files indexed by an epoch-versioned RFN1 manifest, atomic
+commits, crash recovery, parity repair of any single corrupt-or-missing
+shard, background scrubbing, and lazy per-user loading.
+
 Serving goes through ``repro.serving.ForestServer``; the on-disk formats
-(RFS1/RFD1/RFT1/RFM1) are specified byte-for-byte in ``docs/format.md``
-and the subsystem architecture in ``docs/architecture.md``.
+(RFS1/RFD1/RFT1/RFM1/RFN1) are specified byte-for-byte in
+``docs/format.md`` and the subsystem architecture in
+``docs/architecture.md``.
 """
 
+from ..core.framing import UnrepairableError, atomic_write_bytes
 from .arena import TileArena
 from .codebook import SharedCodebook, SharedComponent, build_shared_codebook
 from .delta import UserDelta, encode_user_delta, hydrate, reconstruct_user
+from .durable import DurableStore, Scrubber, attach_auto_repair, xor_parity
 from .fleet import make_drifted_fleet, make_request_batch, make_synthetic_fleet
 from .lifecycle import (
     MigrationJournal,
@@ -31,15 +39,20 @@ from .lifecycle import (
 from .runtime import ForestStore, TileCache, build_store
 
 __all__ = [
+    "DurableStore",
     "ForestStore",
     "MigrationJournal",
     "ReclusterResult",
     "RemapTable",
+    "Scrubber",
     "SharedCodebook",
     "SharedComponent",
     "TileArena",
     "TileCache",
+    "UnrepairableError",
     "UserDelta",
+    "atomic_write_bytes",
+    "attach_auto_repair",
     "build_shared_codebook",
     "build_store",
     "drift_report",
@@ -53,4 +66,5 @@ __all__ = [
     "recluster",
     "reconstruct_user",
     "resume_recluster",
+    "xor_parity",
 ]

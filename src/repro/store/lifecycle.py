@@ -50,6 +50,7 @@ import numpy as np
 
 from ..core.framing import (
     IntegrityError,
+    atomic_write_bytes,
     check_crc,
     expect_magic,
     read_arr,
@@ -844,12 +845,11 @@ class MigrationJournal:
     def _persist(self) -> None:
         if self.path is None:
             return
-        tmp = f"{self.path}.tmp"
-        with open(tmp, "wb") as f:
-            f.write(self.to_bytes())
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, self.path)
+        # Shared atomic-write helper (ISSUE 8 bugfix): the old inline
+        # version fsynced the file but never the containing directory, so
+        # a power loss right after os.replace could forget the rename and
+        # resurrect a stale journal.
+        atomic_write_bytes(self.path, self.to_bytes())
 
     @classmethod
     def load(cls, path: str) -> "MigrationJournal":

@@ -274,3 +274,127 @@ def test_single_bit_corruption_never_silently_wrong(frame, data):
     # the frame read as CRC-less with an intact payload): the decoded
     # artifact must then be BIT-EXACT
     assert reparsed.to_bytes() == blob, (frame, bit)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 8: repair semantics of the durable shard store — any SINGLE
+# corrupted-or-deleted shard in a slab group scrubs back to a bit-exact
+# fleet; any DOUBLE fault in one group is a typed UnrepairableError and
+# the silent-wrong count stays 0
+# ---------------------------------------------------------------------------
+
+_DURABLE_TEMPLATE: dict = {}
+
+
+def _durable_template():
+    """One small durable fleet on disk (one slab group: 1 codebook + 6
+    delta shards + parity), built once; examples copy it fresh."""
+    import tempfile
+
+    from repro.store import DurableStore, build_store
+    from repro.store.fleet import make_synthetic_fleet
+
+    store = build_store(make_synthetic_fleet(
+        n_users=6, d=5, n_bins=12, seed=29, n_trees=(3, 5), max_depth=3,
+    ))
+    root = tempfile.mkdtemp(prefix="durable_prop_")
+    path = f"{root}/fleet"
+    durable = DurableStore.create(path, store, slab_shards=8)
+    shard_ids = sorted(e.shard_id for _, e in durable.manifest.live_entries())
+    ref = {e.shard_id: durable.read_shard(e.shard_id)
+           for _, e in durable.manifest.live_entries()}
+    users = {e.shard_id: e.name for _, e in durable.manifest.live_entries()
+             if e.name}
+    return {"path": path, "shard_ids": shard_ids, "ref": ref,
+            "users": users}
+
+
+def _inject_shard_fault(durable, shard_id, fault, seed):
+    """Corrupt or delete ONE shard's bytes inside its slab file."""
+    from repro.runtime.chaos import DiskFaults
+
+    path, off, length = durable.shard_location(shard_id)
+    faults = DiskFaults(seed=seed)
+    if fault == "zero":
+        faults.corrupt_region(path, off, length)       # "deleted" shard
+    elif fault == "rot":
+        with open(path, "rb") as f:
+            blob = f.read()
+        bit = 8 * off + seed % max(8 * length, 1)      # flip inside the shard
+        from repro.runtime.chaos import flip_bit
+        with open(path, "wb") as f:
+            f.write(flip_bit(blob, bit))
+    else:  # "truncate": tear the slab inside this shard — only valid for
+        # the LAST shard of the slab (else siblings are damaged too)
+        faults.torn_write(path, off + seed % max(length, 1))
+
+
+@given(st.data())
+@settings(max_examples=12, deadline=None)
+def test_durable_single_fault_repairs_double_fault_typed(data):
+    import shutil
+    import tempfile
+
+    from repro.core.framing import IntegrityError, UnrepairableError
+    from repro.store import DurableStore, Scrubber
+
+    if not _DURABLE_TEMPLATE:
+        _DURABLE_TEMPLATE.update(_durable_template())
+    tpl = _DURABLE_TEMPLATE
+    work = tempfile.mkdtemp(prefix="durable_case_")
+    try:
+        base = f"{work}/fleet"
+        shutil.copytree(tpl["path"], base)
+        durable = DurableStore.open(base)
+        seed = data.draw(st.integers(0, 2**31 - 1), label="seed")
+        victim = data.draw(st.sampled_from(tpl["shard_ids"]), label="victim")
+        last = max(
+            tpl["shard_ids"],
+            key=lambda s: durable.shard_location(s)[1],
+        )
+        fault = data.draw(
+            st.sampled_from(
+                ["zero", "rot", "truncate"] if victim == last
+                else ["zero", "rot"]
+            ),
+            label="fault",
+        )
+        double = data.draw(st.booleans(), label="double")
+        _inject_shard_fault(durable, victim, fault, seed)
+        if double:
+            second = data.draw(
+                st.sampled_from([s for s in tpl["shard_ids"] if s != victim]),
+                label="second",
+            )
+            # the second fault must not also hit the first victim's bytes,
+            # so zero exactly that shard's region
+            _inject_shard_fault(durable, second, "zero", seed)
+
+        out = Scrubber(durable).scrub_all()
+        if not double:
+            # single fault: scrub repairs, reload is bit-exact vs the
+            # pre-fault fleet (parity + every sibling byte recovered)
+            assert out["unrepairable"] == 0, out
+            for sid, want in tpl["ref"].items():
+                assert durable.read_shard(sid) == want, sid
+            loaded = durable.load_store(lazy=False)
+            assert set(loaded.user_ids) == set(tpl["users"].values())
+        else:
+            # double fault in one group: typed UnrepairableError from the
+            # repair path...
+            with pytest.raises(UnrepairableError):
+                durable.read_shard(victim, repair=True)
+            assert out["unrepairable"] >= 1, out
+            # ...and ZERO silent wrongs anywhere: every shard read either
+            # returns the pre-fault bytes or raises a typed error
+            silent_wrong = 0
+            for sid, want in tpl["ref"].items():
+                try:
+                    got = durable.read_shard(sid)
+                except IntegrityError:
+                    continue
+                if got != want:
+                    silent_wrong += 1
+            assert silent_wrong == 0
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
