@@ -41,7 +41,16 @@ import numpy as np
 from .arithmetic import ArithmeticCode
 from .bitio import BitReader, BitWriter
 from .bregman import ClusteringResult, cluster_models
-from .framing import read_arr, read_bytes, write_arr, write_bytes
+from .framing import (
+    check_crc,
+    expect_magic,
+    read_arr,
+    read_bytes,
+    read_struct,
+    with_crc,
+    write_arr,
+    write_bytes,
+)
 from .huffman import HuffmanCode
 from .lz import lzw_decode_bits, lzw_encode_bits
 from .stats import (
@@ -154,6 +163,48 @@ def emit_streams(
     return vars_streams, vars_n, split_streams, split_n, fits_streams, fits_n
 
 
+#: magic of the inline single-forest frame (legacy format; docs/format.md §7)
+_RFC_MAGIC = b"RFC1"
+
+
+def _write_rfc_component(out: io.BytesIO, c: ClusteredComponent) -> None:
+    """Write one RFC1 COMPONENT record (mirror of ``_read_rfc_component``):
+    u8 coder flag, ARR cluster map, u16 cluster count, then per cluster an
+    ARR codebook table, u32 symbol count, and a BYTES stream."""
+    out.write(struct.pack("<B", 1 if c.coder == "arithmetic" else 0))
+    write_arr(out, c.kid_to_cluster.astype(np.int16))
+    out.write(struct.pack("<H", len(c.streams)))
+    for k in range(len(c.streams)):
+        if c.coder == "huffman":
+            write_arr(out, c.codebook_lengths[k].astype(np.uint8))
+        else:
+            write_arr(out, c.centroid_freqs[k].astype(np.uint32))
+        out.write(struct.pack("<I", c.n_symbols[k]))
+        write_bytes(out, c.streams[k])
+
+
+def _read_rfc_component(inp: io.BytesIO) -> ClusteredComponent:
+    """Read one RFC1 COMPONENT record written by ``_write_rfc_component``."""
+    (is_arith,) = read_struct(inp, "<B", "RFC1 component coder flag")
+    kid_to_cluster = read_arr(inp).astype(np.int16)
+    (nk,) = read_struct(inp, "<H", "RFC1 component cluster count")
+    lengths, freqs, streams, n_symbols = [], [], [], []
+    for _ in range(nk):
+        tab = read_arr(inp)
+        if is_arith:
+            freqs.append(tab.astype(np.int64))
+            lengths.append(np.zeros(0, np.int32))
+        else:
+            lengths.append(tab.astype(np.int32))
+        (ns,) = read_struct(inp, "<I", "RFC1 component symbol count")
+        n_symbols.append(ns)
+        streams.append(read_bytes(inp))
+    return ClusteredComponent(
+        kid_to_cluster, lengths, streams, n_symbols,
+        "arithmetic" if is_arith else "huffman", freqs,
+    )
+
+
 @dataclass
 class CompressedForest:
     meta: ForestMeta
@@ -203,28 +254,9 @@ class CompressedForest:
 
     # ---------------- serialization ---------------------------------------
     def to_bytes(self) -> bytes:
-        out = io.BytesIO()
-
-        def w_arr(a: np.ndarray) -> None:
-            write_arr(out, a)
-
-        def w_bytes(b: bytes) -> None:
-            write_bytes(out, b)
-
-        def w_comp(c: ClusteredComponent) -> None:
-            out.write(struct.pack("<B", 1 if c.coder == "arithmetic" else 0))
-            w_arr(c.kid_to_cluster.astype(np.int16))
-            out.write(struct.pack("<H", len(c.streams)))
-            for k in range(len(c.streams)):
-                if c.coder == "huffman":
-                    w_arr(c.codebook_lengths[k].astype(np.uint8))
-                else:
-                    w_arr(c.centroid_freqs[k].astype(np.uint32))
-                out.write(struct.pack("<I", c.n_symbols[k]))
-                w_bytes(c.streams[k])
-
         m = self.meta
-        out.write(b"RFC1")
+        out = io.BytesIO()
+        out.write(_RFC_MAGIC)
         out.write(
             struct.pack(
                 "<IIHIB", self.n_trees, m.n_features, m.n_classes,
@@ -232,56 +264,35 @@ class CompressedForest:
             )
         )
         out.write(struct.pack("<HI", self.max_depth, self.zaks_total_bits))
-        w_arr(m.n_bins_per_feature.astype(np.int32))
-        w_arr(m.categorical.astype(np.uint8))
-        w_arr(self.zaks_lengths.astype(np.int32))
-        w_bytes(self.zaks_payload)
-        w_comp(self.vars_comp)
+        write_arr(out, m.n_bins_per_feature.astype(np.int32))
+        write_arr(out, m.categorical.astype(np.uint8))
+        write_arr(out, self.zaks_lengths.astype(np.int32))
+        write_bytes(out, self.zaks_payload)
+        _write_rfc_component(out, self.vars_comp)
         out.write(struct.pack("<H", len(self.splits_comp)))
         for v, c in sorted(self.splits_comp.items()):
             out.write(struct.pack("<H", v))
-            w_comp(c)
-        w_comp(self.fits_comp)
-        w_arr(self.fit_values.astype(np.float64))
-        return out.getvalue()
+            _write_rfc_component(out, c)
+        _write_rfc_component(out, self.fits_comp)
+        write_arr(out, self.fit_values.astype(np.float64))
+        return with_crc(out.getvalue())
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "CompressedForest":
-        inp = io.BytesIO(data)
-
-        def r_arr() -> np.ndarray:
-            return read_arr(inp)
-
-        def r_bytes() -> bytes:
-            return read_bytes(inp)
-
-        def r_comp() -> ClusteredComponent:
-            (is_arith,) = struct.unpack("<B", inp.read(1))
-            kid_to_cluster = r_arr().astype(np.int16)
-            (nk,) = struct.unpack("<H", inp.read(2))
-            lengths, freqs, streams, n_symbols = [], [], [], []
-            for _ in range(nk):
-                tab = r_arr()
-                if is_arith:
-                    freqs.append(tab.astype(np.int64))
-                    lengths.append(np.zeros(0, np.int32))
-                else:
-                    lengths.append(tab.astype(np.int32))
-                (ns,) = struct.unpack("<I", inp.read(4))
-                n_symbols.append(ns)
-                streams.append(r_bytes())
-            return ClusteredComponent(
-                kid_to_cluster, lengths, streams, n_symbols,
-                "arithmetic" if is_arith else "huffman", freqs,
-            )
-
-        assert inp.read(4) == b"RFC1", "bad magic"
-        n_trees, d, n_classes, n_obs, is_reg = struct.unpack(
-            "<IIHIB", inp.read(15)
+        """Parse one RFC1 frame.  The CRC32 trailer is verified when
+        present (pre-ISSUE-9 frames without one still parse); truncated
+        or corrupted frames raise a typed ``core.framing.FramingError``
+        instead of ``struct.error`` / ``AssertionError``."""
+        inp = io.BytesIO(check_crc(data, "RFC1 compressed forest"))
+        expect_magic(inp, _RFC_MAGIC, "RFC1 compressed forest")
+        n_trees, d, n_classes, n_obs, is_reg = read_struct(
+            inp, "<IIHIB", "RFC1 header"
         )
-        max_depth, zaks_total_bits = struct.unpack("<HI", inp.read(6))
-        n_bins = r_arr().astype(np.int32)
-        categorical = r_arr().astype(bool)
+        max_depth, zaks_total_bits = read_struct(
+            inp, "<HI", "RFC1 structure header"
+        )
+        n_bins = read_arr(inp).astype(np.int32)
+        categorical = read_arr(inp).astype(bool)
         meta = ForestMeta(
             n_features=d,
             task="regression" if is_reg else "classification",
@@ -290,16 +301,16 @@ class CompressedForest:
             n_train_obs=n_obs,
             categorical=categorical,
         )
-        zaks_lengths = r_arr().astype(np.int32)
-        zaks_payload = r_bytes()
-        vars_comp = r_comp()
-        (nsplit,) = struct.unpack("<H", inp.read(2))
+        zaks_lengths = read_arr(inp).astype(np.int32)
+        zaks_payload = read_bytes(inp)
+        vars_comp = _read_rfc_component(inp)
+        (nsplit,) = read_struct(inp, "<H", "RFC1 split-component count")
         splits_comp = {}
         for _ in range(nsplit):
-            (v,) = struct.unpack("<H", inp.read(2))
-            splits_comp[v] = r_comp()
-        fits_comp = r_comp()
-        fit_values = r_arr().astype(np.float64)
+            (v,) = read_struct(inp, "<H", "RFC1 split variable id")
+            splits_comp[v] = _read_rfc_component(inp)
+        fits_comp = _read_rfc_component(inp)
+        fit_values = read_arr(inp).astype(np.float64)
         return cls(
             meta, n_trees, zaks_payload, zaks_total_bits, zaks_lengths,
             vars_comp, splits_comp, fits_comp, fit_values, max_depth,

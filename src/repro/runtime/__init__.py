@@ -1,5 +1,6 @@
 """repro.runtime — fault tolerance: restart, preemption, stragglers,
-plus the deterministic fault-injection harness (``runtime.chaos``)."""
+plus the deterministic fault-injection harness (``runtime.chaos``) and
+the lock-discipline annotation (``runtime.guards``)."""
 
 from .chaos import (
     BatchFaults,
@@ -17,6 +18,7 @@ from .fault_tolerance import (
     StragglerMonitor,
     TrainLoop,
 )
+from .guards import guarded_by
 
 __all__ = [
     "BatchFaults",
@@ -30,5 +32,6 @@ __all__ = [
     "TransientFaults",
     "flip_bit",
     "flip_bits",
+    "guarded_by",
     "truncate",
 ]

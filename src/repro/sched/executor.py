@@ -27,13 +27,23 @@ from __future__ import annotations
 import queue as _queue
 import threading
 
+from ..runtime.guards import guarded_by
 from .batcher import MicroBatch
 
 _STOP = object()
 
 
+@guarded_by(
+    "_idle",
+    "_inflight", "n_batches", "n_failed_batches", "n_preplanned",
+)
 class PipelinedExecutor:
-    """Single-consumer micro-batch executor over one ``ForestServer``."""
+    """Single-consumer micro-batch executor over one ``ForestServer``.
+
+    ``_idle`` (a ``Condition``) is the one lock: it already guarded the
+    in-flight count for backpressure, and since ISSUE 9 it also guards
+    the batch counters — ``_run`` mutates them on the worker thread
+    while ``stats`` reads them from the pump thread."""
 
     def __init__(
         self,
@@ -106,7 +116,8 @@ class PipelinedExecutor:
             return
         try:
             self.server.plan(reqs)
-            self.n_preplanned += 1
+            with self._idle:
+                self.n_preplanned += 1
         except Exception:  # noqa: BLE001 — planning faults surface (and
             # are isolated) at execute time; pre-planning is best-effort
             pass
@@ -125,7 +136,8 @@ class PipelinedExecutor:
                     self._idle.notify_all()
 
     def _run(self, batch: MicroBatch) -> None:
-        self.n_batches += 1
+        with self._idle:
+            self.n_batches += 1
         requests = [(r.user_id, r.rows) for r in batch.requests]
         try:
             if self.fault_hook is not None:
@@ -144,7 +156,8 @@ class PipelinedExecutor:
                     r.prediction = p
         except Exception as e:  # noqa: BLE001 — batch-level isolation:
             # one poisoned batch must not kill the scheduler loop
-            self.n_failed_batches += 1
+            with self._idle:
+                self.n_failed_batches += 1
             detail = f"{type(e).__name__}: {e}"
             for r in batch.requests:
                 r.status = "failed"
@@ -175,12 +188,14 @@ class PipelinedExecutor:
         self._worker = None
 
     def stats(self) -> dict:
-        """Execution counters for dashboards."""
-        return {
-            "n_batches": self.n_batches,
-            "n_failed_batches": self.n_failed_batches,
-            "n_preplanned": self.n_preplanned,
-            "overlap": self.overlap,
-            "max_inflight": self.max_inflight,
-            "safe": self.safe,
-        }
+        """Execution counters for dashboards, snapshotted under the
+        lock (the worker thread mutates them concurrently)."""
+        with self._idle:
+            return {
+                "n_batches": self.n_batches,
+                "n_failed_batches": self.n_failed_batches,
+                "n_preplanned": self.n_preplanned,
+                "overlap": self.overlap,
+                "max_inflight": self.max_inflight,
+                "safe": self.safe,
+            }

@@ -17,9 +17,11 @@ from __future__ import annotations
 
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from threading import Event
+from threading import Event, Lock
 
 import numpy as np
+
+from ..runtime.guards import guarded_by
 
 
 class AdmissionError(RuntimeError):
@@ -101,6 +103,11 @@ class SchedRequest:
         return self.completed_t - self.deadline
 
 
+@guarded_by(
+    "_lock",
+    "_tenants", "_n_pending", "_pending_rows", "_next_seq",
+    "n_admitted", "n_rejected", "rows_admitted",
+)
 class RequestQueue:
     """Per-tenant FIFO of pending requests with admission bounds.
 
@@ -110,6 +117,12 @@ class RequestQueue:
     deadline trigger looks at TENANT-HEAD deadlines (``head_deadlines``):
     a request behind another of the same tenant cannot be served before
     it, so the head deadline is the earliest *servable* one.
+
+    Thread-safe (ISSUE 9 lock-discipline fix): client threads ``submit``
+    while the scheduler's pump thread peeks/pops, so every access to the
+    tenant map, occupancy totals, and admission counters holds ``_lock``
+    — previously the admission check-then-append could interleave and
+    overshoot the bounds, and ``stats`` could read torn totals.
     """
 
     def __init__(
@@ -123,6 +136,7 @@ class RequestQueue:
         self.max_pending_requests = int(max_pending_requests)
         self.max_pending_rows = int(max_pending_rows)
         self.max_pending_per_tenant = int(max_pending_per_tenant)
+        self._lock = Lock()
         self._tenants: OrderedDict[str, deque[SchedRequest]] = OrderedDict()
         self._n_pending = 0
         self._pending_rows = 0
@@ -147,60 +161,67 @@ class RequestQueue:
             raise ValueError(
                 f"rows must be a (n, d) block, got shape {rows.shape}"
             )
-        fifo = self._tenants.get(user_id)
-        if self._n_pending >= self.max_pending_requests:
-            self.n_rejected += 1
-            raise AdmissionError(
-                f"queue full: {self._n_pending} pending requests "
-                f"(bound {self.max_pending_requests})"
+        # admission is one atomic check-then-append: concurrent submits
+        # racing the bounds check could otherwise both pass and overshoot
+        with self._lock:
+            fifo = self._tenants.get(user_id)
+            if self._n_pending >= self.max_pending_requests:
+                self.n_rejected += 1
+                raise AdmissionError(
+                    f"queue full: {self._n_pending} pending requests "
+                    f"(bound {self.max_pending_requests})"
+                )
+            if self._pending_rows + len(rows) > self.max_pending_rows:
+                self.n_rejected += 1
+                raise AdmissionError(
+                    f"queue full: {self._pending_rows} pending rows + "
+                    f"{len(rows)} would exceed the "
+                    f"{self.max_pending_rows}-row bound"
+                )
+            if (fifo is not None
+                    and len(fifo) >= self.max_pending_per_tenant):
+                self.n_rejected += 1
+                raise AdmissionError(
+                    f"tenant {user_id!r} has {len(fifo)} pending requests "
+                    f"(bound {self.max_pending_per_tenant})"
+                )
+            slo = self.slo_s if deadline_s is None else float(deadline_s)
+            req = SchedRequest(
+                seq=self._next_seq,
+                user_id=user_id,
+                rows=rows,
+                arrival_t=now,
+                deadline=now + slo,
             )
-        if self._pending_rows + len(rows) > self.max_pending_rows:
-            self.n_rejected += 1
-            raise AdmissionError(
-                f"queue full: {self._pending_rows} pending rows + "
-                f"{len(rows)} would exceed the {self.max_pending_rows}-row "
-                "bound"
-            )
-        if fifo is not None and len(fifo) >= self.max_pending_per_tenant:
-            self.n_rejected += 1
-            raise AdmissionError(
-                f"tenant {user_id!r} has {len(fifo)} pending requests "
-                f"(bound {self.max_pending_per_tenant})"
-            )
-        slo = self.slo_s if deadline_s is None else float(deadline_s)
-        req = SchedRequest(
-            seq=self._next_seq,
-            user_id=user_id,
-            rows=rows,
-            arrival_t=now,
-            deadline=now + slo,
-        )
-        self._next_seq += 1
-        if fifo is None:
-            fifo = self._tenants[user_id] = deque()
-        fifo.append(req)
-        self._n_pending += 1
-        self._pending_rows += len(rows)
-        self.n_admitted += 1
-        self.rows_admitted += len(rows)
-        return req
+            self._next_seq += 1
+            if fifo is None:
+                fifo = self._tenants[user_id] = deque()
+            fifo.append(req)
+            self._n_pending += 1
+            self._pending_rows += len(rows)
+            self.n_admitted += 1
+            self.rows_admitted += len(rows)
+            return req
 
     # ---------------- state the batcher reads -----------------------------
     @property
     def n_pending(self) -> int:
-        return self._n_pending
+        with self._lock:
+            return self._n_pending
 
     @property
     def pending_rows(self) -> int:
-        return self._pending_rows
+        with self._lock:
+            return self._pending_rows
 
     def head_deadlines(self) -> dict[str, float]:
         """Tenant -> deadline of its FIFO head (the earliest servable
         deadline per tenant — service is FIFO within a tenant)."""
-        return {
-            u: fifo[0].deadline
-            for u, fifo in self._tenants.items() if fifo
-        }
+        with self._lock:
+            return {
+                u: fifo[0].deadline
+                for u, fifo in self._tenants.items() if fifo
+            }
 
     def oldest_head_deadline(self) -> float | None:
         """The earliest servable deadline across all tenants, or ``None``
@@ -210,27 +231,31 @@ class RequestQueue:
 
     def peek(self, user_id: str) -> SchedRequest | None:
         """The tenant's FIFO head without removing it."""
-        fifo = self._tenants.get(user_id)
-        return fifo[0] if fifo else None
+        with self._lock:
+            fifo = self._tenants.get(user_id)
+            return fifo[0] if fifo else None
 
     def pop(self, user_id: str) -> SchedRequest:
         """Remove and return the tenant's FIFO head."""
-        fifo = self._tenants[user_id]
-        req = fifo.popleft()
-        if not fifo:
-            del self._tenants[user_id]
-        self._n_pending -= 1
-        self._pending_rows -= req.n_rows
-        return req
+        with self._lock:
+            fifo = self._tenants[user_id]
+            req = fifo.popleft()
+            if not fifo:
+                del self._tenants[user_id]
+            self._n_pending -= 1
+            self._pending_rows -= req.n_rows
+            return req
 
     def stats(self) -> dict:
-        """Occupancy + admission counters for dashboards."""
-        return {
-            "n_pending": self._n_pending,
-            "pending_rows": self._pending_rows,
-            "n_tenants_pending": len(self._tenants),
-            "n_admitted": self.n_admitted,
-            "n_rejected": self.n_rejected,
-            "rows_admitted": self.rows_admitted,
-            "slo_s": self.slo_s,
-        }
+        """Occupancy + admission counters for dashboards, read as one
+        consistent snapshot under the lock."""
+        with self._lock:
+            return {
+                "n_pending": self._n_pending,
+                "pending_rows": self._pending_rows,
+                "n_tenants_pending": len(self._tenants),
+                "n_admitted": self.n_admitted,
+                "n_rejected": self.n_rejected,
+                "rows_admitted": self.rows_admitted,
+                "slo_s": self.slo_s,
+            }

@@ -34,7 +34,15 @@ import threading
 from collections import OrderedDict
 from typing import Any, Callable
 
+from ..runtime.guards import guarded_by
 
+
+@guarded_by(
+    "_lock",
+    "_plans", "_packs",
+    "plan_hits", "plan_misses", "pack_hits", "pack_misses",
+    "invalidations",
+)
 class PlanCache:
     """LRU memo of ServePlans and their gathered packs, with per-user
     token invalidation and hit/miss accounting for admission-control
@@ -56,7 +64,8 @@ class PlanCache:
         self.invalidations = 0
 
     def __len__(self) -> int:
-        return len(self._packs)
+        with self._lock:
+            return len(self._packs)
 
     # ---------------- plans -----------------------------------------------
     def get_plan(self, key: tuple, token: tuple):
@@ -139,21 +148,27 @@ class PlanCache:
             self._packs.clear()
 
     def stats(self) -> dict:
-        """Hit/miss/invalidation counters for dashboards."""
-        plan_total = self.plan_hits + self.plan_misses
-        pack_total = self.pack_hits + self.pack_misses
-        return {
-            "plans": len(self._plans),
-            "packs": len(self._packs),
-            "plan_hits": self.plan_hits,
-            "plan_misses": self.plan_misses,
-            "plan_hit_rate": (
-                round(self.plan_hits / plan_total, 4) if plan_total else 0.0
-            ),
-            "pack_hits": self.pack_hits,
-            "pack_misses": self.pack_misses,
-            "pack_hit_rate": (
-                round(self.pack_hits / pack_total, 4) if pack_total else 0.0
-            ),
-            "invalidations": self.invalidations,
-        }
+        """Hit/miss/invalidation counters for dashboards.  Reads under
+        the lock: the scheduler's submit thread mutates these counters
+        concurrently, and a stats snapshot must be one consistent state,
+        not a torn mix of two (the ISSUE 9 lock-discipline fix)."""
+        with self._lock:
+            plan_total = self.plan_hits + self.plan_misses
+            pack_total = self.pack_hits + self.pack_misses
+            return {
+                "plans": len(self._plans),
+                "packs": len(self._packs),
+                "plan_hits": self.plan_hits,
+                "plan_misses": self.plan_misses,
+                "plan_hit_rate": (
+                    round(self.plan_hits / plan_total, 4)
+                    if plan_total else 0.0
+                ),
+                "pack_hits": self.pack_hits,
+                "pack_misses": self.pack_misses,
+                "pack_hit_rate": (
+                    round(self.pack_hits / pack_total, 4)
+                    if pack_total else 0.0
+                ),
+                "invalidations": self.invalidations,
+            }

@@ -51,9 +51,11 @@ import dataclasses
 import io
 import os
 import re
+import struct
+import threading
 import zlib
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Any, Callable, Iterator
 
 import numpy as np
 
@@ -74,6 +76,7 @@ from ..core.framing import (
     write_u16,
     write_u32,
 )
+from ..runtime.guards import guarded_by
 from .codebook import SharedCodebook
 from .delta import UserDelta
 from .runtime import ForestStore
@@ -187,13 +190,13 @@ class Manifest:
     next_slab_id: int
     slabs: list = field(default_factory=list)
 
-    def entries(self):
+    def entries(self) -> Iterator[tuple["SlabEntry", "ShardEntry"]]:
         """Yield ``(slab, shard_entry)`` over every shard, dead or live."""
         for slab in self.slabs:
             for e in slab.shards:
                 yield slab, e
 
-    def live_entries(self):
+    def live_entries(self) -> Iterator[tuple["SlabEntry", "ShardEntry"]]:
         for slab, e in self.entries():
             if e.live:
                 yield slab, e
@@ -219,7 +222,9 @@ class Manifest:
             write_u16(out, len(slab.shards))
             for e in slab.shards:
                 write_u32(out, e.shard_id)
-                out.write(bytes([e.kind, 1 if e.live else 0]))
+                # packed "<BB" to mirror the reader's read_struct exactly
+                # (byte-identical to the old bytes([...]) idiom)
+                out.write(struct.pack("<BB", e.kind, 1 if e.live else 0))
                 write_u16(out, e.generation)
                 write_bytes(out, e.name.encode("utf-8"))
                 write_u32(out, e.offset)
@@ -281,7 +286,8 @@ class _LazyShard:
     __slots__ = ("_durable", "_map", "_user", "_shard_id",
                  "codebook_generation", "_real")
 
-    def __init__(self, durable, owner_map, user_id, shard_id, generation):
+    def __init__(self, durable: "DurableStore", owner_map: dict,
+                 user_id: str, shard_id: int, generation: int) -> None:
         self._durable = durable
         self._map = owner_map
         self._user = user_id
@@ -302,7 +308,7 @@ class _LazyShard:
             return self._real.to_bytes()
         return self._durable.read_shard(self._shard_id)
 
-    def __getattr__(self, name: str):
+    def __getattr__(self, name: str) -> Any:
         # only fires for names not in __slots__: proxy through the loaded
         # delta (corrupt shards raise typed IntegrityError right here —
         # exactly where serve_safe's probe expects decode faults)
@@ -318,11 +324,11 @@ class _LazyDeltaMap(dict):
     (``values()`` / ``items()``) still see placeholders — by design, so
     generation scans and byte-level sync stay out-of-core."""
 
-    def __init__(self, durable):
+    def __init__(self, durable: "DurableStore") -> None:
         super().__init__()
         self._durable = durable
 
-    def __getitem__(self, key):
+    def __getitem__(self, key: str) -> UserDelta:
         v = super().__getitem__(key)
         if isinstance(v, _LazyShard):
             v = v._load()
@@ -450,7 +456,7 @@ class DurableStore:
         self._stage(KIND_CODEBOOK, "", codebook.generation,
                     codebook.to_bytes())
 
-    def put_delta(self, user_id: str, delta) -> None:
+    def put_delta(self, user_id: str, delta: Any) -> None:
         """Stage one user's delta (accepts a ``UserDelta`` or a lazy
         placeholder — anything with ``to_bytes`` + ``codebook_generation``)."""
         self._stage(KIND_DELTA, user_id, delta.codebook_generation,
@@ -669,7 +675,7 @@ class DurableStore:
                     by_user[e.name] = e
         self._index = (by_id, by_user, by_slab)
 
-    def _locate(self, shard_id: int):
+    def _locate(self, shard_id: int) -> tuple["SlabEntry", "ShardEntry"]:
         if self._index is None:
             self._build_index()
         try:
@@ -685,7 +691,7 @@ class DurableStore:
         except KeyError:
             raise KeyError(f"unknown slab id {slab_id}") from None
 
-    def shard_for_user(self, user_id: str):
+    def shard_for_user(self, user_id: str) -> "ShardEntry | None":
         """The live delta ``ShardEntry`` for ``user_id``, or ``None``."""
         if self._index is None:
             self._build_index()
@@ -910,6 +916,12 @@ class DurableStore:
 # background scrubbing
 # ---------------------------------------------------------------------------
 
+@guarded_by(
+    "_lock",
+    "_items", "_cursor", "passes", "shards_scanned", "parities_scanned",
+    "repairs", "parity_rebuilds", "bytes_scanned", "unrepairable",
+    holds=("_refill", "_scan"),
+)
 class Scrubber:
     """Incremental CRC scrubber with parity repair.
 
@@ -923,12 +935,15 @@ class Scrubber:
     simply retire stale queue items (skipped via their vanished ids).
 
     ``sched.LifecycleDriver`` calls ``tick`` in low-load gaps; tests and
-    benches call ``scrub_all``."""
+    benches call ``scrub_all``.  ``tick``/``scrub_all`` run on the pump
+    thread while ``stats`` may be read from any thread, so the walk
+    state and counters are guarded by ``_lock`` (ISSUE 9)."""
 
     def __init__(self, durable: DurableStore,
                  shards_per_tick: int = 64) -> None:
         self.durable = durable
         self.shards_per_tick = shards_per_tick
+        self._lock = threading.Lock()
         self._items: list = []
         self._cursor = 0
         self.passes = 0
@@ -954,33 +969,36 @@ class Scrubber:
         budget = self.shards_per_tick if budget is None else budget
         out = {"scanned": 0, "repaired": 0, "parity_rebuilt": 0,
                "unrepairable": 0}
-        while budget > 0:
-            if self._cursor >= len(self._items):
-                self._refill()
-                if self._items:
-                    self.passes += 1
-                else:
-                    break
-            item = self._items[self._cursor]
-            self._cursor += 1
-            budget -= 1
-            self._scan(item, out)
+        with self._lock:
+            while budget > 0:
+                if self._cursor >= len(self._items):
+                    self._refill()
+                    if self._items:
+                        self.passes += 1
+                    else:
+                        break
+                item = self._items[self._cursor]
+                self._cursor += 1
+                budget -= 1
+                self._scan(item, out)
         return out
 
     def scrub_all(self) -> dict:
         """One complete pass over the current manifest, in one call."""
-        self._refill()
-        if self._items:
-            self.passes += 1
         out = {"scanned": 0, "repaired": 0, "parity_rebuilt": 0,
                "unrepairable": 0}
-        while self._cursor < len(self._items):
-            item = self._items[self._cursor]
-            self._cursor += 1
-            self._scan(item, out)
+        with self._lock:
+            self._refill()
+            if self._items:
+                self.passes += 1
+            while self._cursor < len(self._items):
+                item = self._items[self._cursor]
+                self._cursor += 1
+                self._scan(item, out)
         return out
 
     def _scan(self, item: tuple, out: dict) -> None:
+        # caller holds self._lock (declared via guarded_by holds=)
         kind, slab_id, shard_id = item
         try:
             if kind == "shard":
@@ -1017,24 +1035,27 @@ class Scrubber:
                 out["unrepairable"] += 1
 
     def stats(self) -> dict:
-        return {
-            "passes": self.passes,
-            "queue_position": self._cursor,
-            "queue_length": len(self._items),
-            "shards_scanned": self.shards_scanned,
-            "parities_scanned": self.parities_scanned,
-            "repairs": self.repairs,
-            "parity_rebuilds": self.parity_rebuilds,
-            "bytes_scanned": self.bytes_scanned,
-            "unrepairable": list(self.unrepairable),
-        }
+        with self._lock:
+            return {
+                "passes": self.passes,
+                "queue_position": self._cursor,
+                "queue_length": len(self._items),
+                "shards_scanned": self.shards_scanned,
+                "parities_scanned": self.parities_scanned,
+                "repairs": self.repairs,
+                "parity_rebuilds": self.parity_rebuilds,
+                "bytes_scanned": self.bytes_scanned,
+                "unrepairable": list(self.unrepairable),
+            }
 
 
 # ---------------------------------------------------------------------------
 # serving integration: quarantine -> parity repair -> verify -> release
 # ---------------------------------------------------------------------------
 
-def attach_auto_repair(server, durable: DurableStore) -> Callable[[str], bool]:
+def attach_auto_repair(
+    server: Any, durable: DurableStore
+) -> Callable[[str], bool]:
     """Wire a ``ForestServer``'s quarantine to the durable store's parity
     repair: when ``serve_safe`` quarantines (or is about to quarantine) a
     user, the repairer re-reads the user's shard with ``repair=True``

@@ -44,7 +44,7 @@ import os
 import struct
 import time
 from dataclasses import dataclass, field
-from typing import Sequence
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -982,7 +982,7 @@ def _recluster_result(
     per_user: dict[str, dict],
     bytes_before: int,
     verified: bool,
-    t0: float,
+    elapsed_s: float,
 ) -> ReclusterResult:
     statuses = [r["status"] for r in per_user.values()]
     n_pending = sum(
@@ -1000,7 +1000,7 @@ def _recluster_result(
         bytes_before=bytes_before,
         bytes_after=store.size_report()["total_bytes"],
         verified_bit_exact=verified,
-        wall_time_s=time.perf_counter() - t0,
+        wall_time_s=elapsed_s,
         remap=remap,
         per_user=per_user,
     )
@@ -1017,6 +1017,7 @@ def recluster(
     verify: bool = True,
     journal: MigrationJournal | None = None,
     on_step=None,
+    timer: Callable[[], float] = time.perf_counter,
 ) -> ReclusterResult:
     """Re-run fleet-scale clustering and migrate the store onto the
     successor codebook generation, bit-exactly.
@@ -1059,7 +1060,7 @@ def recluster(
     if journal is None:
         journal = MigrationJournal()
     store.journal = journal
-    t0 = time.perf_counter()
+    t0 = timer()
     bytes_before = store.size_report()["total_bytes"]
     build = extend_codebook if mode == "extend" else rebuild_codebook
     step("build")
@@ -1077,7 +1078,7 @@ def recluster(
         )
     return _recluster_result(
         store, mode, remap, per_user, bytes_before,
-        bool(verify and migrate), t0,
+        bool(verify and migrate), timer() - t0,
     )
 
 
@@ -1087,6 +1088,7 @@ def resume_recluster(
     seed: int = 0,
     verify: bool = True,
     on_step=None,
+    timer: Callable[[], float] = time.perf_counter,
 ) -> ReclusterResult:
     """Finish (or undo) a recluster run that crashed mid-flight, from its
     journal.  Idempotent: safe to call again after a crash DURING
@@ -1109,7 +1111,7 @@ def resume_recluster(
     """
     step = on_step if on_step is not None else (lambda name: None)
     store.journal = journal
-    t0 = time.perf_counter()
+    t0 = timer()
     bytes_before = store.size_report()["total_bytes"]
     if journal.state == "idle":
         raise ValueError(
@@ -1130,7 +1132,8 @@ def resume_recluster(
                 r["bytes_before"] = n
                 r["bytes"] = n
         return _recluster_result(
-            store, journal.mode, remap, per_user, bytes_before, False, t0
+            store, journal.mode, remap, per_user, bytes_before, False,
+            timer() - t0,
         )
     if journal.state == "built":
         # crashed between build and install — roll the install forward
@@ -1152,5 +1155,6 @@ def resume_recluster(
             store.add_delta(u, UserDelta.from_bytes(intent))
     per_user = _migrate_journaled(store, remap, journal, step, seed, verify)
     return _recluster_result(
-        store, journal.mode, remap, per_user, bytes_before, verify, t0
+        store, journal.mode, remap, per_user, bytes_before, verify,
+        timer() - t0,
     )

@@ -1,0 +1,615 @@
+"""Tests for the repro-lint static-analysis suite (tools/analysis).
+
+Three layers:
+
+* fixture tests — each pass must FIRE on a minimal broken snippet and
+  stay SILENT on the fixed version of the same snippet (a linter that
+  cannot fail guards nothing);
+* registry tests — the frame-schema registry must stay in lockstep
+  with docs/format.md's tag table and with the real writer/reader
+  sources;
+* whole-repo gate — the tree this test suite ships with must be clean,
+  so the CI job's ``repro_lint --baseline`` run is reproducible here.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+
+from analysis import (  # noqa: E402
+    determinism,
+    frame_safety,
+    kernel_invariants,
+    lock_discipline,
+)
+from analysis.findings import Baseline, Finding  # noqa: E402
+from analysis.frame_schema import (  # noqa: E402
+    REGISTRY,
+    ModuleIndex,
+    documented_tags,
+    extract_shape,
+)
+from analysis.repro_lint import main as lint_main  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# fixture scaffolding
+# ---------------------------------------------------------------------------
+
+def _mini_repo(tmp_path: Path) -> Path:
+    """A skeletal repo layout the passes can run against."""
+    for sub in (
+        "src/repro/core", "src/repro/store", "src/repro/sched",
+        "src/repro/serving", "src/repro/runtime",
+        "src/repro/kernels/tree_predict",
+    ):
+        (tmp_path / sub).mkdir(parents=True)
+        (tmp_path / sub / "__init__.py").write_text("")
+    return tmp_path
+
+
+def _write(root: Path, rel: str, code: str) -> None:
+    (root / rel).write_text(textwrap.dedent(code))
+
+
+def _codes(findings: list[Finding]) -> set[str]:
+    return {f.code for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# frame-safety pass
+# ---------------------------------------------------------------------------
+
+class TestFrameSafety:
+    def test_bare_unpack_on_read_fires(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/core/x.py", """
+            import struct
+
+            def parse(inp):
+                (n,) = struct.unpack("<I", inp.read(4))
+                return n
+        """)
+        codes = _codes(frame_safety.run_pass(root))
+        assert "FRAME001" in codes
+
+    def test_clamped_read_is_clean(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/core/x.py", """
+            from .framing import read_struct
+
+            def parse(inp):
+                (n,) = read_struct(inp, "<I", "count")
+                return n
+        """)
+        findings = frame_safety.run_pass(root)
+        assert "FRAME001" not in _codes(findings)
+
+    def test_assert_on_read_fires(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/core/x.py", """
+            def parse(inp):
+                assert inp.read(4) == b"RFX1"
+        """)
+        assert "FRAME002" in _codes(frame_safety.run_pass(root))
+
+    def test_raw_wb_open_fires_outside_framing(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/store/x.py", """
+            def save(path, data):
+                with open(path, "wb") as f:
+                    f.write(data)
+        """)
+        assert "FRAME006" in _codes(frame_safety.run_pass(root))
+
+    def test_framing_module_may_open_wb(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/core/framing.py", """
+            def atomic_write_bytes(path, data):
+                with open(path + ".tmp", "wb") as f:
+                    f.write(data)
+        """)
+        assert "FRAME006" not in _codes(frame_safety.run_pass(root))
+
+    def test_read_handles_with_length_checks_are_clean(self, tmp_path):
+        # open() for READING with explicit length validation is the
+        # sanctioned pattern (durable.py slab reads) — no finding.
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/store/x.py", """
+            def load(path, length):
+                with open(path, "rb") as f:
+                    data = f.read(length)
+                if len(data) != length:
+                    raise ValueError("short read")
+                return data
+        """)
+        assert not frame_safety.run_pass(root)
+
+
+class TestFrameRegistry:
+    def test_registry_matches_docs_tag_table(self):
+        docs = documented_tags(REPO / "docs" / "format.md")
+        declared = {s.tag for s in REGISTRY if s.documented}
+        assert declared == docs, (
+            "frame registry and docs/format.md numbered sections "
+            f"disagree: registry-only={declared - docs}, "
+            f"docs-only={docs - declared}"
+        )
+
+    def test_legacy_rfc1_is_registered_but_undocumented(self):
+        rfc = [s for s in REGISTRY if s.tag == "RFC1"]
+        assert len(rfc) == 1 and not rfc[0].documented
+
+    @pytest.mark.parametrize("spec", REGISTRY, ids=lambda s: s.tag)
+    def test_writer_and_reader_match_declared_schema(self, spec):
+        index = ModuleIndex.parse(REPO / spec.module)
+        w = extract_shape(index, spec.writer)
+        r = extract_shape(index, spec.reader)
+        assert w.shape == spec.schema
+        assert r.shape == spec.schema
+        assert w.calls_with_crc and r.calls_check_crc
+        assert r.has_magic
+
+    def test_whole_repo_frame_pass_is_clean(self):
+        assert frame_safety.run_pass(REPO) == []
+
+    def test_desynced_writer_is_caught(self, tmp_path):
+        """Drop one field from a real writer: FRAME004 must fire."""
+        root = _mini_repo(tmp_path)
+        # copy the real RFM1 module, minus the fits_map field write
+        src = (REPO / "src/repro/store/lifecycle.py").read_text()
+        broken = src.replace(
+            "        write_arr(out, self.fits_map.astype(np.int32))\n", ""
+        )
+        assert broken != src, "expected the RFM1 fits_map write line"
+        for spec in REGISTRY:
+            (root / Path(spec.module).parent).mkdir(
+                parents=True, exist_ok=True
+            )
+            text = (
+                broken if spec.module.endswith("lifecycle.py")
+                else (REPO / spec.module).read_text()
+            )
+            (root / spec.module).write_text(text)
+        findings = frame_safety.run_pass(root)
+        rfm = [f for f in findings if f.subject == "RFM1-writer-shape"]
+        assert rfm and rfm[0].code == "FRAME004"
+
+    def test_unsealed_writer_is_caught(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        src = (REPO / "src/repro/store/lifecycle.py").read_text()
+        broken = src.replace(
+            "        write_arr(out, self.fits_map.astype(np.int32))\n"
+            "        return with_crc(out.getvalue())",
+            "        write_arr(out, self.fits_map.astype(np.int32))\n"
+            "        return out.getvalue()",
+        )
+        assert broken != src
+        for spec in REGISTRY:
+            (root / Path(spec.module).parent).mkdir(
+                parents=True, exist_ok=True
+            )
+            text = (
+                broken if spec.module.endswith("lifecycle.py")
+                else (REPO / spec.module).read_text()
+            )
+            (root / spec.module).write_text(text)
+        subjects = {f.subject for f in frame_safety.run_pass(root)}
+        assert "RFM1-unsealed" in subjects
+
+
+# ---------------------------------------------------------------------------
+# determinism pass
+# ---------------------------------------------------------------------------
+
+class TestDeterminism:
+    def test_wall_clock_in_store_fires(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/store/x.py", """
+            import time
+
+            def stamp():
+                return time.time()
+        """)
+        assert "DET001" in _codes(determinism.run_pass(root))
+
+    def test_injected_timer_is_clean(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/store/x.py", """
+            import time
+
+            def stamp(timer=time.perf_counter):
+                return timer()
+        """)
+        assert not determinism.run_pass(root)
+
+    def test_unseeded_rng_fires(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/core/x.py", """
+            import numpy as np
+
+            def jitter(n):
+                return np.random.default_rng().normal(size=n)
+        """)
+        assert "DET002" in _codes(determinism.run_pass(root))
+
+    def test_seeded_rng_is_clean(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/core/x.py", """
+            import numpy as np
+
+            def jitter(n, seed):
+                return np.random.default_rng(seed).normal(size=n)
+        """)
+        assert not determinism.run_pass(root)
+
+    def test_unsorted_dict_iteration_in_emitter_fires(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/store/x.py", """
+            from ..core.framing import write_u16
+
+            def to_bytes(out, splits):
+                for v, c in splits.items():
+                    write_u16(out, v)
+        """)
+        assert "DET003" in _codes(determinism.run_pass(root))
+
+    def test_sorted_dict_iteration_in_emitter_is_clean(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/store/x.py", """
+            from ..core.framing import write_u16
+
+            def to_bytes(out, splits):
+                for v, c in sorted(splits.items()):
+                    write_u16(out, v)
+        """)
+        assert not determinism.run_pass(root)
+
+    def test_unsorted_iteration_outside_emitter_is_clean(self, tmp_path):
+        # non-serializing code may iterate dicts freely
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/store/x.py", """
+            def total(counts):
+                return sum(v for v in counts.values())
+        """)
+        assert not determinism.run_pass(root)
+
+    def test_sched_wall_clock_fires_outside_clock_py(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/sched/x.py", """
+            import time
+
+            def tick():
+                return time.monotonic()
+        """)
+        assert "DET004" in _codes(determinism.run_pass(root))
+
+    def test_sched_clock_py_is_exempt(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/sched/clock.py", """
+            import time
+
+            class WallClock:
+                def now(self):
+                    return time.monotonic()
+        """)
+        assert not determinism.run_pass(root)
+
+    def test_whole_repo_is_clean(self):
+        assert determinism.run_pass(REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline pass
+# ---------------------------------------------------------------------------
+
+_GUARDED_CLASS = """
+    from ..runtime.guards import guarded_by
+
+    @guarded_by("_lock", "_data", holds=("_refill",))
+    class Cache:
+        def __init__(self):
+            self._data = {}
+
+        def get(self, k):
+            %s
+
+        def pump(self):
+            %s
+
+        def _refill(self):
+            self._data.clear()
+"""
+
+
+class TestLockDiscipline:
+    def test_off_lock_access_fires(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/serving/x.py", _GUARDED_CLASS % (
+            "return self._data[k]",
+            "with self._lock:\n                self._refill()",
+        ))
+        findings = lock_discipline.run_pass(root)
+        assert [f.code for f in findings] == ["LOCK001"]
+        assert findings[0].subject == "_data"
+        assert findings[0].scope == "Cache.get"
+
+    def test_locked_access_is_clean(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/serving/x.py", _GUARDED_CLASS % (
+            "with self._lock:\n                return self._data[k]",
+            "with self._lock:\n                self._refill()",
+        ))
+        assert not lock_discipline.run_pass(root)
+
+    def test_holds_method_called_off_lock_fires(self, tmp_path):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/serving/x.py", _GUARDED_CLASS % (
+            "with self._lock:\n                return self._data[k]",
+            "self._refill()",
+        ))
+        findings = lock_discipline.run_pass(root)
+        assert [f.code for f in findings] == ["LOCK002"]
+        assert findings[0].subject == "_refill"
+
+    def test_init_is_exempt(self, tmp_path):
+        # __init__ writes guarded state before the object is shared
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/serving/x.py", _GUARDED_CLASS % (
+            "with self._lock:\n                return self._data[k]",
+            "with self._lock:\n                self._refill()",
+        ))
+        assert not lock_discipline.run_pass(root)
+
+    def test_lambda_under_with_is_lexically_held(self, tmp_path):
+        # Condition.wait_for(lambda: ...) under `with` must not fire —
+        # the executor's backpressure pattern.
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/serving/x.py", """
+            from ..runtime.guards import guarded_by
+
+            @guarded_by("_idle", "_inflight")
+            class Exec:
+                def drain(self):
+                    with self._idle:
+                        self._idle.wait_for(lambda: self._inflight == 0)
+        """)
+        assert not lock_discipline.run_pass(root)
+
+    def test_annotated_production_classes_are_clean(self):
+        assert lock_discipline.run_pass(REPO) == []
+
+    def test_guarded_by_decorator_records_contract(self):
+        sys.path.insert(0, str(REPO / "src"))
+        try:
+            from repro.runtime.guards import guarded_by
+
+            @guarded_by("_lock", "_a", "_b", holds=("_fill",))
+            class C:
+                pass
+
+            assert C.__guarded_by__ == {"_a": "_lock", "_b": "_lock"}
+            assert C.__guard_holds__ == {"_lock": ("_fill",)}
+            with pytest.raises(ValueError):
+                guarded_by("_lock")(C)
+        finally:
+            sys.path.remove(str(REPO / "src"))
+
+
+# ---------------------------------------------------------------------------
+# kernel-invariants pass
+# ---------------------------------------------------------------------------
+
+_KERNEL_OK = """
+    import jax.experimental.pallas as pl
+    from jax.experimental import pallas as pltpu
+
+    _F32_EXACT_INT = 1 << 24
+
+    def _validate_f32_exact(max_depth, d, **arrays):
+        pass
+
+    def _kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def _impl(x):
+        return pl.pallas_call(
+            _kernel,
+            out_shape=None,
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        )(x)
+
+    def forest_predict(x, feature, threshold, fit, is_internal,
+                       max_depth, block=8):
+        _validate_f32_exact(max_depth, x.shape[1], x=x)
+        return _impl(x)
+"""
+
+_REF_OK = """
+    def forest_predict_reference(x, feature, threshold, fit,
+                                 is_internal, max_depth):
+        return x
+"""
+
+
+class TestKernelInvariants:
+    def _root(self, tmp_path, kernel_src, ref_src=_REF_OK):
+        root = _mini_repo(tmp_path)
+        twins = {
+            k: v for k, v in kernel_invariants.KERNEL_TWINS.items()
+            if k == "forest_predict"
+        }
+        _write(
+            root, "src/repro/kernels/tree_predict/tree_predict.py",
+            kernel_src,
+        )
+        _write(root, "src/repro/kernels/tree_predict/ref.py", ref_src)
+        return root, twins
+
+    def _run(self, root, twins, monkeypatch):
+        monkeypatch.setattr(kernel_invariants, "KERNEL_TWINS", twins)
+        return kernel_invariants.run_pass(root)
+
+    def test_guarded_kernel_is_clean(self, tmp_path, monkeypatch):
+        root, twins = self._root(tmp_path, _KERNEL_OK)
+        assert not self._run(root, twins, monkeypatch)
+
+    def test_missing_precision_guard_fires(self, tmp_path, monkeypatch):
+        src = _KERNEL_OK.replace(
+            "        _validate_f32_exact(max_depth, x.shape[1], x=x)\n",
+            "",
+        )
+        root, twins = self._root(tmp_path, src)
+        codes = _codes(self._run(root, twins, monkeypatch))
+        assert "KERN001" in codes
+
+    def test_implicit_specs_fire(self, tmp_path, monkeypatch):
+        src = _KERNEL_OK.replace(
+            "            in_specs=[pl.BlockSpec((8, 128), "
+            "lambda i: (i, 0))],\n",
+            "",
+        )
+        root, twins = self._root(tmp_path, src)
+        codes = _codes(self._run(root, twins, monkeypatch))
+        assert "KERN002" in codes
+
+    def test_blockspec_without_layout_fires(self, tmp_path, monkeypatch):
+        src = _KERNEL_OK.replace(
+            "pl.BlockSpec((8, 128), lambda i: (i, 0))],",
+            "pl.BlockSpec()],",
+        )
+        root, twins = self._root(tmp_path, src)
+        codes = _codes(self._run(root, twins, monkeypatch))
+        assert "KERN002" in codes
+
+    def test_missing_reference_twin_fires(self, tmp_path, monkeypatch):
+        root, twins = self._root(tmp_path, _KERNEL_OK, ref_src="")
+        codes = _codes(self._run(root, twins, monkeypatch))
+        assert "KERN003" in codes
+
+    def test_twin_signature_drift_fires(self, tmp_path, monkeypatch):
+        ref = _REF_OK.replace(
+            "fit,\n                                 is_internal",
+            "is_internal,\n                                 fit",
+        )
+        root, twins = self._root(tmp_path, _KERNEL_OK, ref_src=ref)
+        codes = _codes(self._run(root, twins, monkeypatch))
+        assert "KERN003" in codes
+
+    def test_unregistered_public_kernel_fires(self, tmp_path, monkeypatch):
+        src = textwrap.dedent(_KERNEL_OK) + textwrap.dedent("""
+            def forest_predict_extra(x, max_depth):
+                _validate_f32_exact(max_depth, x.shape[1], x=x)
+                return _impl(x)
+        """)
+        root, twins = self._root(tmp_path, src)
+        findings = self._run(root, twins, monkeypatch)
+        assert any(
+            f.code == "KERN003" and f.subject == "forest_predict_extra"
+            for f in findings
+        )
+
+    def test_orphan_kernel_fires(self, tmp_path, monkeypatch):
+        src = textwrap.dedent(_KERNEL_OK) + textwrap.dedent("""
+            def _orphan_impl(x):
+                return pl.pallas_call(
+                    _kernel, out_shape=None, in_specs=[], out_specs=None,
+                )(x)
+        """)
+        root, twins = self._root(tmp_path, src)
+        findings = self._run(root, twins, monkeypatch)
+        assert any(
+            f.code == "KERN004" and f.subject == "_orphan_impl"
+            for f in findings
+        )
+
+    def test_whole_repo_is_clean(self):
+        assert kernel_invariants.run_pass(REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline + CLI
+# ---------------------------------------------------------------------------
+
+class TestBaselineAndCli:
+    def test_fingerprint_is_line_stable(self):
+        a = Finding("X001", "a.py", 10, "C.m", "attr", "msg")
+        b = Finding("X001", "a.py", 99, "C.m", "attr", "other msg")
+        assert a.fingerprint == b.fingerprint
+
+    def test_baseline_filters_known_findings(self, tmp_path):
+        f = Finding("X001", "a.py", 1, "f", "s", "msg")
+        g = Finding("X002", "a.py", 2, "f", "s", "msg")
+        bl = Baseline(path=tmp_path / "b.json")
+        bl.accepted[f.fingerprint] = "known"
+        bl.save()
+        loaded = Baseline.load(tmp_path / "b.json")
+        assert loaded.filter_new([f, g]) == [g]
+        assert loaded.stale_entries([g]) == [f.fingerprint]
+
+    def test_shipped_baseline_is_empty(self):
+        bl = Baseline.load(
+            REPO / "tools" / "analysis" / "baseline.json"
+        )
+        assert bl.accepted == {}, (
+            "the shipped baseline must stay empty — fix findings "
+            "instead of baselining them (see docs/analysis.md)"
+        )
+
+    def test_cli_clean_repo_exits_zero(self, capsys):
+        assert lint_main(["--root", str(REPO)]) == 0
+        assert "clean" in capsys.readouterr().out
+
+    def test_cli_fails_on_findings_and_baseline_suppresses(
+        self, tmp_path, capsys
+    ):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/sched/x.py", """
+            import time
+
+            def tick():
+                return time.monotonic()
+        """)
+        args = ["--root", str(root), "--passes", "determinism"]
+        assert lint_main(args) == 1
+        out = capsys.readouterr().out
+        assert "DET004" in out
+        # write a baseline accepting the finding, then it must pass
+        bl_path = tmp_path / "baseline.json"
+        assert lint_main(
+            args + ["--baseline", str(bl_path), "--write-baseline"]
+        ) == 0
+        capsys.readouterr()
+        assert lint_main(args + ["--baseline", str(bl_path)]) == 0
+        assert "baselined" in capsys.readouterr().out
+
+    def test_cli_json_format(self, tmp_path, capsys):
+        root = _mini_repo(tmp_path)
+        _write(root, "src/repro/sched/x.py", """
+            import time
+
+            def tick():
+                return time.time()
+        """)
+        assert lint_main([
+            "--root", str(root), "--passes", "determinism",
+            "--format", "json",
+        ]) == 1
+        payload = json.loads(capsys.readouterr().out)
+        assert payload["findings"][0]["code"] == "DET004"
+
+    def test_cli_entrypoint_runs_as_script(self):
+        proc = subprocess.run(
+            [sys.executable,
+             str(REPO / "tools" / "analysis" / "repro_lint.py"),
+             "--baseline"],
+            capture_output=True, text=True, cwd=str(REPO),
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr

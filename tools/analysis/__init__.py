@@ -1,0 +1,5 @@
+"""repro-lint: domain-specific static analysis for the forest-compression
+repo (frame safety, determinism, lock discipline, kernel invariants).
+
+Run via ``python tools/analysis/repro_lint.py``; see docs/analysis.md.
+"""

@@ -1,0 +1,313 @@
+"""Determinism pass: serialized bytes and scheduling decisions must not
+depend on hash order, wall clocks, or unseeded randomness.
+
+Codes:
+
+* **DET001** — wall-clock call (``time.time`` / ``time.monotonic`` /
+  ``datetime.now`` / ...) in ``core/`` or ``store/``: codec and store
+  behavior must be a pure function of its inputs (artifact diffing,
+  golden tests, and the recovery replay all depend on it).
+* **DET002** — unseeded randomness in ``core/`` or ``store/``:
+  ``np.random.default_rng()`` with no seed, the legacy ``np.random.*``
+  global distributions, or the ``random`` module.  Every stochastic
+  routine takes an explicit ``seed`` and threads it through.
+* **DET003** — iteration over an unsorted ``dict``/``set`` view inside
+  an EMIT function (one that writes framing primitives or is named
+  ``to_bytes``): dict order is insertion order, so the emitted bytes
+  silently depend on construction history — two stores with identical
+  content serialize differently.  Wrap in ``sorted(...)``.
+* **DET004** — wall-clock use in ``sched/`` outside ``clock.py``: the
+  scheduler is virtual-clock-driven by design (tests replay traffic
+  deterministically); only the ``Clock`` implementations may touch
+  ``time``.
+
+``# repro-lint: allow-wallclock`` on the offending line suppresses
+DET001/DET004 for the rare legitimate site (none today).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .findings import Finding
+
+PURE_SCOPE = ("src/repro/core", "src/repro/store")
+SCHED_SCOPE = "src/repro/sched"
+SCHED_CLOCK_EXEMPT = "clock.py"
+
+_ALLOW_MARK = "repro-lint: allow-wallclock"
+
+_WALL_CLOCK_ATTRS = {
+    "time", "monotonic", "perf_counter", "process_time", "time_ns",
+    "monotonic_ns", "perf_counter_ns",
+}
+_DATETIME_NOW = {"now", "utcnow", "today"}
+_LEGACY_NP_RANDOM = {
+    "rand", "randn", "randint", "random", "random_sample", "sample",
+    "ranf", "choice", "shuffle", "permutation", "seed", "uniform",
+    "normal", "standard_normal", "beta", "binomial", "poisson",
+}
+_EMIT_CALLS = {
+    "write_arr", "write_bytes", "write_u16", "write_u32", "with_crc",
+}
+_VIEW_ATTRS = {"items", "keys", "values"}
+_ORDER_FIXERS = {"sorted", "min", "max", "sum", "len", "frozenset", "set"}
+
+
+def _allowed(source_lines: list[str], lineno: int) -> bool:
+    if 1 <= lineno <= len(source_lines):
+        return _ALLOW_MARK in source_lines[lineno - 1]
+    return False
+
+
+class _ClockVisitor(ast.NodeVisitor):
+    """DET001 / DET004: wall-clock and unseeded-random call sites."""
+
+    def __init__(
+        self,
+        relpath: str,
+        code: str,
+        findings: list[Finding],
+        lines: list[str],
+        flag_random: bool,
+    ) -> None:
+        self.relpath = relpath
+        self.code = code
+        self.findings = findings
+        self.lines = lines
+        self.flag_random = flag_random
+        self._scope: list[str] = []
+
+    @property
+    def scope(self) -> str:
+        return ".".join(self._scope) or "<module>"
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._scope.append(node.name)
+        self.generic_visit(node)
+        self._scope.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._scope.append(node.name)
+        self.generic_visit(node)
+        self._scope.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _dotted(node.func)
+        if name:
+            self._check_call(node, name)
+        self.generic_visit(node)
+
+    def _emit(
+        self, node: ast.AST, subject: str, message: str,
+        code: str | None = None,
+    ) -> None:
+        self.findings.append(Finding(
+            code=code or self.code,
+            path=self.relpath,
+            line=node.lineno,
+            scope=self.scope,
+            subject=subject,
+            message=message,
+        ))
+
+    def _check_call(self, node: ast.Call, name: str) -> None:
+        parts = name.split(".")
+        # time.time(), time.monotonic(), ...
+        if (
+            len(parts) == 2
+            and parts[0] == "time"
+            and parts[1] in _WALL_CLOCK_ATTRS
+            and not _allowed(self.lines, node.lineno)
+        ):
+            self._emit(
+                node, name,
+                f"wall-clock call {name}() — this layer must be "
+                "clock-free (inject a Clock / take timestamps as "
+                "arguments)",
+            )
+            return
+        # datetime.now() / datetime.datetime.now() / date.today()
+        if (
+            parts[-1] in _DATETIME_NOW
+            and any(p in ("datetime", "date") for p in parts[:-1])
+            and not _allowed(self.lines, node.lineno)
+        ):
+            self._emit(
+                node, name,
+                f"wall-clock call {name}() — this layer must be "
+                "clock-free",
+            )
+            return
+        if not self.flag_random:
+            return
+        # np.random.default_rng() with no seed argument
+        if (
+            parts[-1] == "default_rng"
+            and "random" in parts
+            and not node.args
+            and not node.keywords
+        ):
+            self._emit(
+                node, name,
+                "np.random.default_rng() without a seed — stochastic "
+                "routines must take an explicit seed",
+                code="DET002",
+            )
+            return
+        # legacy np.random.<dist>() globals
+        if (
+            len(parts) >= 2
+            and parts[-2] == "random"
+            and parts[0] in ("np", "numpy")
+            and parts[-1] in _LEGACY_NP_RANDOM
+        ):
+            self._emit(
+                node, name,
+                f"legacy global-state RNG {name}() — use a seeded "
+                "np.random.default_rng(seed) Generator",
+                code="DET002",
+            )
+            return
+        # stdlib random module
+        if len(parts) == 2 and parts[0] == "random" and parts[1] in (
+            "random", "randint", "randrange", "choice", "shuffle",
+            "sample", "uniform", "seed", "gauss",
+        ):
+            self._emit(
+                node, name,
+                f"stdlib {name}() uses hidden global state — use a "
+                "seeded np.random.default_rng(seed)",
+                code="DET002",
+            )
+
+
+class _EmitOrderVisitor(ast.NodeVisitor):
+    """DET003: unsorted dict/set-view iteration inside emit functions."""
+
+    def __init__(self, relpath: str, findings: list[Finding]) -> None:
+        self.relpath = relpath
+        self.findings = findings
+        self._scope: list[str] = []
+
+    @property
+    def scope(self) -> str:
+        return ".".join(self._scope) or "<module>"
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._scope.append(node.name)
+        self.generic_visit(node)
+        self._scope.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._scope.append(node.name)
+        if _is_emit_function(node):
+            self._check_emit_fn(node)
+        self.generic_visit(node)
+        self._scope.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def _check_emit_fn(self, fn: ast.FunctionDef) -> None:
+        iters: list[ast.expr] = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                iters.append(node.iter)
+            elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                   ast.GeneratorExp, ast.DictComp)):
+                for g in node.generators:
+                    iters.append(g.iter)
+        for it in iters:
+            for view in _unsorted_views(it):
+                self.findings.append(Finding(
+                    code="DET003",
+                    path=self.relpath,
+                    line=view.lineno,
+                    scope=self.scope,
+                    subject=f".{view.func.attr}()",
+                    message=(
+                        "iterating an unsorted dict view in an emit "
+                        "function — serialized bytes would depend on "
+                        "insertion order; wrap in sorted(...)"
+                    ),
+                ))
+
+
+def _is_emit_function(fn: ast.FunctionDef) -> bool:
+    if fn.name == "to_bytes":
+        return True
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id in _EMIT_CALLS
+        ):
+            return True
+    return False
+
+
+def _unsorted_views(expr: ast.expr) -> list[ast.Call]:
+    """``.items()/.keys()/.values()`` calls in ``expr`` that are not
+    under a ``sorted(...)`` (or another order-fixing) call."""
+    out: list[ast.Call] = []
+
+    def walk(node: ast.AST, ordered: bool) -> None:
+        if isinstance(node, ast.Call):
+            if (
+                isinstance(node.func, ast.Name)
+                and node.func.id in _ORDER_FIXERS
+            ):
+                for child in ast.iter_child_nodes(node):
+                    walk(child, True)
+                return
+            if (
+                not ordered
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _VIEW_ATTRS
+                and not node.args
+                and not node.keywords
+            ):
+                out.append(node)
+        for child in ast.iter_child_nodes(node):
+            walk(child, ordered)
+
+    walk(expr, False)
+    return out
+
+
+def _dotted(node: ast.expr) -> str:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def run_pass(root: Path) -> list[Finding]:
+    findings: list[Finding] = []
+    for sub in PURE_SCOPE:
+        for path in sorted((root / sub).glob("*.py")):
+            relpath = str(path.relative_to(root))
+            text = path.read_text()
+            tree = ast.parse(text, filename=str(path))
+            lines = text.splitlines()
+            _ClockVisitor(
+                relpath, "DET001", findings, lines, flag_random=True
+            ).visit(tree)
+            _EmitOrderVisitor(relpath, findings).visit(tree)
+    for path in sorted((root / SCHED_SCOPE).glob("*.py")):
+        if path.name == SCHED_CLOCK_EXEMPT:
+            continue
+        relpath = str(path.relative_to(root))
+        text = path.read_text()
+        tree = ast.parse(text, filename=str(path))
+        lines = text.splitlines()
+        _ClockVisitor(
+            relpath, "DET004", findings, lines, flag_random=False
+        ).visit(tree)
+    return findings

@@ -1,0 +1,87 @@
+"""Finding records and baseline management for repro-lint.
+
+A ``Finding`` is one violation emitted by an analysis pass.  Its
+``fingerprint`` deliberately excludes the line number: baselined
+findings must survive unrelated edits that shift code up or down, so
+the identity is (code, file, enclosing symbol, subject) — the subject
+being a pass-chosen stable token such as the attribute name, frame
+tag, or offending call text.
+
+The baseline file (``tools/analysis/baseline.json``) maps accepted
+fingerprints to a one-line justification.  ``repro_lint --baseline``
+fails only on findings NOT in the baseline, which is how the linter
+gates CI from day one without requiring the whole history to be clean
+first.  (This repo's baseline ships empty: every pre-existing true
+positive was fixed rather than baselined.)
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One static-analysis violation.
+
+    ``scope`` is the enclosing ``Class.method`` / function qualname (or
+    ``"<module>"``); ``subject`` is the pass-specific stable identity of
+    the violating object (attribute name, frame tag, call text, ...).
+    """
+
+    code: str
+    path: str
+    line: int
+    scope: str
+    subject: str
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.code}:{self.path}:{self.scope}:{self.subject}"
+
+    def render(self) -> str:
+        where = f"{self.path}:{self.line}"
+        scope = f" [{self.scope}]" if self.scope else ""
+        return f"{self.code} {where}{scope}: {self.message}"
+
+
+@dataclass
+class Baseline:
+    """Accepted-findings ledger: fingerprint -> justification."""
+
+    path: Path
+    accepted: dict[str, str] = field(default_factory=dict)
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        if not path.exists():
+            return cls(path=path)
+        data = json.loads(path.read_text())
+        if not isinstance(data, dict) or "accepted" not in data:
+            raise ValueError(f"malformed baseline file: {path}")
+        accepted = data["accepted"]
+        if not isinstance(accepted, dict):
+            raise ValueError(
+                f"baseline 'accepted' must map fingerprint -> reason: {path}"
+            )
+        return cls(path=path, accepted=dict(accepted))
+
+    def save(self) -> None:
+        payload = {
+            "version": 1,
+            "accepted": dict(sorted(self.accepted.items())),
+        }
+        self.path.write_text(json.dumps(payload, indent=2) + "\n")
+
+    def filter_new(self, findings: list[Finding]) -> list[Finding]:
+        """The findings not covered by this baseline (i.e. the ones that
+        should fail the build)."""
+        return [f for f in findings if f.fingerprint not in self.accepted]
+
+    def stale_entries(self, findings: list[Finding]) -> list[str]:
+        """Baselined fingerprints that no longer fire — candidates for
+        removal so the baseline only ever shrinks."""
+        live = {f.fingerprint for f in findings}
+        return [fp for fp in self.accepted if fp not in live]

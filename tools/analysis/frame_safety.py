@@ -1,0 +1,266 @@
+"""Frame-safety pass: byte-format reads must be bounds-clamped, frame
+writers must seal, and writer/reader pairs must be field-symmetric.
+
+Codes:
+
+* **FRAME001** — ``struct.unpack(fmt, stream.read(n))``: a short read
+  surfaces as ``struct.error`` instead of a typed
+  ``TruncatedFrameError``.  Use ``core.framing.read_struct`` (which
+  clamps via ``_read_exact``).
+* **FRAME002** — ``assert`` on a ``.read()`` result: framing checks
+  must raise typed errors, not ``AssertionError`` (and asserts vanish
+  under ``-O``).  Use ``expect_magic`` / ``_check_length``.
+* **FRAME003** — a registered frame writer does not seal its output
+  with ``with_crc`` (docs/format.md §8).
+* **FRAME004** — a registered writer's wire shape diverges from the
+  declared schema (or contains divergent ``if`` arms / untyped raw
+  writes).
+* **FRAME005** — a registered reader's wire shape diverges from the
+  declared schema, or skips ``check_crc``/``expect_magic``.
+* **FRAME006** — ``open(path, "wb")`` in serialization scope outside
+  ``core/framing.py``: frame writes must go through
+  ``atomic_write_bytes`` (temp + fsync + rename) so a crash cannot
+  leave a torn frame at the final path.
+
+Scope: ``src/repro/core`` and ``src/repro/store`` (the layers that own
+byte formats).  Direct ``open()`` READ handles with explicit length
+checks are fine — only the unpack-on-read nesting and writer-side
+atomicity are patterns, not every ``.read`` call.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .findings import Finding
+from .frame_schema import (
+    REGISTRY,
+    ModuleIndex,
+    extract_shape,
+    render_shape,
+)
+
+SCOPE = ("src/repro/core", "src/repro/store")
+
+
+def _scope_files(root: Path) -> list[Path]:
+    out: list[Path] = []
+    for sub in SCOPE:
+        out.extend(sorted((root / sub).glob("*.py")))
+    return out
+
+
+class _ScopeVisitor(ast.NodeVisitor):
+    """FRAME001/002/006 over one module."""
+
+    def __init__(self, relpath: str, findings: list[Finding]) -> None:
+        self.relpath = relpath
+        self.findings = findings
+        self._scope: list[str] = []
+
+    @property
+    def scope(self) -> str:
+        return ".".join(self._scope) or "<module>"
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._scope.append(node.name)
+        self.generic_visit(node)
+        self._scope.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._scope.append(node.name)
+        self.generic_visit(node)
+        self._scope.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    # -- FRAME001 -------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        if _is_unpack(node.func):
+            for arg in node.args:
+                if _is_read_call(arg):
+                    self.findings.append(Finding(
+                        code="FRAME001",
+                        path=self.relpath,
+                        line=node.lineno,
+                        scope=self.scope,
+                        subject="struct.unpack-on-read",
+                        message=(
+                            "bare struct.unpack on a stream read — a "
+                            "short read raises struct.error, not a "
+                            "typed TruncatedFrameError; use "
+                            "core.framing.read_struct"
+                        ),
+                    ))
+        if _is_wb_open(node) and not self.relpath.endswith(
+            "core/framing.py"
+        ):
+            self.findings.append(Finding(
+                code="FRAME006",
+                path=self.relpath,
+                line=node.lineno,
+                scope=self.scope,
+                subject="open-wb",
+                message=(
+                    "raw open(..., 'wb') in serialization scope — a "
+                    "crash mid-write leaves a torn frame at the final "
+                    "path; use core.framing.atomic_write_bytes"
+                ),
+            ))
+        self.generic_visit(node)
+
+    # -- FRAME002 -------------------------------------------------------
+    def visit_Assert(self, node: ast.Assert) -> None:
+        for sub in ast.walk(node.test):
+            if isinstance(sub, ast.Call) and _is_read_call(sub):
+                self.findings.append(Finding(
+                    code="FRAME002",
+                    path=self.relpath,
+                    line=node.lineno,
+                    scope=self.scope,
+                    subject="assert-on-read",
+                    message=(
+                        "assert on a stream read — framing checks "
+                        "must raise typed FramingError subclasses "
+                        "(asserts vanish under -O); use expect_magic "
+                        "/ _check_length"
+                    ),
+                ))
+                break
+        self.generic_visit(node)
+
+
+def _is_unpack(func: ast.expr) -> bool:
+    if isinstance(func, ast.Attribute) and func.attr in (
+        "unpack", "unpack_from"
+    ):
+        return isinstance(func.value, ast.Name) and func.value.id == "struct"
+    if isinstance(func, ast.Name) and func.id in ("unpack", "unpack_from"):
+        return True
+    return False
+
+
+def _is_read_call(node: ast.expr) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr == "read"
+    )
+
+
+def _is_wb_open(node: ast.Call) -> bool:
+    if not (isinstance(node.func, ast.Name) and node.func.id == "open"):
+        return False
+    mode = None
+    if len(node.args) > 1:
+        mode = node.args[1]
+    for kw in node.keywords:
+        if kw.arg == "mode":
+            mode = kw.value
+    return (
+        isinstance(mode, ast.Constant)
+        and isinstance(mode.value, str)
+        and "w" in mode.value
+        and "b" in mode.value
+    )
+
+
+def _check_registry(root: Path, findings: list[Finding]) -> None:
+    """FRAME003/004/005 for every registered frame."""
+    for spec in REGISTRY:
+        path = root / spec.module
+        if not path.exists():
+            # analyzing a partial tree (test fixtures); the registry
+            # only constrains modules that are present
+            continue
+        try:
+            index = ModuleIndex.parse(path)
+            w = extract_shape(index, spec.writer)
+            r = extract_shape(index, spec.reader)
+        except (LookupError, OSError, SyntaxError) as e:
+            findings.append(Finding(
+                code="FRAME004",
+                path=spec.module,
+                line=1,
+                scope=spec.writer,
+                subject=f"{spec.tag}-missing",
+                message=f"cannot analyze {spec.tag} frame pair: {e}",
+            ))
+            continue
+        wfn = index.resolve(spec.writer)
+        rfn = index.resolve(spec.reader)
+        if spec.sealed and not w.calls_with_crc:
+            findings.append(Finding(
+                code="FRAME003",
+                path=spec.module,
+                line=wfn.lineno,
+                scope=spec.writer,
+                subject=f"{spec.tag}-unsealed",
+                message=(
+                    f"{spec.tag} writer does not seal with with_crc "
+                    "(docs/format.md §8 requires a CRC1 trailer on "
+                    "every top-level frame)"
+                ),
+            ))
+        if w.shape != spec.schema:
+            findings.append(Finding(
+                code="FRAME004",
+                path=spec.module,
+                line=wfn.lineno,
+                scope=spec.writer,
+                subject=f"{spec.tag}-writer-shape",
+                message=(
+                    f"{spec.tag} writer diverges from the declared "
+                    f"schema;\n    declared: "
+                    f"{render_shape(spec.schema)}\n    written:  "
+                    f"{render_shape(w.shape)}"
+                ),
+            ))
+        if spec.sealed and not r.calls_check_crc:
+            findings.append(Finding(
+                code="FRAME005",
+                path=spec.module,
+                line=rfn.lineno,
+                scope=spec.reader,
+                subject=f"{spec.tag}-no-crc-check",
+                message=(
+                    f"{spec.tag} reader does not verify the CRC1 "
+                    "trailer via check_crc"
+                ),
+            ))
+        if not r.has_magic:
+            findings.append(Finding(
+                code="FRAME005",
+                path=spec.module,
+                line=rfn.lineno,
+                scope=spec.reader,
+                subject=f"{spec.tag}-no-magic",
+                message=(
+                    f"{spec.tag} reader does not validate the magic "
+                    "via expect_magic"
+                ),
+            ))
+        if r.shape != spec.schema:
+            findings.append(Finding(
+                code="FRAME005",
+                path=spec.module,
+                line=rfn.lineno,
+                scope=spec.reader,
+                subject=f"{spec.tag}-reader-shape",
+                message=(
+                    f"{spec.tag} reader diverges from the declared "
+                    f"schema;\n    declared: "
+                    f"{render_shape(spec.schema)}\n    read:     "
+                    f"{render_shape(r.shape)}"
+                ),
+            ))
+
+
+def run_pass(root: Path) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in _scope_files(root):
+        relpath = str(path.relative_to(root))
+        tree = ast.parse(path.read_text(), filename=str(path))
+        _ScopeVisitor(relpath, findings).visit(tree)
+    _check_registry(root, findings)
+    return findings

@@ -1,0 +1,591 @@
+"""Declarative frame-schema registry and AST wire-shape extraction.
+
+Every byte format this repo writes (docs/format.md) has exactly one
+writer/reader pair.  This module gives the frame-safety pass two
+things:
+
+1. **A registry** (``REGISTRY``): for each frame tag, where the writer
+   and reader live and the NORMALIZED WIRE SHAPE both must produce —
+   a token tree in a tiny vocabulary (``u8 u16 u32 i16 arr bytes
+   magic`` plus ``("loop", (...))`` groups).  The shapes below were
+   transcribed from docs/format.md's field tables; they are the
+   single point of truth the code is checked against.
+
+2. **An extractor** (``extract_shape``): walks a writer or reader
+   function's AST and recovers the shape it actually implements, by
+   recognizing the ``core.framing`` primitives (``write_u16`` /
+   ``read_struct`` / ``write_arr`` / ...), ``struct.pack`` inside
+   ``out.write``, magic-constant writes, and loops/branches — and by
+   INLINING module-local helpers (``_write_component`` et al.), so a
+   frame's full shape is visible even when it is factored into
+   records.  ``if``/``else`` arms that serialize identically collapse;
+   arms that differ surface as a ``("branch", ...)`` marker, which
+   never matches a schema — divergent-arm serialization is itself a
+   defect.
+
+A writer and reader that both match the declared schema are
+field-symmetric by construction; a drifted edit to either side shows
+up as a shape mismatch (FRAME004/FRAME005) the moment it is made.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+
+# ---------------------------------------------------------------------------
+# token vocabulary
+# ---------------------------------------------------------------------------
+
+U8, U16, U32 = "u8", "u16", "u32"
+I8, I16, I32, I64 = "i8", "i16", "i32", "i64"
+U64, F32, F64 = "u64", "f32", "f64"
+ARR, BYTES, MAGIC = "arr", "bytes", "magic"
+#: an ``out.write(...)`` of something the extractor cannot type
+RAW = "raw"
+
+
+def loop(*items: object) -> tuple:
+    """A repeated group in a wire shape."""
+    return ("loop", tuple(items))
+
+
+_STRUCT_TOKENS = {
+    "b": I8, "B": U8,
+    "h": I16, "H": U16,
+    "i": I32, "I": U32,
+    "q": I64, "Q": U64,
+    "f": F32, "d": F64,
+}
+
+
+def expand_fmt(fmt: str) -> list[str]:
+    """``struct`` format string -> token list (``"<HIB"`` -> u16 u32 u8)."""
+    toks: list[str] = []
+    count = ""
+    for ch in fmt:
+        if ch in "<>=!@ ":
+            continue
+        if ch.isdigit():
+            count += ch
+            continue
+        n = int(count) if count else 1
+        count = ""
+        if ch == "x":
+            continue
+        if ch == "s":
+            toks.append(f"s{n}")
+            continue
+        tok = _STRUCT_TOKENS.get(ch, f"?{ch}")
+        toks.extend([tok] * n)
+    return toks
+
+
+def normalize(items) -> tuple:
+    """Canonical shape: drop empty loops, collapse identical branch arms."""
+    out: list = []
+    for it in items:
+        if isinstance(it, tuple) and it and it[0] == "loop":
+            body = normalize(it[1])
+            if body:
+                out.append(("loop", body))
+        elif isinstance(it, tuple) and it and it[0] == "branch":
+            arms = [normalize(a) for a in it[1:]]
+            arms = [a for a in arms if a]
+            if not arms:
+                continue
+            if all(a == arms[0] for a in arms):
+                out.extend(arms[0])
+            else:
+                out.append(("branch",) + tuple(arms))
+        else:
+            out.append(it)
+    return tuple(out)
+
+
+def render_shape(shape: tuple) -> str:
+    """Human-readable one-line rendering for diagnostics."""
+    parts = []
+    for it in shape:
+        if isinstance(it, tuple) and it and it[0] == "loop":
+            parts.append(f"loop({render_shape(it[1])})")
+        elif isinstance(it, tuple) and it and it[0] == "branch":
+            arms = " | ".join(render_shape(a) for a in it[1:])
+            parts.append(f"branch({arms})")
+        else:
+            parts.append(str(it))
+    return " ".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FrameSpec:
+    """One frame format: where its writer/reader live and the wire shape
+    both must implement.
+
+    ``documented`` marks tags with a normative section in docs/format.md
+    (the registry-vs-docs test keys on this); RFC1 is the pre-store
+    inline format that §7 declares specified by its implementation.
+    """
+
+    tag: str
+    module: str              # repo-relative path
+    writer: str              # qualname, e.g. "SharedCodebook.to_bytes"
+    reader: str              # qualname, e.g. "SharedCodebook.from_bytes"
+    schema: tuple            # normalized token tree (magic included)
+    sealed: bool = True      # must end in a CRC1 trailer (format.md §8)
+    documented: bool = True  # has a numbered section in docs/format.md
+
+
+# docs/format.md §2.1 COMPONENT
+_RFS1_COMPONENT = (U8, U16, U32, loop(ARR))
+# docs/format.md §3.1 DELTA-COMPONENT
+_RFD1_COMPONENT = (U8, ARR, U16, loop(ARR), U16, loop(I16, U32, BYTES))
+# RFC1 COMPONENT (legacy inline format; see _write_rfc_component)
+_RFC1_COMPONENT = (U8, ARR, U16, loop(ARR, U32, BYTES))
+
+REGISTRY: tuple[FrameSpec, ...] = (
+    FrameSpec(
+        tag="RFS1",
+        module="src/repro/store/codebook.py",
+        writer="SharedCodebook.to_bytes",
+        reader="SharedCodebook.from_bytes",
+        schema=normalize((
+            MAGIC,
+            U16, U32, U8, U16, U16, U32,     # header "<HIBHHI"
+            ARR,                             # n_bins_per_feature
+            ARR,                             # categorical
+            *_RFS1_COMPONENT,                # vars component
+            U16, loop(U16, *_RFS1_COMPONENT),  # split components
+            *_RFS1_COMPONENT,                # fits component
+            ARR,                             # fleet_fit_values
+        )),
+    ),
+    FrameSpec(
+        tag="RFD1",
+        module="src/repro/store/delta.py",
+        writer="UserDelta.to_bytes",
+        reader="UserDelta.from_bytes",
+        schema=normalize((
+            MAGIC,
+            U16, U32, U16, U32, U32,         # header "<HIHII"
+            ARR,                             # zaks_lengths
+            BYTES,                           # zaks_payload
+            *_RFD1_COMPONENT,                # vars delta component
+            U16, loop(U16, *_RFD1_COMPONENT),  # split components
+            *_RFD1_COMPONENT,                # fits component
+            ARR,                             # fit_map
+            ARR,                             # extra_fit_values
+        )),
+    ),
+    FrameSpec(
+        tag="RFT1",
+        module="src/repro/store/runtime.py",
+        writer="ForestStore.to_bytes",
+        reader="ForestStore.from_bytes",
+        schema=normalize((
+            MAGIC,
+            U16, loop(BYTES),                # retained codebook frames
+            U32, loop(BYTES, BYTES),         # (user_id, delta frame)
+        )),
+    ),
+    FrameSpec(
+        tag="RFM1",
+        module="src/repro/store/lifecycle.py",
+        writer="RemapTable.to_bytes",
+        reader="RemapTable.from_bytes",
+        schema=normalize((
+            MAGIC,
+            U16, U16,                        # old/new generation
+            U8,                              # fit_table_prefix flag
+            ARR,                             # vars_map
+            U16, loop(U16, ARR),             # per-variable split maps
+            ARR,                             # fits_map
+        )),
+    ),
+    FrameSpec(
+        tag="RFJ1",
+        module="src/repro/store/lifecycle.py",
+        writer="MigrationJournal.to_bytes",
+        reader="MigrationJournal.from_bytes",
+        schema=normalize((
+            MAGIC,
+            U8,                              # state index
+            BYTES,                           # mode
+            U16, U16,                        # old/new generation
+            BYTES, BYTES,                    # codebook frame, remap frame
+            U32, loop(BYTES, U8, BYTES, BYTES),  # per-user entries
+        )),
+    ),
+    FrameSpec(
+        tag="RFN1",
+        module="src/repro/store/durable.py",
+        writer="Manifest.to_bytes",
+        reader="Manifest.from_bytes",
+        schema=normalize((
+            MAGIC,
+            U32, U16, U32, U32,              # epoch, slab_shards, next ids
+            U32,                             # n_slabs
+            loop(
+                U32, U32, U32, U16,          # slab header
+                loop(U32, U8, U8, U16, BYTES, U32, U32, U32),  # shards
+            ),
+        )),
+    ),
+    FrameSpec(
+        tag="RFC1",
+        module="src/repro/core/forest_codec.py",
+        writer="CompressedForest.to_bytes",
+        reader="CompressedForest.from_bytes",
+        documented=False,                    # legacy inline format (§7)
+        schema=normalize((
+            MAGIC,
+            U32, U32, U16, U32, U8,          # header "<IIHIB"
+            U16, U32,                        # structure header "<HI"
+            ARR, ARR,                        # n_bins, categorical
+            ARR,                             # zaks_lengths
+            BYTES,                           # zaks_payload
+            *_RFC1_COMPONENT,                # vars component
+            U16, loop(U16, *_RFC1_COMPONENT),  # split components
+            *_RFC1_COMPONENT,                # fits component
+            ARR,                             # fit_values
+        )),
+    ),
+)
+
+
+_DOC_TAG_RE = re.compile(r"^##\s+\d+\.\s+`(RF[A-Z]\d)`", re.MULTILINE)
+
+
+def documented_tags(format_md: Path) -> set[str]:
+    """Frame tags with a numbered ``## N. `TAG``` section in format.md."""
+    return set(_DOC_TAG_RE.findall(format_md.read_text()))
+
+
+# ---------------------------------------------------------------------------
+# AST shape extraction
+# ---------------------------------------------------------------------------
+
+_WRITE_PRIMS = {
+    "write_u16": U16, "write_u32": U32,
+    "write_arr": ARR, "write_bytes": BYTES,
+}
+_READ_PRIMS = {
+    "read_u16": U16, "read_u32": U32,
+    "read_arr": ARR, "read_bytes": BYTES,
+}
+
+
+@dataclass
+class ModuleIndex:
+    """Parsed module with its top-level defs and bytes constants."""
+
+    path: Path
+    tree: ast.Module
+    functions: dict[str, ast.FunctionDef]
+    classes: dict[str, ast.ClassDef]
+    bytes_constants: dict[str, bytes]
+
+    @classmethod
+    def parse(cls, path: Path) -> "ModuleIndex":
+        tree = ast.parse(path.read_text(), filename=str(path))
+        functions: dict[str, ast.FunctionDef] = {}
+        classes: dict[str, ast.ClassDef] = {}
+        consts: dict[str, bytes] = {}
+        for node in tree.body:
+            if isinstance(node, ast.FunctionDef):
+                functions[node.name] = node
+            elif isinstance(node, ast.ClassDef):
+                classes[node.name] = node
+            elif isinstance(node, ast.Assign):
+                if (
+                    isinstance(node.value, ast.Constant)
+                    and isinstance(node.value.value, bytes)
+                ):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            consts[t.id] = node.value.value
+        return cls(path, tree, functions, classes, consts)
+
+    def resolve(self, qualname: str) -> ast.FunctionDef:
+        """Find ``func`` or ``Class.method`` in this module."""
+        if "." in qualname:
+            cname, mname = qualname.split(".", 1)
+            cls_node = self.classes.get(cname)
+            if cls_node is not None:
+                for item in cls_node.body:
+                    if (
+                        isinstance(
+                            item, (ast.FunctionDef, ast.AsyncFunctionDef)
+                        )
+                        and item.name == mname
+                    ):
+                        return item
+            raise LookupError(f"{qualname} not found in {self.path}")
+        fn = self.functions.get(qualname)
+        if fn is None:
+            raise LookupError(f"{qualname} not found in {self.path}")
+        return fn
+
+
+@dataclass
+class ShapeResult:
+    """What ``extract_shape`` recovered from one function."""
+
+    shape: tuple
+    calls_with_crc: bool
+    calls_check_crc: bool
+    has_magic: bool
+
+    @property
+    def sealed(self) -> bool:
+        return self.calls_with_crc or self.calls_check_crc
+
+
+class _Extractor:
+    """In-order AST walk producing the wire-token stream of a function,
+    inlining module-local helper calls (cycle-guarded)."""
+
+    def __init__(self, index: ModuleIndex) -> None:
+        self.index = index
+        self.calls_with_crc = False
+        self.calls_check_crc = False
+        self._inline_stack: list[str] = []
+
+    # -- entry ----------------------------------------------------------
+    def extract(self, fn: ast.FunctionDef) -> list:
+        env = {
+            n.name: n
+            for n in fn.body
+            if isinstance(n, ast.FunctionDef)
+        }
+        return self._stmts(fn.body, env)
+
+    # -- statements -----------------------------------------------------
+    def _stmts(self, stmts, env) -> list:
+        out: list = []
+        for s in stmts:
+            out.extend(self._stmt(s, env))
+        return out
+
+    def _stmt(self, s: ast.stmt, env) -> list:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef, ast.Import, ast.ImportFrom,
+                          ast.Global, ast.Nonlocal, ast.Pass)):
+            return []
+        if isinstance(s, (ast.For, ast.AsyncFor)):
+            head = self._expr(s.iter, env)
+            body = self._stmts(s.body, env) + self._stmts(s.orelse, env)
+            return head + ([("loop", tuple(body))] if body else [])
+        if isinstance(s, ast.While):
+            head = self._expr(s.test, env)
+            body = self._stmts(s.body, env)
+            return head + ([("loop", tuple(body))] if body else [])
+        if isinstance(s, ast.If):
+            head = self._expr(s.test, env)
+            arms = (
+                tuple(self._stmts(s.body, env)),
+                tuple(self._stmts(s.orelse, env)),
+            )
+            return head + [("branch",) + arms]
+        if isinstance(s, (ast.With, ast.AsyncWith)):
+            out: list = []
+            for item in s.items:
+                out.extend(self._expr(item.context_expr, env))
+            return out + self._stmts(s.body, env)
+        if isinstance(s, ast.Try):
+            out = self._stmts(s.body, env)
+            for h in s.handlers:
+                out.extend(self._stmts(h.body, env))
+            out.extend(self._stmts(s.orelse, env))
+            out.extend(self._stmts(s.finalbody, env))
+            return out
+        if isinstance(s, ast.Return):
+            return self._expr(s.value, env)
+        if isinstance(s, ast.Assign):
+            out = self._expr(s.value, env)
+            for t in s.targets:
+                out.extend(self._expr(t, env))
+            return out
+        if isinstance(s, ast.AugAssign):
+            return self._expr(s.value, env) + self._expr(s.target, env)
+        if isinstance(s, ast.AnnAssign):
+            return self._expr(s.value, env)
+        if isinstance(s, ast.Expr):
+            return self._expr(s.value, env)
+        if isinstance(s, (ast.Raise, ast.Assert, ast.Delete)):
+            out = []
+            for child in ast.iter_child_nodes(s):
+                if isinstance(child, ast.expr):
+                    out.extend(self._expr(child, env))
+            return out
+        # anything else: walk expression children in order
+        out = []
+        for child in ast.iter_child_nodes(s):
+            if isinstance(child, ast.expr):
+                out.extend(self._expr(child, env))
+        return out
+
+    # -- expressions ----------------------------------------------------
+    def _expr(self, e, env) -> list:
+        if e is None or not isinstance(e, ast.expr):
+            return []
+        if isinstance(e, ast.Call):
+            return self._call(e, env)
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                          ast.DictComp)):
+            gen = e.generators[0]
+            head = self._expr(gen.iter, env)
+            inner: list = []
+            for g in e.generators[1:]:
+                inner.extend(self._expr(g.iter, env))
+            for g in e.generators:
+                for cond in g.ifs:
+                    inner.extend(self._expr(cond, env))
+            if isinstance(e, ast.DictComp):
+                inner.extend(self._expr(e.key, env))
+                inner.extend(self._expr(e.value, env))
+            else:
+                inner.extend(self._expr(e.elt, env))
+            return head + ([("loop", tuple(inner))] if inner else [])
+        if isinstance(e, ast.IfExp):
+            head = self._expr(e.test, env)
+            arms = (
+                tuple(self._expr(e.body, env)),
+                tuple(self._expr(e.orelse, env)),
+            )
+            return head + [("branch",) + arms]
+        if isinstance(e, (ast.Lambda,)):
+            return []
+        out: list = []
+        for child in ast.iter_child_nodes(e):
+            if isinstance(child, ast.expr):
+                out.extend(self._expr(child, env))
+        return out
+
+    # -- calls ----------------------------------------------------------
+    def _call(self, c: ast.Call, env) -> list:
+        name = _dotted(c.func)
+        bare = name.split(".")[-1] if name else ""
+
+        def args_toks() -> list:
+            out: list = []
+            for a in c.args:
+                out.extend(self._expr(a, env))
+            for kw in c.keywords:
+                out.extend(self._expr(kw.value, env))
+            return out
+
+        # sealing markers (no wire tokens of their own)
+        if bare == "with_crc":
+            self.calls_with_crc = True
+            return args_toks()
+        if bare == "check_crc":
+            self.calls_check_crc = True
+            return args_toks()
+
+        if isinstance(c.func, ast.Name):
+            if c.func.id in _WRITE_PRIMS:
+                return args_toks() + [_WRITE_PRIMS[c.func.id]]
+            if c.func.id in _READ_PRIMS:
+                return args_toks() + [_READ_PRIMS[c.func.id]]
+            if c.func.id == "read_struct":
+                fmt = _const_str(c.args[1]) if len(c.args) > 1 else None
+                return list(expand_fmt(fmt)) if fmt else ["?fmt"]
+            if c.func.id == "expect_magic":
+                return [MAGIC]
+            # module-local helper (nested def shadows module-level)
+            target = env.get(c.func.id) or self.index.functions.get(
+                c.func.id
+            )
+            if target is not None:
+                return args_toks() + self._inline(target)
+            return args_toks()
+
+        # struct.unpack(fmt, ...) used directly as a reader
+        if name == "struct.unpack" or bare == "unpack":
+            fmt = _const_str(c.args[0]) if c.args else None
+            return args_toks() + (
+                list(expand_fmt(fmt)) if fmt else ["?fmt"]
+            )
+
+        # out.write(...)
+        if bare == "write" and len(c.args) == 1 and not c.keywords:
+            return self._write_arg(c.args[0], env)
+
+        # unhandled call: walk func + args in evaluation order
+        out = self._expr(c.func, env)
+        return out + args_toks()
+
+    def _write_arg(self, a: ast.expr, env) -> list:
+        """Tokens for the single argument of an ``out.write(...)``."""
+        if isinstance(a, ast.Call):
+            nm = _dotted(a.func)
+            if nm == "struct.pack" or nm.endswith(".pack"):
+                fmt = _const_str(a.args[0]) if a.args else None
+                return list(expand_fmt(fmt)) if fmt else ["?fmt"]
+        if isinstance(a, ast.Constant) and isinstance(a.value, bytes):
+            return [MAGIC] if len(a.value) == 4 else [RAW]
+        if isinstance(a, ast.Name):
+            const = self.index.bytes_constants.get(a.id)
+            if const is not None:
+                return [MAGIC] if len(const) == 4 else [RAW]
+        # opaque write: visible as RAW so asymmetry surfaces
+        return self._expr(a, env) + [RAW]
+
+    def _inline(self, fn: ast.FunctionDef) -> list:
+        if fn.name in self._inline_stack:
+            return []  # recursion: shape cannot be expressed, stop
+        self._inline_stack.append(fn.name)
+        try:
+            return self.extract(fn)
+        finally:
+            self._inline_stack.pop()
+
+
+def _dotted(node: ast.expr) -> str:
+    """Best-effort dotted name of a call target (``"struct.pack"``)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ".".join(reversed(parts))
+
+
+def _const_str(node: ast.expr) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def extract_shape(index: ModuleIndex, qualname: str) -> ShapeResult:
+    """The normalized wire shape implemented by ``qualname`` in the
+    module, plus its sealing/magic facts."""
+    fn = index.resolve(qualname)
+    ex = _Extractor(index)
+    raw = ex.extract(fn)
+    shape = normalize(raw)
+    return ShapeResult(
+        shape=shape,
+        calls_with_crc=ex.calls_with_crc,
+        calls_check_crc=ex.calls_check_crc,
+        has_magic=MAGIC in _flatten(shape),
+    )
+
+
+def _flatten(shape) -> list:
+    out: list = []
+    for it in shape:
+        if isinstance(it, tuple) and it and it[0] in ("loop", "branch"):
+            for sub in it[1:]:
+                out.extend(_flatten(sub))
+        else:
+            out.append(it)
+    return out

@@ -1,0 +1,334 @@
+"""Kernel-invariants pass: every Pallas kernel entry point carries the
+float32 precision guard, declares its memory layout explicitly, and has
+a reference twin the tests can compare against.
+
+Background (docs/architecture.md, kernels/tree_predict): the TPU
+engines traverse trees with float32 arithmetic over integer-coded
+features/thresholds.  float32 holds integers exactly only below
+``2**24``, so every public entry validates its inputs with
+``_validate_f32_exact`` before launching — dropping that guard turns an
+out-of-range feature code into a silently wrong prediction.  Each
+kernel also has a pure-JAX reference implementation (``ref.py``) with a
+matching signature; CI equivalence tests depend on the pairing.
+
+Codes:
+
+* **KERN001** — a public function that (transitively) launches
+  ``pl.pallas_call`` without ``_validate_f32_exact`` on any path into
+  it.  A function counts as guarded if it calls the validator itself
+  or if every callee through which it reaches a kernel is guarded.
+* **KERN002** — a ``pl.pallas_call`` without explicit ``out_shape`` /
+  ``in_specs`` / ``out_specs``, or a ``pl.BlockSpec()`` with neither a
+  block shape nor an explicit ``memory_space``: implicit defaults hide
+  where tensors live (ANY vs VMEM vs SMEM) and break the next reader.
+* **KERN003** — a kernel entry missing its reference twin, or a twin
+  whose positional parameters are not an ordered subsequence of the
+  kernel's (the kernel may take extra tuning/precomputed args; the
+  shared science parameters must line up by name and order).
+* **KERN004** — a function that calls ``pl.pallas_call`` directly but
+  is unreachable from every registered entry point: dead or orphaned
+  kernel code that the equivalence tests cannot be exercising.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .findings import Finding
+
+PACKAGE = "src/repro/kernels/tree_predict"
+
+#: kernel entry -> reference twin in ref.py.  The sharded engine
+#: reuses the packed reference: identical math, device-count-invariant.
+KERNEL_TWINS: dict[str, str] = {
+    "forest_predict": "forest_predict_reference",
+    "forest_predict_agg": "forest_predict_agg_reference",
+    "forest_predict_agg_segmented":
+        "forest_predict_agg_segmented_reference",
+    "forest_predict_agg_segmented_packed":
+        "forest_predict_agg_segmented_packed_reference",
+    "forest_predict_agg_segmented_sharded":
+        "forest_predict_agg_segmented_packed_reference",
+}
+
+#: the module whose public kernels MUST each have a twin registered
+KERNEL_MODULE = "tree_predict.py"
+VALIDATOR = "_validate_f32_exact"
+
+
+class _FnInfo:
+    def __init__(self, module: str, node: ast.FunctionDef) -> None:
+        self.module = module
+        self.node = node
+        self.name = node.name
+        self.refs: set[str] = set()
+        self.calls_validator = False
+        self.pallas_calls: list[ast.Call] = []
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name):
+                self.refs.add(sub.id)
+            if isinstance(sub, ast.Call):
+                dotted = _dotted(sub.func)
+                if dotted.split(".")[-1] == "pallas_call":
+                    self.pallas_calls.append(sub)
+                if dotted == VALIDATOR:
+                    self.calls_validator = True
+
+    @property
+    def public(self) -> bool:
+        return not self.name.startswith("_")
+
+    @property
+    def direct_pallas(self) -> bool:
+        return bool(self.pallas_calls)
+
+    def params(self) -> list[str]:
+        a = self.node.args
+        return [p.arg for p in a.posonlyargs + a.args]
+
+
+def _dotted(node: ast.expr) -> str:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_subsequence(needle: list[str], hay: list[str]) -> bool:
+    it = iter(hay)
+    return all(any(h == n for h in it) for n in needle)
+
+
+class _Package:
+    """All functions in the kernel package, with reference edges."""
+
+    def __init__(self, root: Path) -> None:
+        self.root = root
+        self.fns: dict[str, _FnInfo] = {}       # name -> info
+        self.by_module: dict[str, list[_FnInfo]] = {}
+        for path in sorted((root / PACKAGE).glob("*.py")):
+            tree = ast.parse(path.read_text(), filename=str(path))
+            infos = [
+                _FnInfo(path.name, n)
+                for n in tree.body
+                if isinstance(n, ast.FunctionDef)
+            ]
+            # function-level defs referenced via `from .sibling import x`
+            # resolve by bare name: the package universe is flat and
+            # names are unique across its modules.
+            for info in infos:
+                self.fns[info.name] = info
+            self.by_module[path.name] = infos
+        self._reach_memo: dict[str, bool] = {}
+        self._guard_memo: dict[str, bool] = {}
+
+    def edges(self, fn: _FnInfo) -> list[_FnInfo]:
+        return [
+            self.fns[r] for r in fn.refs
+            if r in self.fns and self.fns[r].name != fn.name
+        ]
+
+    def reaches_pallas(self, name: str, _stack: frozenset = frozenset()
+                       ) -> bool:
+        if name in self._reach_memo:
+            return self._reach_memo[name]
+        if name in _stack:
+            return False
+        fn = self.fns[name]
+        if fn.direct_pallas:
+            self._reach_memo[name] = True
+            return True
+        got = any(
+            self.reaches_pallas(e.name, _stack | {name})
+            for e in self.edges(fn)
+        )
+        self._reach_memo[name] = got
+        return got
+
+    def guarded(self, name: str, _stack: frozenset = frozenset()) -> bool:
+        """True if every path from ``name`` into a pallas_call passes
+        through ``_validate_f32_exact`` first."""
+        if name in self._guard_memo:
+            return self._guard_memo[name]
+        if name in _stack:
+            return True  # optimistic on cycles; the entry still checks
+        fn = self.fns[name]
+        if fn.calls_validator:
+            self._guard_memo[name] = True
+            return True
+        if fn.direct_pallas:
+            self._guard_memo[name] = False
+            return False
+        reaching = [
+            e for e in self.edges(fn)
+            if self.reaches_pallas(e.name)
+        ]
+        got = bool(reaching) and all(
+            self.guarded(e.name, _stack | {name}) for e in reaching
+        )
+        self._guard_memo[name] = got
+        return got
+
+
+def run_pass(root: Path) -> list[Finding]:
+    findings: list[Finding] = []
+    pkg = _Package(root)
+    relpath = {
+        m: f"{PACKAGE}/{m}" for m in pkg.by_module
+    }
+
+    ref_fns = {f.name: f for f in pkg.by_module.get("ref.py", [])}
+
+    # ---- KERN001: precision guard on public entries -------------------
+    for fn in pkg.fns.values():
+        if not fn.public or not pkg.reaches_pallas(fn.name):
+            continue
+        if not pkg.guarded(fn.name):
+            findings.append(Finding(
+                code="KERN001",
+                path=relpath[fn.module],
+                line=fn.node.lineno,
+                scope=fn.name,
+                subject=fn.name,
+                message=(
+                    f"public kernel entry {fn.name} launches "
+                    f"pl.pallas_call without {VALIDATOR} on every "
+                    "path — inputs above 2**24 would traverse wrong "
+                    "silently (float32 integer-exactness bound)"
+                ),
+            ))
+
+    # ---- KERN002: explicit layout on every pallas_call ----------------
+    for fn in pkg.fns.values():
+        for call in fn.pallas_calls:
+            kwargs = {kw.arg for kw in call.keywords}
+            missing = [
+                k for k in ("out_shape", "in_specs", "out_specs")
+                if k not in kwargs
+            ]
+            if missing:
+                findings.append(Finding(
+                    code="KERN002",
+                    path=relpath[fn.module],
+                    line=call.lineno,
+                    scope=fn.name,
+                    subject="pallas_call",
+                    message=(
+                        "pl.pallas_call without explicit "
+                        f"{'/'.join(missing)} — memory layout must "
+                        "be declared, not defaulted"
+                    ),
+                ))
+        for sub in ast.walk(fn.node):
+            if (
+                isinstance(sub, ast.Call)
+                and _dotted(sub.func).split(".")[-1] == "BlockSpec"
+            ):
+                kwargs = {kw.arg for kw in sub.keywords}
+                if not sub.args and "memory_space" not in kwargs:
+                    findings.append(Finding(
+                        code="KERN002",
+                        path=relpath[fn.module],
+                        line=sub.lineno,
+                        scope=fn.name,
+                        subject="BlockSpec",
+                        message=(
+                            "pl.BlockSpec with neither a block shape "
+                            "nor memory_space — declare where the "
+                            "operand lives (VMEM block / SMEM / ANY)"
+                        ),
+                    ))
+
+    # ---- KERN003: reference twins -------------------------------------
+    for entry, twin in KERNEL_TWINS.items():
+        fn = pkg.fns.get(entry)
+        if fn is None:
+            findings.append(Finding(
+                code="KERN003",
+                path=PACKAGE,
+                line=1,
+                scope=entry,
+                subject=entry,
+                message=f"registered kernel entry {entry} not found",
+            ))
+            continue
+        ref = ref_fns.get(twin)
+        if ref is None:
+            findings.append(Finding(
+                code="KERN003",
+                path=relpath[fn.module],
+                line=fn.node.lineno,
+                scope=entry,
+                subject=twin,
+                message=(
+                    f"kernel entry {entry} has no reference twin "
+                    f"{twin} in ref.py"
+                ),
+            ))
+            continue
+        if not _is_subsequence(ref.params(), fn.params()):
+            findings.append(Finding(
+                code="KERN003",
+                path=relpath[fn.module],
+                line=fn.node.lineno,
+                scope=entry,
+                subject=twin,
+                message=(
+                    f"reference twin {twin}{tuple(ref.params())} is "
+                    "not an ordered parameter subsequence of "
+                    f"{entry}{tuple(fn.params())} — the equivalence "
+                    "tests cannot pair them positionally"
+                ),
+            ))
+    # every public kernel in the kernel module must be registered
+    for fn in pkg.by_module.get(KERNEL_MODULE, []):
+        if (
+            fn.public
+            and pkg.reaches_pallas(fn.name)
+            and fn.name not in KERNEL_TWINS
+        ):
+            findings.append(Finding(
+                code="KERN003",
+                path=relpath[fn.module],
+                line=fn.node.lineno,
+                scope=fn.name,
+                subject=fn.name,
+                message=(
+                    f"public kernel {fn.name} is not registered in "
+                    "KERNEL_TWINS — add a reference twin in ref.py "
+                    "and register the pair"
+                ),
+            ))
+
+    # ---- KERN004: no orphaned kernels ---------------------------------
+    entries = set(KERNEL_TWINS) | {
+        f.name for f in pkg.fns.values()
+        if f.public and pkg.reaches_pallas(f.name)
+    }
+    reachable: set[str] = set()
+    frontier = [e for e in entries if e in pkg.fns]
+    while frontier:
+        cur = frontier.pop()
+        if cur in reachable:
+            continue
+        reachable.add(cur)
+        frontier.extend(e.name for e in pkg.edges(pkg.fns[cur]))
+    for fn in pkg.fns.values():
+        if fn.direct_pallas and fn.name not in reachable:
+            findings.append(Finding(
+                code="KERN004",
+                path=relpath[fn.module],
+                line=fn.node.lineno,
+                scope=fn.name,
+                subject=fn.name,
+                message=(
+                    f"{fn.name} calls pl.pallas_call but is "
+                    "unreachable from every registered kernel entry "
+                    "— orphaned kernel code the equivalence tests "
+                    "cannot exercise"
+                ),
+            ))
+    return findings

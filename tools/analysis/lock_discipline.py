@@ -1,0 +1,211 @@
+"""Lock-discipline pass: every access to state declared shared must be
+lexically under the lock that guards it.
+
+Classes declare their locking contract with the zero-cost
+``@guarded_by(lock, *attrs, holds=(...))`` decorator
+(``repro.runtime.guards``): *attrs* name the instance attributes the
+*lock* protects, and *holds* names private methods whose CALLERS must
+hold the lock (the method itself may then touch guarded state freely).
+
+Codes:
+
+* **LOCK001** — a method reads or writes a guarded attribute outside a
+  ``with self.<lock>:`` block (``__init__`` and friends are exempt —
+  the object is not yet shared during construction).
+* **LOCK002** — a method calls a ``holds=`` method without holding the
+  lock it assumes.
+
+The check is LEXICAL: a ``with self._lock:`` anywhere up the statement
+tree satisfies it, including closures/lambdas defined inside the block
+(they execute there in this codebase's patterns — e.g.
+``Condition.wait_for`` predicates).  That makes the pass conservative
+in the right direction: lock acquisition through aliases or helper
+indirection is reported, and the fix is to make the locking visible.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .findings import Finding
+
+SCOPE = (
+    "src/repro/serving",
+    "src/repro/sched",
+    "src/repro/store",
+    "src/repro/runtime",
+)
+
+_CTOR_EXEMPT = {"__init__", "__post_init__", "__new__", "__del__"}
+
+
+def _parse_guarded_by(cls: ast.ClassDef):
+    """(attr -> lock, lock -> set of holds-methods) from stacked
+    ``@guarded_by`` decorators; ``None`` when the class has none."""
+    attr_to_lock: dict[str, str] = {}
+    holds: dict[str, set[str]] = {}
+    found = False
+    for dec in cls.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        name = dec.func
+        dotted = (
+            name.id if isinstance(name, ast.Name)
+            else name.attr if isinstance(name, ast.Attribute)
+            else ""
+        )
+        if dotted != "guarded_by":
+            continue
+        found = True
+        consts = [
+            a.value for a in dec.args
+            if isinstance(a, ast.Constant) and isinstance(a.value, str)
+        ]
+        if not consts:
+            continue
+        lock, attrs = consts[0], consts[1:]
+        for a in attrs:
+            attr_to_lock[a] = lock
+        holds.setdefault(lock, set())
+        for kw in dec.keywords:
+            if kw.arg == "holds" and isinstance(
+                kw.value, (ast.Tuple, ast.List)
+            ):
+                for el in kw.value.elts:
+                    if (
+                        isinstance(el, ast.Constant)
+                        and isinstance(el.value, str)
+                    ):
+                        holds[lock].add(el.value)
+    return (attr_to_lock, holds) if found else None
+
+
+class _MethodChecker:
+    """Lexical with-lock tracking over one method body."""
+
+    def __init__(
+        self,
+        relpath: str,
+        clsname: str,
+        method: ast.FunctionDef,
+        self_name: str,
+        attr_to_lock: dict[str, str],
+        holds: dict[str, set[str]],
+        assumed: frozenset,
+        findings: list[Finding],
+    ) -> None:
+        self.relpath = relpath
+        self.scope = f"{clsname}.{method.name}"
+        self.self_name = self_name
+        self.attr_to_lock = attr_to_lock
+        self.holds = holds
+        self.findings = findings
+        self.method = method
+        self.assumed = assumed
+
+    def check(self) -> None:
+        for stmt in self.method.body:
+            self._visit(stmt, self.assumed)
+
+    def _locks_in_with(self, node) -> frozenset:
+        got = set()
+        for item in node.items:
+            ctx = item.context_expr
+            if (
+                isinstance(ctx, ast.Attribute)
+                and isinstance(ctx.value, ast.Name)
+                and ctx.value.id == self.self_name
+                and ctx.attr in self.holds
+            ):
+                got.add(ctx.attr)
+        return frozenset(got)
+
+    def _visit(self, node: ast.AST, held: frozenset) -> None:
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                self._visit(item.context_expr, held)
+            inner = held | self._locks_in_with(node)
+            for stmt in node.body:
+                self._visit(stmt, inner)
+            return
+        if isinstance(node, ast.Call):
+            f = node.func
+            if (
+                isinstance(f, ast.Attribute)
+                and isinstance(f.value, ast.Name)
+                and f.value.id == self.self_name
+            ):
+                for lock, methods in self.holds.items():
+                    if f.attr in methods and lock not in held:
+                        self.findings.append(Finding(
+                            code="LOCK002",
+                            path=self.relpath,
+                            line=node.lineno,
+                            scope=self.scope,
+                            subject=f.attr,
+                            message=(
+                                f"call to {f.attr}() requires holding "
+                                f"self.{lock} (declared via "
+                                f"guarded_by holds=) but no enclosing "
+                                f"'with self.{lock}:' is visible"
+                            ),
+                        ))
+                # fall through: also check args below
+        if isinstance(node, ast.Attribute):
+            if (
+                isinstance(node.value, ast.Name)
+                and node.value.id == self.self_name
+            ):
+                lock = self.attr_to_lock.get(node.attr)
+                if lock is not None and lock not in held:
+                    self.findings.append(Finding(
+                        code="LOCK001",
+                        path=self.relpath,
+                        line=node.lineno,
+                        scope=self.scope,
+                        subject=node.attr,
+                        message=(
+                            f"access to self.{node.attr} (guarded by "
+                            f"self.{lock}) outside a "
+                            f"'with self.{lock}:' block"
+                        ),
+                    ))
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, held)
+
+
+def _check_class(
+    relpath: str, cls: ast.ClassDef, findings: list[Finding]
+) -> None:
+    parsed = _parse_guarded_by(cls)
+    if parsed is None:
+        return
+    attr_to_lock, holds = parsed
+    for item in cls.body:
+        if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if item.name in _CTOR_EXEMPT:
+            continue
+        if not item.args.args:
+            continue  # staticmethod with no receiver — nothing to track
+        self_name = item.args.args[0].arg
+        assumed = frozenset(
+            lock for lock, methods in holds.items()
+            if item.name in methods
+        )
+        _MethodChecker(
+            relpath, cls.name, item, self_name,
+            attr_to_lock, holds, assumed, findings,
+        ).check()
+
+
+def run_pass(root: Path) -> list[Finding]:
+    findings: list[Finding] = []
+    for sub in SCOPE:
+        for path in sorted((root / sub).glob("*.py")):
+            relpath = str(path.relative_to(root))
+            tree = ast.parse(path.read_text(), filename=str(path))
+            for node in tree.body:
+                if isinstance(node, ast.ClassDef):
+                    _check_class(relpath, node, findings)
+    return findings

@@ -1,0 +1,155 @@
+#!/usr/bin/env python3
+"""repro-lint: domain-specific static analysis for this repository.
+
+Four passes over the source tree (no imports of the analyzed code —
+pure ``ast``), each encoding an invariant the test suite can only
+sample but the analyzer can check exhaustively:
+
+* ``frame-safety``     FRAME001..FRAME006  (see frame_safety.py)
+* ``determinism``      DET001..DET004      (see determinism.py)
+* ``lock-discipline``  LOCK001..LOCK002    (see lock_discipline.py)
+* ``kernel-invariants``KERN001..KERN004    (see kernel_invariants.py)
+
+Usage::
+
+    python tools/analysis/repro_lint.py                  # everything
+    python tools/analysis/repro_lint.py --baseline       # CI gate
+    python tools/analysis/repro_lint.py --passes determinism,frame-safety
+    python tools/analysis/repro_lint.py --format json
+    python tools/analysis/repro_lint.py --write-baseline # accept current
+
+Exit status: 0 when no (non-baselined) findings, 1 otherwise.  With
+``--baseline``, findings whose fingerprint appears in
+``tools/analysis/baseline.json`` are reported as baselined but do not
+fail the run — new findings always do.  The baseline in this repo is
+EMPTY by policy: every pre-existing true positive was fixed in the PR
+that introduced the linter, so any entry added later needs a written
+justification in the baseline file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+if __package__ in (None, ""):  # executed as a script
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from analysis import (  # type: ignore[no-redef]
+        determinism,
+        frame_safety,
+        kernel_invariants,
+        lock_discipline,
+    )
+    from analysis.findings import Baseline, Finding  # type: ignore
+else:
+    from . import (
+        determinism,
+        frame_safety,
+        kernel_invariants,
+        lock_discipline,
+    )
+    from .findings import Baseline, Finding
+
+PASSES = {
+    "frame-safety": frame_safety.run_pass,
+    "determinism": determinism.run_pass,
+    "lock-discipline": lock_discipline.run_pass,
+    "kernel-invariants": kernel_invariants.run_pass,
+}
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def run(root: Path, passes: list[str]) -> list[Finding]:
+    findings: list[Finding] = []
+    for name in passes:
+        findings.extend(PASSES[name](root))
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint", description=__doc__.split("\n\n")[0]
+    )
+    ap.add_argument(
+        "--root", type=Path,
+        default=Path(__file__).resolve().parents[2],
+        help="repository root (default: two levels above this file)",
+    )
+    ap.add_argument(
+        "--passes", default=",".join(PASSES),
+        help=f"comma-separated subset of: {', '.join(PASSES)}",
+    )
+    ap.add_argument(
+        "--baseline", nargs="?", const=str(DEFAULT_BASELINE),
+        default=None, metavar="PATH",
+        help="tolerate findings recorded in the baseline file "
+             f"(default path: {DEFAULT_BASELINE.name})",
+    )
+    ap.add_argument(
+        "--write-baseline", action="store_true",
+        help="record every current finding into the baseline and exit 0",
+    )
+    ap.add_argument(
+        "--format", choices=("text", "json"), default="text",
+    )
+    args = ap.parse_args(argv)
+
+    passes = [p.strip() for p in args.passes.split(",") if p.strip()]
+    unknown = [p for p in passes if p not in PASSES]
+    if unknown:
+        ap.error(f"unknown pass(es): {', '.join(unknown)}")
+
+    findings = run(args.root, passes)
+
+    baseline_path = (
+        Path(args.baseline) if args.baseline else DEFAULT_BASELINE
+    )
+    if args.write_baseline:
+        bl = Baseline(path=baseline_path)
+        for f in findings:
+            bl.accepted[f.fingerprint] = f.message.split("\n")[0]
+        bl.save()
+        print(
+            f"wrote {len(bl.accepted)} fingerprint(s) to {baseline_path}"
+        )
+        return 0
+
+    if args.baseline is not None:
+        bl = Baseline.load(baseline_path)
+        gating = bl.filter_new(findings)
+        baselined = len(findings) - len(gating)
+        stale = bl.stale_entries(findings)
+    else:
+        gating, baselined, stale = findings, 0, []
+
+    if args.format == "json":
+        print(json.dumps(
+            {
+                "findings": [f.__dict__ for f in gating],
+                "baselined": baselined,
+                "stale_baseline_entries": stale,
+            },
+            indent=2,
+        ))
+    else:
+        for f in gating:
+            print(f.render())
+        if baselined:
+            print(f"({baselined} baselined finding(s) suppressed)")
+        for fp in stale:
+            print(
+                f"note: baseline entry no longer fires, remove it: {fp}"
+            )
+        summary = (
+            f"repro-lint: {len(gating)} finding(s) across "
+            f"{len(passes)} pass(es)"
+        )
+        print(summary if gating else f"{summary} — clean")
+    return 1 if gating else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
