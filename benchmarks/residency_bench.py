@@ -1,0 +1,364 @@
+"""Tiered-residency benchmark (ISSUE 10 acceptance measurement).
+
+Puts numbers on the residency tentpole, and in ``--smoke`` mode ASSERTS
+its acceptance criteria (the CI `residency` job runs exactly that):
+
+* **streaming build** — ``build_store_streaming`` folds the fleet into
+  the durable tier in bounded waves (codebook extended per wave for the
+  uncodable models only); every user must reconstruct bit-exactly
+  (``Forest.equals``) from disk afterwards, and memory never holds more
+  than one wave;
+* **budget-bounded serving** — a fleet LARGER than the host residency
+  budget is served through ``ForestServer`` with ``attach_residency``
+  demoting cold deltas back to lazy placeholders: every response must be
+  bit-exact vs an unbounded reference store, and the peak ACCOUNTED
+  resident bytes must never exceed the budget (users-per-GB is the
+  headline ratio);
+* **prefetch** — the same skewed trace with the residency
+  ``Prefetcher`` warming request k+1's user while request k executes
+  (the executor's plan-ahead slot, driven directly so batch-formation
+  noise stays out of the measurement), on vs off, served on the host
+  engine so eviction-order-dependent XLA recompiles can't pollute the
+  comparison: cold requests (user demoted at plan time, labelled by the
+  prefetch-off run so the label is mode-independent) must still be
+  bit-identical, and the overlapped read + parse + entropy decode
+  should cut their latency (the full run reports cold p50/p99 both
+  ways; smoke asserts hit rate > 0, budget held, zero silent wrongs).
+
+Writes machine-readable results to BENCH_residency.json (repo root).
+
+    PYTHONPATH=src python benchmarks/residency_bench.py [--smoke|--quick] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.serving import ForestServer
+from repro.store import (
+    DurableStore,
+    Prefetcher,
+    attach_residency,
+    build_store_streaming,
+    make_synthetic_fleet,
+)
+
+
+def _fleet(n_users: int, seed: int = 3):
+    return make_synthetic_fleet(
+        n_users=n_users, d=6, n_bins=12, seed=seed, n_trees=(4, 8),
+        max_depth=4,
+    )
+
+
+def _zipf_trace(users: list[str], n_requests: int, d: int, n_bins: int,
+                rows: int, seed: int) -> list[tuple[str, np.ndarray]]:
+    """Skewed (zipf-ish) request trace: a hot head stays resident, the
+    cold tail gets demoted — the workload residency tiers exist for."""
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, len(users) + 1)
+    w /= w.sum()
+    return [
+        (
+            users[int(rng.choice(len(users), p=w))],
+            rng.integers(0, n_bins, (rows, d)).astype(np.int32),
+        )
+        for _ in range(n_requests)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# streaming build
+# ---------------------------------------------------------------------------
+
+def bench_streaming_build(n_users: int, wave_users: int,
+                          seed: int = 3) -> dict:
+    fleet = _fleet(n_users, seed)
+    root = tempfile.mkdtemp(prefix="residency_bench_")
+    try:
+        base = f"{root}/fleet"
+        waves: list[dict] = []
+        t0 = time.time()
+        durable = build_store_streaming(
+            fleet, base, wave_users=wave_users, seed=0,
+            on_wave=waves.append,
+        )
+        build_s = time.time() - t0
+        store = durable.load_store(lazy=False)
+        exact = sum(store.reconstruct(u).equals(f) for u, f in fleet.items())
+        stats = durable.stats()
+        return {
+            "n_users": n_users,
+            "wave_users": wave_users,
+            "n_waves": len(waves),
+            "final_generation": waves[-1]["generation"],
+            "waves_extended": sum(w["extended"] for w in waves),
+            "build_s": round(build_s, 2),
+            "live_bytes": stats["live_bytes"],
+            "bit_exact_users": int(exact),
+            "all_bit_exact": bool(exact == n_users),
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# budget-bounded serving
+# ---------------------------------------------------------------------------
+
+def bench_residency_serve(n_users: int, n_requests: int, rows: int,
+                          budget_fractions: list[float],
+                          seed: int = 5) -> list[dict]:
+    fleet = _fleet(n_users, seed)
+    root = tempfile.mkdtemp(prefix="residency_bench_")
+    out = []
+    try:
+        base = f"{root}/fleet"
+        build_store_streaming(fleet, base, wave_users=max(4, n_users // 4),
+                              seed=0)
+        ref = DurableStore.open(base).load_store(lazy=False)
+        users = sorted(ref.user_ids)
+        sizes = {u: len(ref._deltas[u].to_bytes()) for u in users}
+        fleet_bytes = sum(sizes.values())
+        trace = _zipf_trace(
+            users, n_requests, ref.shared.n_features,
+            int(ref.shared.n_bins_per_feature[0]), rows, seed,
+        )
+        oracle = [ref.predict(u, x) for u, x in trace]
+        for frac in budget_fractions:
+            budget = max(int(fleet_bytes * frac), max(sizes.values()))
+            durable = DurableStore.open(base)
+            store = durable.load_store(lazy=True)
+            mgr = attach_residency(store, durable, budget_bytes=budget,
+                                   clock=time.monotonic)
+            server = ForestServer(store)
+            peak = silent_wrong = 0
+            t0 = time.time()
+            for (u, x), want in zip(trace, oracle):
+                got = server.serve([(u, x)])[0]
+                if not np.array_equal(got, want):
+                    silent_wrong += 1
+                peak = max(peak, mgr.accounted_bytes())
+            serve_s = time.time() - t0
+            st = mgr.stats()
+            out.append({
+                "n_users": n_users,
+                "fleet_bytes": fleet_bytes,
+                "budget_fraction": frac,
+                "budget_bytes": budget,
+                "peak_accounted_bytes": int(peak),
+                "budget_respected": bool(peak <= budget),
+                "n_requests": len(trace),
+                "silent_wrong": silent_wrong,
+                "users_per_gb": round(n_users / (budget / 1e9), 1),
+                "requests_per_s": round(len(trace) / max(serve_s, 1e-9), 1),
+                "resident_users": st["resident_users"],
+                "demoted_users": st["demoted_users"],
+                "demotions": st["demotions"],
+                "reloads": st["reloads"],
+                "over_budget_events": st["over_budget_events"],
+                "cold_load_ms_p50": st["cold_load_ms_p50"],
+                "cold_load_ms_p99": st["cold_load_ms_p99"],
+            })
+        return out
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# prefetch on vs off through the scheduler
+# ---------------------------------------------------------------------------
+
+def bench_prefetch(n_users: int, n_steps: int, batch: int, rows: int,
+                   budget_fraction: float, seed: int = 7,
+                   gap_ms: float = 6.0, repeats: int = 3) -> dict:
+    fleet = _fleet(n_users, seed)
+    root = tempfile.mkdtemp(prefix="residency_bench_")
+    try:
+        base = f"{root}/fleet"
+        build_store_streaming(fleet, base, wave_users=max(4, n_users // 4),
+                              seed=0)
+        ref = DurableStore.open(base).load_store(lazy=False)
+        users = sorted(ref.user_ids)
+        sizes = {u: len(ref._deltas[u].to_bytes()) for u in users}
+        fleet_bytes = sum(sizes.values())
+        budget = max(int(fleet_bytes * budget_fraction),
+                     max(sizes.values()))
+        trace = _zipf_trace(
+            users, n_steps * batch, ref.shared.n_features,
+            int(ref.shared.n_bins_per_feature[0]), rows, seed,
+        )
+        oracle = [ref.predict(u, x) for u, x in trace]
+
+        def run(prefetch: bool):
+            """Serve the trace one request at a time on the host
+            (``engine="simple"``) so the measurement isolates the cost
+            residency controls — shard read + parse + entropy decode +
+            predict — from device-side XLA compile churn (the arena's
+            buffer shapes depend on eviction order, so prefetch-on and
+            prefetch-off runs would compile different kernels and the
+            comparison would measure the compiler, not the tiers).
+            With prefetch on, request k+1's user is warmed in the
+            background after request k is served — the executor's
+            plan-of-(k+1) slot — and ``gap_ms`` of inter-arrival think
+            time lets the warm overlap idle time instead of contending
+            with the next timed serve for the interpreter."""
+            durable = DurableStore.open(base)
+            store = durable.load_store(lazy=True)
+            mgr = attach_residency(store, durable, budget_bytes=budget,
+                                   clock=time.monotonic)
+            server = ForestServer(store)
+            pf = (
+                # block_trees matches the simple engine's tile block so
+                # staged tiles land on the keys the serve will look up
+                Prefetcher(mgr, server=server, background=True,
+                           block_trees=32)
+                if prefetch else None
+            )
+            preds, cold, lat, peak = [], [], [], 0
+            for k, (u, x) in enumerate(trace):
+                # demoted-at-plan-time is the cold label (recorded on
+                # every run; the OFF run's labels are the canonical,
+                # mode-independent classification)
+                cold.append(not mgr.is_resident(u))
+                t0 = time.perf_counter()
+                preds.append(server.serve([(u, x)], engine="simple")[0])
+                lat.append((time.perf_counter() - t0) * 1e3)
+                peak = max(peak, mgr.accounted_bytes())
+                if pf is not None and k + 1 < len(trace):
+                    pf.request([trace[k + 1][0]])
+                time.sleep(gap_ms / 1e3)
+            if pf is not None:
+                pf.close()
+            return preds, cold, np.array(lat), peak, mgr.stats()
+
+        run(False)  # warmup: page caches + lazy imports outside timings
+        # best-of-N per mode: this box's 2 shared cores make single-run
+        # tail percentiles scheduler-noise-bound; correctness (bit-exact
+        # predictions, budget, zero silent wrongs) is asserted on EVERY
+        # run, only the latency comparison takes each mode's best run
+        offs = [run(False) for _ in range(repeats)]
+        ons = [run(True) for _ in range(repeats)]
+        silent_wrong = sum(
+            0 if all(np.array_equal(r[0][i], want) for r in offs + ons)
+            else 1
+            for i, want in enumerate(oracle)
+        )
+        peak_off = max(r[3] for r in offs)
+        peak_on = max(r[3] for r in ons)
+        cold_off = offs[0][1]
+        idx = [i for i, c in enumerate(cold_off) if c]
+
+        def best(runs):
+            lats = [r[2][idx] for r in runs]
+            return min(lats, key=lambda a: float(np.percentile(a, 99)))
+
+        lat_off = best(offs)
+        lat_on = best(ons)
+        s_on = ons[0][4]
+
+        def pct(a, q):
+            return round(float(np.percentile(a, q)), 3) if a.size else None
+
+        return {
+            "n_users": n_users,
+            "budget_bytes": budget,
+            "fleet_bytes": fleet_bytes,
+            "n_requests": len(trace),
+            "n_cold_requests": len(idx),
+            "silent_wrong": silent_wrong,
+            "budget_respected": bool(
+                peak_off <= budget and peak_on <= budget
+            ),
+            "prefetch_hits": s_on["prefetch_hits"],
+            "prefetch_hit_rate": round(
+                s_on["prefetch_hits"]
+                / max(s_on["prefetch_requested"], 1), 3,
+            ),
+            "prefetch_errors": s_on["prefetch_errors"],
+            "cold_p50_ms_off": pct(lat_off, 50),
+            "cold_p99_ms_off": pct(lat_off, 99),
+            "cold_p50_ms_on": pct(lat_on, 50),
+            "cold_p99_ms_on": pct(lat_on, 99),
+            "warm_ms_p50_on": s_on["prefetch_load_ms_p50"],
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _assert_smoke(results: dict) -> None:
+    """The CI acceptance gate (ISSUE 10): streaming build reconstructs
+    bit-exactly, the budget is never exceeded while serving a fleet
+    larger than it, zero silent wrongs anywhere, and the prefetcher
+    actually lands hits."""
+    build = results["streaming_build"]
+    assert build["all_bit_exact"], build
+    assert build["n_waves"] > 1, build
+    for run in results["residency_serve"]:
+        assert run["budget_respected"], run
+        assert run["budget_bytes"] < run["fleet_bytes"], run
+        assert run["silent_wrong"] == 0, run
+        assert run["over_budget_events"] == 0, run
+        assert run["demotions"] > 0 and run["reloads"] > 0, run
+    pf = results["prefetch"]
+    assert pf["silent_wrong"] == 0, pf
+    assert pf["budget_respected"], pf
+    assert pf["prefetch_hits"] > 0, pf
+    print("residency smoke ok")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fleets + hard acceptance asserts (CI)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small fleets, no asserts")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.smoke or args.quick:
+        build_users, serve_users, n_requests, rows = 12, 12, 120, 16
+        pf_users, pf_steps, pf_batch = 12, 30, 4
+        fractions = [0.35]
+    else:
+        build_users, serve_users, n_requests, rows = 48, 48, 600, 64
+        pf_users, pf_steps, pf_batch = 48, 120, 4
+        fractions = [0.15, 0.3, 0.6]
+
+    results: dict = {
+        "benchmark": "residency",
+        "quick": bool(args.smoke or args.quick),
+        "streaming_build": bench_streaming_build(
+            build_users, wave_users=max(4, build_users // 4)
+        ),
+        "residency_serve": bench_residency_serve(
+            serve_users, n_requests, rows, fractions
+        ),
+        "prefetch": bench_prefetch(
+            pf_users, pf_steps, pf_batch, rows, budget_fraction=0.3
+        ),
+    }
+    if args.smoke:
+        _assert_smoke(results)
+
+    out_path = pathlib.Path(
+        args.out
+        or pathlib.Path(__file__).resolve().parent.parent
+        / "BENCH_residency.json"
+    )
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(json.dumps(results, indent=2))
+    print(f"\nwrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -53,11 +53,16 @@ class PipelinedExecutor:
         overlap: bool = True,
         max_inflight: int = 2,
         fault_hook=None,
+        prefetcher=None,
     ) -> None:
         self.server = server
         self.clock = clock
         self.safe = bool(safe)
         self.overlap = bool(overlap)
+        # residency prefetcher (store.residency.Prefetcher): the pre-plan
+        # slot hands it batch k+1's users while batch k executes, so
+        # demoted users' shards are read + parsed off the serve path
+        self.prefetcher = prefetcher
         if max_inflight < 1:
             raise ValueError(
                 f"max_inflight must be positive, got {max_inflight}"
@@ -98,6 +103,11 @@ class PipelinedExecutor:
             self._preplan(batch)
             self._work.put(batch)
         else:
+            if self.prefetcher is not None:
+                # no overlap to hide the warm behind, but the prefetch
+                # accounting (and its determinism under VirtualClock)
+                # must match the overlapped path
+                self._prefetch(batch)
             self._run(batch)
 
     def _preplan(self, batch: MicroBatch) -> None:
@@ -114,12 +124,25 @@ class PipelinedExecutor:
         ]
         if not reqs:
             return
+        if self.prefetcher is not None:
+            self._prefetch(batch)
         try:
             self.server.plan(reqs)
             with self._idle:
                 self.n_preplanned += 1
         except Exception:  # noqa: BLE001 — planning faults surface (and
             # are isolated) at execute time; pre-planning is best-effort
+            pass
+
+    def _prefetch(self, batch: MicroBatch) -> None:
+        """Warm the batch's demoted users' shards (best-effort): under
+        overlap this runs in the plan-of-k+1 slot, so the disk read +
+        RFD1 parse overlaps batch k's device work.  The prefetcher
+        filters quarantined users itself (it holds the server)."""
+        try:
+            self.prefetcher.request(r.user_id for r in batch.requests)
+        except Exception:  # noqa: BLE001 — prefetch is advisory; the
+            # serve path surfaces real faults through quarantine
             pass
 
     # ---------------- worker side (device stage) --------------------------

@@ -44,19 +44,21 @@ class Scheduler:
         safe: bool = True,
         overlap: bool | None = None,
         fault_hook=None,
+        prefetcher=None,
     ) -> None:
         self.server = server
         self.clock = clock if clock is not None else WallClock()
         self.queue = queue if queue is not None else RequestQueue()
         self.batcher = batcher if batcher is not None else MicroBatcher()
         self.lifecycle = lifecycle
+        self.prefetcher = prefetcher
         if overlap is None:
             # virtual time has no concurrency to overlap with — run inline
             # so tests are single-threaded deterministic
             overlap = not isinstance(self.clock, VirtualClock)
         self.executor = PipelinedExecutor(
             server, self.clock, safe=safe, overlap=overlap,
-            fault_hook=fault_hook,
+            fault_hook=fault_hook, prefetcher=prefetcher,
         )
         self.completed: list[SchedRequest] = []
 
@@ -123,9 +125,12 @@ class Scheduler:
         self.executor.submit(batch)
 
     def close(self) -> None:
-        """Flush, drain, and stop the executor worker."""
+        """Flush, drain, and stop the executor worker (and the residency
+        prefetcher's, when one is attached)."""
         self.flush()
         self.executor.close()
+        if self.prefetcher is not None:
+            self.prefetcher.close()
 
     # ---------------- observability ---------------------------------------
     def latency_stats(self, slack_s: float = 0.0) -> dict:

@@ -35,6 +35,7 @@ failure counters, and the store's recluster-journal state.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from collections import Counter, deque
 from dataclasses import dataclass
@@ -93,6 +94,7 @@ class SingleForestStore(ForestStore):
         self.cache = TileCache(tile_cache_trees)
         self.version = 0
         self.lossy = None
+        self.residency = None  # no durable tier behind a one-user session
         self.arena = make_schema_arena(
             comp.meta.n_features, comp.meta.n_bins_per_feature,
             arena_capacity_trees,
@@ -311,17 +313,29 @@ class ForestServer:
             interpret = self.interpret
         name = plan.engine.name
         self.engine_counts[name] += 1
-        t0 = time.perf_counter()
-        if name == "simple":
-            total = engines.run_simple(self.store, plan, xb, interpret)
+        residency = getattr(self.store, "residency", None)
+        if residency is not None:
+            # absorb prefetch-staged deltas on THIS (serving) thread —
+            # the prefetcher never mutates serving structures — then
+            # hold the batch's users resident across pack + kernel: a
+            # budget demotion between arena_ensure and gather would
+            # drop a run the gather is about to index
+            residency.absorb_staged()
+            cm = residency.pin(plan.users)
         else:
-            pack = self._gathered_pack(plan)
-            run = (
-                engines.run_pipelined if name == "pipelined"
-                else engines.run_sharded
-            )
-            total = run(self.store, plan, pack, xb, interpret)
-        out = self._finalize(plan, total)
+            cm = contextlib.nullcontext()
+        t0 = time.perf_counter()
+        with cm:
+            if name == "simple":
+                total = engines.run_simple(self.store, plan, xb, interpret)
+            else:
+                pack = self._gathered_pack(plan)
+                run = (
+                    engines.run_pipelined if name == "pipelined"
+                    else engines.run_sharded
+                )
+                total = run(self.store, plan, pack, xb, interpret)
+            out = self._finalize(plan, total)
         self._record_timing(name, time.perf_counter() - t0)
         return out
 
@@ -622,11 +636,14 @@ class ForestServer:
         fallback-cluster fraction — ``None`` for single-forest sessions;
         quarantined users are EXCLUDED from drift accounting, not counted
         as fallback users), the store's lossy report when quantization is
-        on, and the ``health`` section: quarantine set, integrity/retry/
-        degradation counters, and the recluster journal state when a
-        journaled lifecycle operation has run."""
+        on, the ``residency`` section when a residency budget is
+        attached (``store.residency.attach_residency`` — ``None``
+        otherwise), and the ``health`` section: quarantine set,
+        integrity/retry/degradation counters, and the recluster journal
+        state when a journaled lifecycle operation has run."""
         arena = self.store.arena
         journal = getattr(self.store, "journal", None)
+        residency = getattr(self.store, "residency", None)
         return {
             "engine_counts": dict(self.engine_counts),
             "engine_timings": self.engine_timings(),
@@ -637,6 +654,9 @@ class ForestServer:
                 exclude=tuple(sorted(self._quarantined))
             ),
             "lossy": getattr(self.store, "lossy", None),
+            "residency": (
+                residency.stats() if residency is not None else None
+            ),
             "health": {
                 "n_quarantined": len(self._quarantined),
                 "quarantined": {

@@ -31,19 +31,24 @@ from .lifecycle import (
     ReclusterResult,
     RemapTable,
     drift_report,
+    extend_codebook_from_forests,
     migrate_user,
     migrate_users,
     recluster,
     resume_recluster,
 )
+from .residency import Prefetcher, ResidencyManager, attach_residency
 from .runtime import ForestStore, TileCache, build_store
+from .streaming import build_store_streaming
 
 __all__ = [
     "DurableStore",
     "ForestStore",
     "MigrationJournal",
+    "Prefetcher",
     "ReclusterResult",
     "RemapTable",
+    "ResidencyManager",
     "Scrubber",
     "SharedCodebook",
     "SharedComponent",
@@ -53,9 +58,12 @@ __all__ = [
     "UserDelta",
     "atomic_write_bytes",
     "attach_auto_repair",
+    "attach_residency",
     "build_shared_codebook",
     "build_store",
+    "build_store_streaming",
     "drift_report",
+    "extend_codebook_from_forests",
     "encode_user_delta",
     "hydrate",
     "make_drifted_fleet",

@@ -96,7 +96,15 @@ class TileArena:
         self.admissions = 0
         self.evictions = 0
         self.gathers = 0
+        self.compactions = 0
         self.epoch = 0  # bumped on any structural change (see module doc)
+        # LAZY defragmentation (ISSUE 10): eviction/invalidation only
+        # MARKS rows dead (O(1) per victim — gathers are index-based, so
+        # holes are skipped naturally); the O(arena) compaction gather is
+        # deferred until dead rows block an admission or cross this
+        # fraction of capacity.
+        self.dead_trees = 0
+        self.defrag_threshold = 0.25
         # fault-injection hook: when set, called with the cold users'
         # ids at the top of admit_many, BEFORE any state mutates — see
         # runtime.chaos.TransientFaults and ForestServer's retry path
@@ -121,15 +129,24 @@ class TileArena:
     def resident_trees(self) -> int:
         return sum(r.n_trees for r in self._runs.values())
 
+    @property
+    def buffer_trees(self) -> int:
+        """Physical device rows (live runs + not-yet-reclaimed dead rows)
+        — the arena's true device footprint between compactions."""
+        return 0 if self._code is None else int(self._code.shape[0])
+
     def stats(self) -> dict:
         """Occupancy and admission/eviction/gather counters."""
         return {
             "resident_users": len(self._runs),
             "resident_trees": self.resident_trees,
+            "buffer_trees": self.buffer_trees,
+            "dead_trees": self.dead_trees,
             "heap_width": self.h,
             "admissions": self.admissions,
             "evictions": self.evictions,
             "gathers": self.gathers,
+            "compactions": self.compactions,
             "epoch": self.epoch,
         }
 
@@ -143,11 +160,14 @@ class TileArena:
                 self._touch(run)
 
     def invalidate(self, user_id: str) -> None:
-        """Evict one user's resident run (delta replacement), compacting
-        the device buffers."""
-        if user_id in self._runs:
-            del self._runs[user_id]
-            self._compact()
+        """Evict one user's resident run (delta replacement or residency
+        demotion).  O(touched run): the rows are only MARKED dead — the
+        compaction gather is deferred (``_maybe_compact``)."""
+        run = self._runs.pop(user_id, None)
+        if run is not None:
+            self.dead_trees += run.n_trees
+            self.epoch += 1
+            self._maybe_compact()
 
     # ---------------- admission / eviction --------------------------------
     def _touch(self, run: _Run) -> None:
@@ -161,6 +181,8 @@ class TileArena:
         import jax.numpy as jnp
 
         self.epoch += 1
+        self.compactions += 1
+        self.dead_trees = 0
         if not self._runs:
             self._code = self._fit = None
             self.h = 0
@@ -177,9 +199,38 @@ class TileArena:
         self._code = jnp.take(self._code, idx, axis=0)[:, : self.h]
         self._fit = jnp.take(self._fit, idx, axis=0)[:, : self.h]
 
+    def _maybe_compact(self) -> None:
+        """Reclaim dead rows once they cross ``defrag_threshold`` of
+        capacity — bounding the footprint overhead of lazy eviction
+        while amortizing the O(arena) gather over many retirements.
+        Shape overhang compacts IMMEDIATELY: when the victim was the
+        width/depth-determining run, every later batch would pay its
+        padded width forever, so that (rare) case is worth the eager
+        gather."""
+        if not self.dead_trees:
+            return
+        if not self._runs:
+            self._compact()
+            return
+        overhang = (
+            max(run.h for run in self._runs.values()) < self.h
+            or max(run.depth for run in self._runs.values())
+            < self.max_depth
+        )
+        if (
+            overhang
+            or self.dead_trees
+            >= self.defrag_threshold * self.capacity_trees
+        ):
+            self._compact()
+
     def _evict_for(self, need: int, pinned: set[str]) -> None:
         """GreedyDual: evict minimum-priority non-pinned runs until ``need``
-        trees fit (ties broken oldest-access-first), advancing the clock."""
+        trees fit (ties broken oldest-access-first), advancing the clock.
+        Victims' rows are marked dead, not compacted — but if the holes
+        would push the PHYSICAL buffer past capacity after the append,
+        one compaction reclaims them (capacity honesty: the device
+        footprint bound holds at every admission)."""
         victims = []
         resident = self.resident_trees
         while resident + need > self.capacity_trees:
@@ -190,11 +241,15 @@ class TileArena:
             if not candidates:
                 break  # working set itself exceeds capacity: let it grow
             prio, _, user = min(candidates)
-            resident -= self._runs.pop(user).n_trees
+            run = self._runs.pop(user)
+            resident -= run.n_trees
+            self.dead_trees += run.n_trees
             self._gd.evicted(prio)
             victims.append(user)
             self.evictions += 1
         if victims:
+            self.epoch += 1
+        if self.dead_trees and self.buffer_trees + need > self.capacity_trees:
             self._compact()
 
     def _grow_width(self, h_new: int, max_depth: int) -> None:

@@ -297,10 +297,17 @@ class _LazyShard:
 
     def _load(self) -> UserDelta:
         if self._real is None:
+            res = self._durable.residency
+            t0 = res.clock_now() if res is not None else 0.0
             data = self._durable.read_shard(self._shard_id)
             real = UserDelta.from_bytes(data)
             self._real = real
             dict.__setitem__(self._map, self._user, real)
+            if res is not None:
+                # serve-path cold load: account the resident bytes and
+                # let the budget react (residency.ResidencyManager)
+                res.notify_loaded(self._user, len(data),
+                                  res.clock_now() - t0)
         return self._real
 
     def to_bytes(self) -> bytes:
@@ -377,6 +384,9 @@ class DurableStore:
         self.n_commits = 0
         self.n_repairs = 0
         self.n_parity_rebuilds = 0
+        # residency budget manager (store.residency.attach_residency):
+        # the _LazyShard load path reports cold loads through it
+        self.residency = None
 
     # ---------------- lifecycle -------------------------------------------
 

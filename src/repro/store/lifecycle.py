@@ -526,13 +526,34 @@ def extend_codebook(
     the frozen codebook cannot code), with the regression fleet value
     table growing append-only.  The remap is the identity, so clean users
     relabel instead of re-encoding."""
-    old = store.shared
-    d = old.n_features
     fallback_users = [
         u for u in store.user_ids
         if user_fallback_report(store, u)["uses_fallback"]
     ]
     forests = [store.reconstruct(u) for u in fallback_users]
+    return extend_codebook_from_forests(
+        store.shared, forests, k_max=k_max, seed=seed,
+        engine=engine, chunk_size=chunk_size,
+    )
+
+
+def extend_codebook_from_forests(
+    old: SharedCodebook,
+    forests: Sequence,
+    k_max: int = 16,
+    seed: int = 0,
+    engine: str = "chunked",
+    chunk_size: int = 65536,
+) -> tuple[SharedCodebook, RemapTable]:
+    """``extend_codebook`` taking the uncodable forests DIRECTLY — the
+    streaming-build entry point (``store.streaming``): each wave extends
+    the fleet codebook with exactly the wave's uncodable models without a
+    registry holding the whole fleet in memory.  Generation-g clusters
+    are kept verbatim (identity remap), appended clusters are Bregman-fit
+    to the pooled uncodable rows, and the regression fleet value table
+    grows append-only."""
+    d = old.n_features
+    forests = list(forests)
     recs = [extract_records(f) for f in forests]
     t_max = max(
         [old.t_max]

@@ -157,12 +157,20 @@ class TileCache:
             self._resident_trees -= self._tiles.pop(victim)[0].shape[0]
             self.evictions += 1
 
-    def invalidate_user(self, user_id: str) -> None:
-        """Drop every resident tile of one user (delta replacement)."""
+    def invalidate_user(self, user_id: str,
+                        reset_stats: bool = True) -> None:
+        """Drop every resident tile of one user.  ``reset_stats=True``
+        (the delta-REPLACEMENT path, i.e. a ``user_version`` bump) also
+        clears the user's hit/miss history — the new generation's hit
+        rate must not be polluted by the old one's.  Residency DEMOTION
+        passes ``reset_stats=False``: the content is unchanged, so the
+        history stays meaningful across a reload."""
         stale = [k for k in self._tiles if k[0] == user_id]
         for k in stale:
             self._resident_trees -= self._tiles.pop(k)[0].shape[0]
             self._prio.pop(k, None)
+        if reset_stats:
+            self._per_user.pop(user_id, None)
 
     def stats(self) -> dict:
         """Cache occupancy and global + per-user hit/miss counters (the
@@ -221,6 +229,9 @@ class ForestStore:
         # crash-safe recluster journal (set by lifecycle.recluster /
         # resume_recluster); surfaced through ForestServer.stats()["health"]
         self.journal = None
+        # residency budget manager (set by store.residency.attach_residency);
+        # surfaced through ForestServer.stats()["residency"]
+        self.residency = None
         # device-resident fused-tile arena for the pipelined serving path;
         # None when the schema's fused code word would overflow 2**24 (the
         # serving driver then falls back to engine="simple")
@@ -319,6 +330,8 @@ class ForestStore:
         self.cache.invalidate_user(user_id)
         if self.arena is not None:
             self.arena.invalidate(user_id)
+        if self.residency is not None:
+            self.residency.notify_registered(user_id, delta)
 
     def replace_delta_relabeled(self, user_id: str, delta: UserDelta) -> None:
         """Swap in a RELABELED delta — one whose decoded artifact is
@@ -334,6 +347,11 @@ class ForestStore:
         # drop only the cheap hydrated object: it holds a reference to the
         # old generation's fit table; tiles/arena/packs are value-identical
         self._hydrated.pop(user_id, None)
+        if self.residency is not None:
+            # the decoded artifact is identical but the SERIALIZED bytes
+            # are not (new generation's cluster ids): the disk shard no
+            # longer matches, so demotion must write back first
+            self.residency.notify_registered(user_id, delta)
 
     def delta(self, user_id: str) -> UserDelta:
         """The registered ``UserDelta`` for one user."""
@@ -353,6 +371,18 @@ class ForestStore:
         """Resolve one user's delta into an inline ``CompressedForest``
         (cached; codebook resolution only, no entropy decode), against the
         codebook generation the delta references."""
+        res = self.residency
+        if res is None:
+            return self._hydrate_cached(user_id)
+        res.touch(user_id)
+        # pin across load + cache fill: budget enforcement (which can run
+        # inside the lazy load's notify) must not demote the user
+        # mid-hydrate — that would strand a decoded artifact in
+        # ``_hydrated`` the demotion can no longer invalidate
+        with res.pin((user_id,)):
+            return self._hydrate_cached(user_id)
+
+    def _hydrate_cached(self, user_id: str) -> CompressedForest:
         comp = self._hydrated.get(user_id)
         if comp is None:
             delta = self._deltas[user_id]
@@ -378,6 +408,8 @@ class ForestStore:
     def tiles(self, user_id: str, block_trees: int = 32) -> list[Tile]:
         """Decoded heap tiles for one user, LRU-cached by (user, tile) so a
         hot user's repeat requests skip entropy decode entirely."""
+        if self.residency is not None:
+            self.residency.touch(user_id)
         run_key = (user_id, block_trees)
         n = self._tile_counts.get(run_key)
         if n is not None:

@@ -477,3 +477,162 @@ class TestGracefulDegradation:
         _, server, _ = fleet_server
         with pytest.raises(KeyError):
             server.serve_safe([("nobody", np.zeros((1, 5), np.int32))])
+
+
+# ---------------------------------------------------------------------------
+# residency tiers (ISSUE 10): crashes mid-demotion and faults behind prefetch
+# ---------------------------------------------------------------------------
+
+class TestResidencyChaos:
+    def _fleet_on_disk(self, tmp_path, n_users=6):
+        import shutil
+
+        from repro.store import DurableStore
+
+        store0 = build_store(make_synthetic_fleet(
+            n_users=n_users, d=5, n_bins=12, seed=13,
+            n_trees=(3, 5), max_depth=3,
+        ))
+        rng = np.random.default_rng(5)
+        x = rng.integers(0, 12, (6, 5)).astype(np.int32)
+        oracle = {u: store0.predict(u, x) for u in store0.user_ids}
+        base = str(tmp_path / "fleet")
+        DurableStore.create(base, store0, slab_shards=3)
+        snap = str(tmp_path / "snap")
+        shutil.copytree(base, snap)
+        return store0, base, snap, x, oracle
+
+    def test_demote_writeback_crash_at_every_step(self, tmp_path):
+        """Kill the dirty-demotion writeback at EVERY commit step: the
+        fleet must recover bit-exact whichever side of the manifest swap
+        the crash lands on (re-registered model == same artifact, so pre
+        and post states decode identically — a torn state would not)."""
+        import shutil
+
+        from repro.runtime.chaos import record_steps
+        from repro.store import DurableStore, attach_residency
+
+        store0, base, snap, x, oracle = self._fleet_on_disk(tmp_path)
+        victim = store0.user_ids[0]
+        victim_bytes = store0._deltas[victim].to_bytes()
+
+        def op(on_step):
+            durable = DurableStore.open(base)
+            store = durable.load_store(lazy=True)
+            mgr = attach_residency(
+                store, durable, budget_bytes=10**9, on_step=on_step
+            )
+            # user_version bump -> dirty -> demotion must write back
+            store.add_delta(victim, UserDelta.from_bytes(victim_bytes))
+            assert mgr.demote(victim)
+            # reload through the placeholder is bit-exact post-writeback
+            assert np.array_equal(store.predict(victim, x), oracle[victim])
+
+        steps = record_steps(op)
+        assert steps, "writeback produced no commit steps"
+        assert steps[-2:] == ["manifest", "gc"]
+        for i, name in enumerate(steps):
+            shutil.rmtree(base)
+            shutil.copytree(snap, base)
+            with pytest.raises(InjectedCrash):
+                op(CrashSchedule(fail_at=(i,)))
+            recovered = DurableStore.open(base).load_store(lazy=False)
+            assert sorted(recovered.user_ids) == sorted(oracle)
+            for u, want in oracle.items():
+                assert np.array_equal(recovered.predict(u, x), want), (
+                    i, name, u,
+                )
+
+    def test_prefetch_behind_corrupt_shard_never_silent(self, tmp_path):
+        """A corrupt shard behind a prefetch: the warm fails typed (cold
+        user stays cold, error counted), the serve path raises a typed
+        IntegrityError — and after parity repair the SAME placeholder
+        reloads bit-exactly.  At no point does a wrong prediction leak."""
+        from repro.runtime.chaos import DiskFaults
+        from repro.store import DurableStore, Prefetcher, attach_residency
+        from repro.store.durable import _LazyShard
+
+        store0, base, snap, x, oracle = self._fleet_on_disk(tmp_path)
+        victim = store0.user_ids[0]
+        durable = DurableStore.open(base)
+        store = durable.load_store(lazy=True)
+        mgr = attach_residency(store, durable, budget_bytes=10**9)
+        pf = Prefetcher(mgr, background=False)
+        entry = durable.shard_for_user(victim)
+        path, off, length = durable.shard_location(entry.shard_id)
+        DiskFaults().corrupt_region(path, off, min(length, 16))
+
+        pf.request([victim])
+        mgr.absorb_staged()
+        st = mgr.stats()
+        assert st["prefetch_errors"] == 1 and st["prefetch_staged"] == 0
+        assert isinstance(dict.get(store._deltas, victim), _LazyShard)
+        with pytest.raises(IntegrityError):
+            store.predict(victim, x)  # typed, never silent wrong
+        # parity repair rewrites the shard; the untouched placeholder now
+        # warms and serves bit-exactly through the same prefetch path
+        assert durable.read_shard(entry.shard_id, repair=True)
+        assert pf.request([victim]) == 1
+        assert mgr.absorb_staged() == 1
+        assert np.array_equal(store.predict(victim, x), oracle[victim])
+        assert mgr.stats()["prefetch_hits"] == 1
+        pf.close()
+
+    def test_streaming_build_crash_leaves_whole_waves(self, tmp_path):
+        """Kill the streaming build at every commit step of every wave:
+        recovery always yields a UNION OF COMPLETE WAVES (each bit-exact),
+        never a torn wave."""
+        import shutil
+
+        from repro.runtime.chaos import record_steps
+        from repro.store import DurableStore, build_store_streaming
+
+        fleet = make_synthetic_fleet(
+            n_users=6, d=5, n_bins=12, seed=13, n_trees=(3, 5), max_depth=3,
+        )
+        ref = build_store(fleet)
+        rng = np.random.default_rng(5)
+        x = rng.integers(0, 12, (6, 5)).astype(np.int32)
+        oracle = {u: ref.predict(u, x) for u in ref.user_ids}
+        base = str(tmp_path / "stream")
+        waves: list[list[str]] = []
+
+        def op(on_step):
+            if waves:
+                waves.clear()
+            shutil.rmtree(base, ignore_errors=True)
+            seen: set[str] = set()
+
+            def on_wave(info):
+                nonlocal seen
+                # membership reconstructed from the durable store itself
+                now = set(DurableStore.open(base).load_store(lazy=True)
+                          .user_ids)
+                waves.append(sorted(now - seen))
+                seen = now
+
+            build_store_streaming(
+                fleet, base, wave_users=3, k_max=4, seed=0,
+                slab_shards=3, on_wave=on_wave, on_step=on_step,
+            )
+
+        steps = record_steps(op)
+        assert len(waves) == 2 and all(len(w) == 3 for w in waves)
+        prefixes = [set()]
+        for w in waves:
+            prefixes.append(prefixes[-1] | set(w))
+        for i in range(len(steps)):
+            with pytest.raises(InjectedCrash):
+                op(CrashSchedule(fail_at=(i,)))
+            d = DurableStore.open(base)
+            try:
+                recovered = d.load_store(lazy=False)
+                got = set(recovered.user_ids)
+            except IntegrityError:
+                # wave 0 never committed: recovery is the valid EMPTY
+                # epoch-0 store (no codebook yet), typed — not torn
+                assert d.manifest.epoch == 0, (i, steps[i])
+                got = set()
+            assert got in prefixes, (i, steps[i], got)
+            for u in got:
+                assert np.array_equal(recovered.predict(u, x), oracle[u])

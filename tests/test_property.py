@@ -398,3 +398,107 @@ def test_durable_single_fault_repairs_double_fault_typed(data):
             assert silent_wrong == 0
     finally:
         shutil.rmtree(work, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# residency (ISSUE 10): budget invariant + bit-exactness under arbitrary
+# serve / demote / prefetch / re-register interleavings
+# ---------------------------------------------------------------------------
+
+_RESIDENCY_TEMPLATE: dict = {}
+
+
+def _residency_template():
+    """One streaming-built durable fleet on disk plus a per-user oracle
+    (predictions + serialized delta bytes), built once; every example
+    copies the directory fresh."""
+    import tempfile
+
+    from repro.store import DurableStore, build_store_streaming
+    from repro.store.fleet import make_synthetic_fleet
+
+    fleet = make_synthetic_fleet(
+        n_users=8, d=5, n_bins=12, seed=31, n_trees=(3, 5), max_depth=3,
+    )
+    root = tempfile.mkdtemp(prefix="residency_prop_")
+    path = f"{root}/fleet"
+    durable = build_store_streaming(
+        fleet, path, wave_users=3, k_max=4, seed=0, slab_shards=8,
+    )
+    ref = durable.load_store(lazy=False)
+    users = sorted(ref.user_ids)
+    rng = np.random.default_rng(7)
+    x = rng.integers(
+        0, int(ref.shared.n_bins_per_feature[0]),
+        (6, ref.shared.n_features),
+    ).astype(np.int32)
+    oracle = {u: ref.predict(u, x) for u in users}
+    delta_bytes = {u: ref._deltas[u].to_bytes() for u in users}
+    sizes = {u: len(b) for u, b in delta_bytes.items()}
+    return {"path": path, "users": users, "x": x, "oracle": oracle,
+            "delta_bytes": delta_bytes, "sizes": sizes}
+
+
+@given(st.data())
+@settings(max_examples=10, deadline=None)
+def test_residency_interleavings_bit_exact_within_budget(data):
+    import shutil
+    import tempfile
+
+    from repro.store import DurableStore, Prefetcher, attach_residency
+    from repro.store.delta import UserDelta
+
+    if not _RESIDENCY_TEMPLATE:
+        _RESIDENCY_TEMPLATE.update(_residency_template())
+    tpl = _RESIDENCY_TEMPLATE
+    users, x, oracle = tpl["users"], tpl["x"], tpl["oracle"]
+    total = sum(tpl["sizes"].values())
+    work = tempfile.mkdtemp(prefix="residency_case_")
+    try:
+        base = f"{work}/fleet"
+        shutil.copytree(tpl["path"], base)
+        durable = DurableStore.open(base)
+        store = durable.load_store(lazy=True)
+        budget = data.draw(
+            st.integers(min(tpl["sizes"].values()), total), label="budget"
+        )
+        mgr = attach_residency(store, durable, budget_bytes=budget)
+        pf = Prefetcher(mgr, background=False)  # deterministic inline warm
+        ops = data.draw(
+            st.lists(
+                st.tuples(
+                    st.sampled_from(
+                        ["serve", "demote", "prefetch", "reregister"]
+                    ),
+                    st.sampled_from(users),
+                ),
+                min_size=1, max_size=30,
+            ),
+            label="ops",
+        )
+        for op, u in ops:
+            if op == "serve":
+                assert np.array_equal(store.predict(u, x), oracle[u]), u
+            elif op == "demote":
+                mgr.demote(u)  # may refuse (placeholder/dirty) — fine
+            elif op == "prefetch":
+                pf.request([u])
+                mgr.absorb_staged()  # serve-thread absorption point
+            else:  # re-register the SAME model (user_version bump):
+                # marks the user dirty, so a later demote must write back
+                store.add_delta(
+                    u, UserDelta.from_bytes(tpl["delta_bytes"][u])
+                )
+            # THE invariant: outside a pinned serve, accounted resident
+            # bytes never exceed the budget, whatever the interleaving
+            assert mgr.accounted_bytes() <= budget, (op, u)
+        # every user still serves bit-exactly afterwards
+        for u in users:
+            assert np.array_equal(store.predict(u, x), oracle[u]), u
+            assert mgr.accounted_bytes() <= budget
+        st_ = mgr.stats()
+        assert st_["resident_bytes"] <= budget
+        assert st_["over_budget_events"] == 0
+        pf.close()
+    finally:
+        shutil.rmtree(work, ignore_errors=True)

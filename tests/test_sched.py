@@ -462,3 +462,151 @@ class TestDriftReportCache:
                 after["per_user"][u]["codebook_generation"]
                 == store.generation
             )
+
+
+# ---------------------------------------------------------------------------
+# residency prefetch through the scheduler (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+class TestResidencyPrefetch:
+    def _durable_fleet(self, tmp_path, n_users=8):
+        from repro.store import DurableStore
+
+        forests = make_synthetic_fleet(
+            n_users, "classification", n_trees=(4, 8), max_depth=4, seed=2
+        )
+        store0 = build_store(forests)
+        base = str(tmp_path / "fleet")
+        DurableStore.create(base, store0)
+        return store0, base
+
+    def _serving(self, base, budget, prefetch, clock):
+        from repro.store import DurableStore, Prefetcher, attach_residency
+
+        durable = DurableStore.open(base)
+        store = durable.load_store(lazy=True)
+        mgr = attach_residency(store, durable, budget_bytes=budget)
+        server = ForestServer(store)
+        pf = (
+            Prefetcher(mgr, server=server, background=False)
+            if prefetch else None
+        )
+        return Scheduler(server, clock, prefetcher=pf), mgr, store, server
+
+    def test_prefetch_bit_identical_to_inline_and_hits(self, tmp_path):
+        """Same trace, prefetch on vs off, both under VirtualClock: every
+        response bit-identical, the budget held in both runs, and the
+        prefetcher measurably warmed demoted users (hits > 0)."""
+        store0, base = self._durable_fleet(tmp_path)
+        sizes = {
+            u: len(store0._deltas[u].to_bytes()) for u in store0.user_ids
+        }
+        budget = 3 * max(sizes.values())  # < fleet: demotions guaranteed
+        assert budget < sum(sizes.values())
+
+        def run(prefetch):
+            clock = VirtualClock()
+            sched, mgr, _, _ = self._serving(base, budget, prefetch, clock)
+            rng = np.random.default_rng(4)
+            users = sorted(store0.user_ids)
+            tickets = []
+            for _ in range(15):
+                for _ in range(int(rng.integers(1, 4))):
+                    u = users[int(rng.integers(len(users)))]
+                    tickets.append(sched.submit(u, make_rows(rng, store0, 4)))
+                clock.advance(0.3)
+                sched.pump()
+            sched.close()
+            return tickets, mgr.stats()
+
+        t_off, s_off = run(False)
+        t_on, s_on = run(True)
+        assert len(t_off) == len(t_on)
+        for a, b in zip(t_off, t_on):
+            assert a.status == b.status == "ok"
+            assert np.array_equal(a.prediction, b.prediction)
+        assert s_off["prefetch_requested"] == 0
+        assert s_on["prefetch_hits"] > 0
+        assert s_on["resident_bytes"] <= budget
+        assert s_off["resident_bytes"] <= budget
+        assert s_on["over_budget_events"] == 0
+
+    def test_quarantined_user_never_prefetched(self, tmp_path):
+        """A corrupt cold user quarantines through serve_safe (typed,
+        never silent); once quarantined, later submissions must NOT
+        prefetch them — the warm would just re-read poison."""
+        from repro.runtime.chaos import DiskFaults
+        from repro.store.durable import _LazyShard
+
+        store0, base = self._durable_fleet(tmp_path)
+        victim, healthy = sorted(store0.user_ids)[:2]
+        clock = VirtualClock()
+        sched, mgr, store, server = self._serving(
+            base, 10**9, prefetch=True, clock=clock
+        )
+        durable = store._deltas._durable
+        entry = durable.shard_for_user(victim)
+        path, off, length = durable.shard_location(entry.shard_id)
+        DiskFaults().corrupt_region(path, off, min(length, 16))
+        rng = np.random.default_rng(9)
+        t_bad = sched.submit(victim, make_rows(rng, store0, 4))
+        t_ok = sched.submit(healthy, make_rows(rng, store0, 4))
+        sched.flush()
+        assert t_bad.status == "quarantined" and t_bad.prediction is None
+        assert t_ok.status == "ok"
+        assert victim in server.quarantined_users
+        st = mgr.stats()
+        assert st["prefetch_errors"] == 1  # the pre-quarantine warm
+        requested = st["prefetch_requested"]
+        t_again = sched.submit(victim, make_rows(rng, store0, 4))
+        sched.flush()
+        assert t_again.status == "quarantined"
+        assert mgr.stats()["prefetch_requested"] == requested  # filtered
+        assert isinstance(dict.get(store._deltas, victim), _LazyShard)
+        sched.close()
+
+    def test_lifecycle_migrates_demoted_user_round_trip(self, tmp_path):
+        """LifecycleDriver recluster + migration across a DEMOTED user:
+        migration lazily reloads them, the relabeled delta is dirty, so
+        the next demotion writes back — and every state transition keeps
+        predictions bit-exact."""
+        from repro.store import DurableStore, attach_residency
+
+        initial, late = make_drifted_fleet(
+            10, late_fraction=0.3, task="classification",
+            n_trees=(4, 8), max_depth=4, seed=0,
+        )
+        store0 = build_store(initial)
+        for u, f in late.items():
+            store0.add_user(u, f)
+        rng = np.random.default_rng(1)
+        x = make_rows(rng, store0, 8)
+        oracle = {u: store0.predict(u, x) for u in store0.user_ids}
+        base = str(tmp_path / "fleet")
+        DurableStore.create(base, store0)
+        durable = DurableStore.open(base)
+        store = durable.load_store(lazy=True)
+        mgr = attach_residency(store, durable, budget_bytes=10**9)
+        server = ForestServer(store)
+        clock = VirtualClock()
+        driver = LifecycleDriver(
+            server, clock, poll_interval_s=0.1, low_load_rows=64,
+            migrate_users_per_s=1e9, max_users_per_tick=1000,
+        )
+        victim = sorted(initial)[0]
+        store.predict(victim, x)          # resident...
+        assert mgr.demote(victim)         # ...then demoted (clean)
+        assert drift_report(store)["recommend_recluster"]
+        driver.tick(0.0, pending_rows=0)
+        while driver.state == "migrating":
+            clock.advance(1.0)
+            driver.tick(clock.now(), pending_rows=0)
+        assert driver.n_reclusters == 1
+        for u, want in oracle.items():
+            assert np.array_equal(store.predict(u, x), want), u
+        # migration relabeled the victim: serialized bytes changed, so
+        # demotion now requires a writeback before the placeholder swap
+        assert mgr.demote(victim)
+        st = mgr.stats()
+        assert st["writebacks"] >= 1
+        assert np.array_equal(store.predict(victim, x), oracle[victim])

@@ -348,8 +348,10 @@ class TestStatsAndPack:
         stats = server.stats()
         assert set(stats) == {
             "engine_counts", "engine_timings", "plan_cache", "tile_cache",
-            "arena", "store", "lossy", "health",
+            "arena", "store", "lossy", "residency", "health",
         }
+        # ISSUE 10: no residency manager attached -> explicit None
+        assert stats["residency"] is None
         assert sum(stats["engine_counts"].values()) == 2
         for name, t in stats["engine_timings"].items():
             assert name in stats["engine_counts"]
@@ -367,6 +369,30 @@ class TestStatsAndPack:
         assert health["integrity_failures"] == 0
         assert health["degraded_batches"] == 0
         assert health["journal"] is None
+
+    def test_tile_cache_per_user_counters_reset_on_reregistration(self, rng):
+        # ISSUE 10 bugfix: a user's hit/miss counters describe ONE
+        # registered model; re-registration (user_version bump) must
+        # reset them or the stale ratio poisons admission decisions.
+        store = build_store(small_fleet(n_users=3))
+        server = ForestServer(store)
+        user = store.user_ids[0]
+        reqs = fleet_requests(store, rng, 3)
+        reqs = [(user, reqs[0][1])] + reqs
+        server.serve(reqs)
+        server.serve(reqs)
+        before = store.cache.stats()["per_user"][user]
+        assert before["hits"] + before["misses"] > 0
+        store.add_delta(user, store._deltas[user])  # re-register
+        per_user = store.cache.stats()["per_user"]
+        assert user not in per_user  # counters reset with the tiles
+        # demotion-style invalidation (reset_stats=False) keeps them:
+        # same model will reload bit-exactly, the ratio stays meaningful
+        server.serve(reqs)
+        assert store.cache.stats()["per_user"][user]["misses"] > 0
+        kept = store.cache.stats()["per_user"][user]
+        store.cache.invalidate_user(user, reset_stats=False)
+        assert store.cache.stats()["per_user"][user] == kept
 
     def test_canonical_pad_helper(self):
         from repro.launch.serve_store import _pad_heap_width
